@@ -1,0 +1,24 @@
+"""Shared benchmark plumbing: CSV rows + timing."""
+from __future__ import annotations
+
+import os
+import time
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def scale() -> float:
+    """BENCH_SCALE=1.0 gives the default (CI-sized) runs; crank it up to
+    approach the paper's full 1e7-element streams."""
+    return float(os.environ.get("BENCH_SCALE", "1.0"))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

@@ -1,0 +1,43 @@
+"""Beyond-paper: FD gradient compression — communication vs gradient quality.
+
+Single-host (m=1 psum) evaluation of the compressor math: bytes moved vs a
+dense all-reduce and cosine similarity of the decompressed gradient, across
+ranks.  The multi-device training-convergence check lives in
+tests/test_train.py (subprocess, 8 devices).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.fd import fd_init, fd_matrix, fd_update_stream
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    d_in, d_out = 1024, 1024
+    # gradient with decaying spectrum (what error feedback assumes)
+    u = rng.normal(size=(d_in, 32)) * (np.arange(32, 0, -1) ** 1.5)
+    g = (u @ rng.normal(size=(32, d_out))).astype(np.float32)
+    g /= np.linalg.norm(g)
+
+    for rank, l in [(4, 8), (8, 16), (16, 32), (32, 64)]:
+        def compress():
+            st = fd_update_stream(fd_init(l, d_out), jnp.asarray(g))
+            b = np.asarray(fd_matrix(st))
+            norms = np.linalg.norm(b, axis=1, keepdims=True)
+            v = (b / np.maximum(norms, 1e-12))[:rank]
+            p = g @ v.T
+            return p @ v
+
+        ghat, us = timed(compress)
+        cos = float(np.sum(g * ghat) / (np.linalg.norm(g) * np.linalg.norm(ghat) + 1e-12))
+        full = 4 * d_in * d_out
+        comp = 4 * (l * d_out + d_in * rank)
+        emit(
+            f"gradcomp/rank={rank}",
+            us,
+            f"cos={cos:.4f};bytes_full={full};bytes_comp={comp};ratio={full/comp:.1f}",
+        )

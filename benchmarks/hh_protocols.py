@@ -1,0 +1,65 @@
+"""Paper Figure 1 (a)-(f): weighted heavy hitters on a Zipfian stream.
+
+Reports recall / precision / relative err of true HHs / messages for
+P1-P4 across eps, m, and beta — the paper's exact measurement grid
+(reduced stream by default; BENCH_SCALE=10 reproduces 1e7+ elements).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, scale, timed
+from repro.core.hh import exact_heavy_hitters
+from repro.core.protocols import run_hh_protocol
+from repro.data.synthetic import site_assignment, zipfian_stream
+
+PROTOS = ["P1", "P2", "P3", "P3wr", "P4"]
+PHI = 0.05
+
+
+def _metrics(res, hh, totals, W):
+    errs = [abs(totals[e] - res.estimates.get(e, 0.0)) / W for e in hh] or [0.0]
+    returned = set(res.heavy_hitters(PHI))
+    tp = len(returned & set(hh))
+    recall = tp / max(len(hh), 1)
+    precision = tp / max(len(returned), 1)
+    return recall, precision, float(np.mean(errs))
+
+
+def run() -> None:
+    n = int(1_000_000 * scale())
+    m, beta = 50, 1000.0
+    keys, w = zipfian_stream(n, beta=beta, universe=50_000, seed=11)
+    sites = site_assignment(n, m, seed=11)
+    hh, totals, W = exact_heavy_hitters(keys, w, PHI)
+
+    # Fig 1(a-d): sweep eps at m=50
+    for eps in [5e-3, 1e-2, 5e-2]:
+        for proto in PROTOS:
+            kw = {}
+            if proto == "P3wr":
+                # s independent samplers x N items is O(N*s); cap the
+                # sampler count for wall-time (the paper's point — P3wr is
+                # dominated by P3wor — survives the cap).
+                kw["s"] = min(2048, max(8, int(1 / eps**2)))
+            res, us = timed(run_hh_protocol, proto, keys, w, sites, m, eps, seed=1, **kw)
+            rec, prec, err = _metrics(res, hh, totals, W)
+            emit(
+                f"hh/fig1/{proto}/eps={eps:g}",
+                us,
+                f"recall={rec:.3f};precision={prec:.3f};err={err:.2e};msg={res.comm.total(m)}",
+            )
+
+    # Fig 1(e-f): sweep m and beta at eps=1e-2
+    eps = 1e-2
+    for m_i in [10, 50, 100]:
+        sites_i = site_assignment(n, m_i, seed=12)
+        for proto in ["P2", "P3", "P4"]:
+            res, us = timed(run_hh_protocol, proto, keys, w, sites_i, m_i, eps, seed=2)
+            emit(f"hh/fig1e/{proto}/m={m_i}", us, f"msg={res.comm.total(m_i)}")
+    for beta_i in [10.0, 1000.0, 100000.0]:
+        keys_b, w_b = zipfian_stream(n, beta=beta_i, universe=50_000, seed=13)
+        sites_b = site_assignment(n, m, seed=13)
+        for proto in ["P2", "P3"]:
+            res, us = timed(run_hh_protocol, proto, keys_b, w_b, sites_b, m, eps, seed=3)
+            emit(f"hh/fig1f/{proto}/beta={beta_i:g}", us, f"msg={res.comm.total(m)}")

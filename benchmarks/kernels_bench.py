@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (per-element
+python semantics), so wall-times are NOT TPU-representative; the meaningful
+derived numbers are the oracle (XLA-compiled) timings and the kernels'
+arithmetic intensities, which we also report for the roofline narrative.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels.ref import ref_attention, ref_fd_gram, ref_fd_project
+
+
+def _bench(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    for l, d in [(64, 1024), (128, 4096), (256, 4096)]:
+        b = jnp.asarray(rng.normal(size=(l, d)), jnp.float32)
+        f = jax.jit(ref_fd_gram)
+        us = _bench(f, b)
+        flops = 2 * l * l * d
+        ai = flops / (4 * (l * d + l * l))  # arithmetic intensity (f32)
+        emit(f"kernels/fd_gram/L={l},d={d}", us, f"flops={flops:.2e};AI={ai:.1f}")
+        w = jnp.asarray(rng.uniform(size=(l,)), jnp.float32)
+        u = jnp.asarray(rng.normal(size=(l, l)), jnp.float32)
+        fp = jax.jit(ref_fd_project)
+        us = _bench(fp, w, u, b)
+        emit(f"kernels/fd_project/L={l},d={d}", us, f"flops={2*l*l*d:.2e}")
+
+    for b_, h, s, dh in [(1, 8, 1024, 128), (1, 8, 4096, 128)]:
+        q = jnp.asarray(rng.normal(size=(b_, h, s, dh)), jnp.bfloat16)
+        k = jnp.asarray(rng.normal(size=(b_, h, s, dh)), jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(b_, h, s, dh)), jnp.bfloat16)
+        f = jax.jit(lambda q, k, v: ref_attention(q, k, v, causal=True))
+        us = _bench(f, q, k, v)
+        flops = 4 * b_ * h * s * s * dh
+        emit(f"kernels/attention_ref/s={s}", us, f"flops={flops:.2e}")

@@ -1,0 +1,33 @@
+"""Paper Figures 6/7 (Appendix C): the matrix-P4 negative result.
+
+P4's fixed-basis probabilistic updates must show err far above eps and far
+above P2/P3 at comparable (or even larger) message budgets — on both the
+low-rank (PAMAP-like) and high-rank (MSD-like) streams, for both the
+'fixed' (Algorithm C.1 verbatim) and 'resvd' (charitable) variants.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, scale, timed
+from repro.core.protocols import run_matrix_protocol
+from repro.data.synthetic import msd_like, pamap_like, site_assignment
+
+
+def run() -> None:
+    n = int(60_000 * scale())
+    m = 50
+    for ds, gen in [("pamap", pamap_like), ("msd", msd_like)]:
+        a = gen(n, seed=41)
+        sites = site_assignment(n, m, seed=41)
+        ata = a.T @ a
+        frob = float(np.sum(a * a))
+        for eps in [0.05, 0.1, 0.5]:
+            for proto, kw in [("P2", {}), ("P3", {}), ("P4", {"variant": "fixed"}), ("P4", {"variant": "resvd"})]:
+                res, us = timed(run_matrix_protocol, proto, a, sites, m, eps, seed=1, **kw)
+                tag = proto + (f"-{kw['variant']}" if kw else "")
+                emit(
+                    f"matrix/fig67/{ds}/{tag}/eps={eps:g}",
+                    us,
+                    f"err={res.covariance_error(ata, frob):.3e};msg={res.comm.total(m)}",
+                )

@@ -1,0 +1,39 @@
+"""Deliverable (g): render the roofline table from dry-run JSON records.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun --all --out)
+and emits one CSV row per (arch x shape x mesh) with the three roofline
+terms, the dominant bottleneck, and MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def run() -> None:
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        emit("roofline/none", 0.0, f"no dry-run records in {DRYRUN_DIR}; run repro.launch.dryrun --all first")
+        return
+    for fn in files:
+        with open(fn) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok" or rec.get("tag"):
+            continue
+        r = rec["roofline"]
+        emit(
+            f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+            r["compute_s"] * 1e6,  # us_per_call = roofline compute term
+            (
+                f"compute_s={r['compute_s']:.4e};memory_s={r['memory_s']:.4e};"
+                f"collective_s={r['collective_s']:.4e};dominant={r['dominant']};"
+                f"useful_flops_ratio={r['useful_flops_ratio']:.3f};"
+                f"mfu_at_roofline={r['mfu_at_roofline']:.4f};"
+                f"mem_gib={rec['memory']['total_bytes_per_device']/2**30:.2f}"
+            ),
+        )

@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  BENCH_SCALE env var scales
+stream sizes toward the paper's full 1e7-element runs (default 1.0 keeps
+the whole suite to a few minutes on one CPU core).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        grad_compression,
+        hh_protocols,
+        kernels_bench,
+        matrix_protocols,
+        p4_negative,
+        roofline_table,
+        tradeoff,
+    )
+
+    print("name,us_per_call,derived")
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for mod in (
+        hh_protocols,
+        matrix_protocols,
+        tradeoff,
+        p4_negative,
+        grad_compression,
+        kernels_bench,
+        roofline_table,
+    ):
+        name = mod.__name__.split(".")[-1]
+        if only and only not in name:
+            continue
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

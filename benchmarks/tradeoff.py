@@ -1,0 +1,32 @@
+"""Paper Figure 4: msg-vs-err tradeoff — tune eps per protocol, report the
+frontier.  P1 should win the low-err/high-msg regime; P2/P3 the low-msg one.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, scale, timed
+from repro.core.protocols import run_matrix_protocol
+from repro.data.synthetic import pamap_like, site_assignment
+
+
+def run() -> None:
+    n = int(100_000 * scale())
+    m = 50
+    a = pamap_like(n, seed=31)
+    sites = site_assignment(n, m, seed=31)
+    ata = a.T @ a
+    frob = float(np.sum(a * a))
+    grid = {
+        "P1": [0.5, 0.2, 0.1],
+        "P2": [0.5, 0.1, 0.02],
+        "P3": [0.5, 0.1, 0.02],
+    }
+    for proto, epss in grid.items():
+        for eps in epss:
+            res, us = timed(run_matrix_protocol, proto, a, sites, m, eps, seed=1)
+            emit(
+                f"matrix/fig4/{proto}/eps={eps:g}",
+                us,
+                f"err={res.covariance_error(ata, frob):.3e};msg={res.comm.total(m)}",
+            )

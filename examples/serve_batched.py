@@ -1,0 +1,36 @@
+"""Batched serving demo: prefill a batch of prompts, decode with the KV
+cache (ring-buffer caches for SWA layers), verify greedy consistency.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, reduced_config
+from repro.models.transformer import LM
+from repro.serve import ServeConfig, ServeEngine
+
+cfg = reduced_config(get_config("mixtral-8x7b"))  # reduced MoE with SWA
+lm = LM(cfg)
+params = lm.init(jax.random.key(0))
+engine = ServeEngine(lm, params, ServeConfig(max_len=128))
+
+rng = np.random.default_rng(0)
+prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(4, 24)), jnp.int32)
+t0 = time.time()
+out = engine.generate(prompts, 16)
+dt = time.time() - t0
+print(f"arch: {cfg.name} (reduced; {cfg.n_experts} experts top-{cfg.experts_per_token}, window={cfg.window})")
+print(f"generated {out.shape[0]}x16 tokens in {dt:.2f}s  ({out.shape[0]*16/dt:.1f} tok/s batched)")
+print("continuations:")
+for row in np.asarray(out[:, 24:]):
+    print("  ", row.tolist())
+
+# consistency: teacher-forcing the generated tokens reproduces them greedily
+logits, _ = lm.forward(params, out[:, :-1])
+greedy = np.asarray(jnp.argmax(logits[:, 23:], -1))
+match = (greedy == np.asarray(out[:, 24:])).mean()
+print(f"greedy consistency vs full forward: {match:.1%}")

@@ -1,0 +1,50 @@
+"""End-to-end training driver with the paper's protocol as gradient
+compression: each data-parallel shard FD-sketches its gradients; sketches are
+merged (paper P1 merge) into a shared low-rank basis; only projections are
+all-reduced.  Compares loss curves + communication vs dense all-reduce.
+
+    PYTHONPATH=src python examples/train_fd_compressed.py [--steps 60]
+(single CPU: the DP mesh is simulated with XLA_FLAGS device_count)
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import TokenStream
+from repro.models.config import ModelConfig
+from repro.models.transformer import LM
+from repro.optim import FDCompressConfig
+from repro.train import TrainConfig, init_train_state, make_compressed_train_step, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=60)
+args = ap.parse_args()
+
+cfg = ModelConfig(name="demo", family="dense", n_layers=4, d_model=128, n_heads=4,
+                  n_kv_heads=2, d_ff=256, vocab_size=512, dtype="float32", remat="none")
+lm = LM(cfg)
+ds = TokenStream(global_batch=16, seq_len=128, vocab=512, seed=0)
+mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+
+for mode in ["dense", "fd-compressed"]:
+    tcfg = TrainConfig(peak_lr=5e-3, warmup_steps=5, total_steps=args.steps,
+                       grad_compression=FDCompressConfig(rank=8, sketch_rows=16) if mode != "dense" else None)
+    state = init_train_state(lm, jax.random.key(0), tcfg)
+    step = (make_compressed_train_step(lm, tcfg, mesh) if mode != "dense"
+            else jax.jit(make_train_step(lm, tcfg)))
+    losses = []
+    for i in range(args.steps):
+        state, m = step(state, {"tokens": jnp.asarray(ds.batch_at(i)["tokens"])})
+        losses.append(float(m["loss"]))
+    msg = f"{mode:>14}: loss {losses[0]:.3f} -> {losses[-1]:.3f}"
+    if mode != "dense":
+        ratio = float(m["comm_full_bytes"]) / float(m["comm_compressed_bytes"])
+        msg += f"   DP gradient comm saved: {ratio:.1f}x"
+    print(msg)

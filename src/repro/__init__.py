@@ -1,0 +1,9 @@
+"""repro: Continuous Matrix Approximation on Distributed Data, at pod scale.
+
+Core entry points:
+    repro.core        — the paper's protocols (FD, HH, distributed tracking)
+    repro.models      — 10-arch decoder zoo (``--arch``)
+    repro.launch      — mesh / dryrun / train / serve drivers
+    repro.kernels     — Pallas TPU kernels + oracles
+"""
+__version__ = "1.0.0"

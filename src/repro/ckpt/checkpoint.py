@@ -1,0 +1,172 @@
+"""Fault-tolerant checkpointing: atomic, hashed, reshardable, async.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        manifest.json    — tree structure, shapes, dtypes, sha256 per leaf
+        <leaf-path>.npy.zst
+
+Guarantees:
+  * atomic: written to ``.tmp-step_000123`` then os.rename'd — a crash never
+    leaves a half-readable checkpoint; ``latest_step`` only sees renamed dirs.
+  * integrity: per-leaf sha256 verified on restore (corrupt shards are
+    reported by path, the unit of repair on a real fleet).
+  * elastic: ``restore`` takes target shardings — a checkpoint written on a
+    16x16 mesh restores onto 2x16x16 (or 1 CPU) by device_put-ing each leaf
+    with the *new* sharding; nothing in the format is mesh-dependent.
+  * async: ``AsyncCheckpointer`` snapshots to host memory synchronously
+    (cheap) and writes in a background thread, keeping the train loop hot.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import re
+import threading
+
+import jax
+import numpy as np
+import zstandard
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+
+_MANIFEST = "manifest.json"
+
+
+def _leaf_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = []
+    for path, leaf in flat:
+        parts = []
+        for k in path:
+            key = getattr(k, "key", getattr(k, "idx", getattr(k, "name", None)))
+            parts.append(str(key))
+        paths.append(("__".join(parts) or "root", leaf))
+    return paths, treedef
+
+
+def save(directory: str, step: int, tree, *, extra: dict | None = None) -> str:
+    """Write checkpoint atomically; returns the final path."""
+    final = os.path.join(directory, f"step_{step:09d}")
+    tmp = os.path.join(directory, f".tmp-step_{step:09d}")
+    os.makedirs(tmp, exist_ok=True)
+    cctx = zstandard.ZstdCompressor(level=3)
+    leaves, treedef = _leaf_paths(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "extra": extra or {},
+        "leaves": {},
+    }
+    for name, leaf in leaves:
+        arr = np.asarray(leaf)
+        buf = io.BytesIO()
+        np.save(buf, arr, allow_pickle=False)
+        raw = buf.getvalue()
+        comp = cctx.compress(raw)
+        digest = hashlib.sha256(raw).hexdigest()
+        fn = f"{name}.npy.zst"
+        with open(os.path.join(tmp, fn), "wb") as f:
+            f.write(comp)
+        manifest["leaves"][name] = {
+            "file": fn,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "sha256": digest,
+        }
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        import shutil
+
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for d in os.listdir(directory)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+    ]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, template, *, shardings=None):
+    """Restore into ``template``'s structure.  ``shardings``: optional pytree
+    of Shardings (same structure) — this is the elastic-resharding hook."""
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    dctx = zstandard.ZstdDecompressor()
+    leaves, treedef = _leaf_paths(template)
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves = [s for _, s in _leaf_paths(shardings)[0]]
+    out = []
+    for i, (name, leaf) in enumerate(leaves):
+        meta = manifest["leaves"].get(name)
+        if meta is None:
+            raise KeyError(f"checkpoint {path} missing leaf {name}")
+        with open(os.path.join(path, meta["file"]), "rb") as f:
+            raw = dctx.decompress(f.read())
+        if hashlib.sha256(raw).hexdigest() != meta["sha256"]:
+            raise IOError(f"checkpoint corruption in leaf {name} ({path})")
+        arr = np.load(io.BytesIO(raw), allow_pickle=False)
+        if list(arr.shape) != list(np.shape(leaf)):
+            raise ValueError(
+                f"leaf {name}: checkpoint shape {arr.shape} != template {np.shape(leaf)}"
+            )
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host synchronously, write in the background."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    def save(self, step: int, tree, *, extra: dict | None = None):
+        self.wait()  # one outstanding write at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save(self.directory, step, host_tree, extra=extra)
+                self._gc()
+            except Exception as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1))
+            for d in os.listdir(self.directory)
+            if (m := re.fullmatch(r"step_(\d+)", d))
+        )
+        import shutil
+
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"), ignore_errors=True)

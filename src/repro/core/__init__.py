@@ -1,0 +1,31 @@
+"""Core: the paper's contribution — continuous distributed matrix tracking.
+
+Layers:
+  * fd.py          — Frequent Directions sketch (JAX + numpy oracle)
+  * hh.py          — weighted Misra--Gries / SpaceSaving
+  * sampling.py    — priority sampling (Duffield--Lund--Thorup)
+  * protocols.py   — event-driven engine: HH P1-P4, matrix P1-P4 (paper-exact)
+  * distributed.py — TPU shard_map super-step engine: matrix P1/P2/P3
+  * tracker.py     — continuous tracking facade for training integration
+"""
+from repro.core.fd import (
+    FDSketch,
+    FDState,
+    fd_init,
+    fd_matrix,
+    fd_merge,
+    fd_query,
+    fd_shrink,
+    fd_update,
+    fd_update_stream,
+)
+from repro.core.hh import MGSketch, MGState, SpaceSaving, mg_init, mg_merge, mg_update
+from repro.core.protocols import (
+    CommLog,
+    HHResult,
+    MatrixResult,
+    run_hh_protocol,
+    run_matrix_protocol,
+)
+from repro.core.distributed import ProtocolConfig, make_protocol_runner
+from repro.core.tracker import DistributedMatrixTracker

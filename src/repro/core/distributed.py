@@ -1,0 +1,392 @@
+"""TPU-native distributed matrix tracking: shard_map super-step protocols.
+
+The paper's transport is an event-driven network (any site may message the
+coordinator at any time).  TPU pods speak synchronous SPMD collectives, so
+the production engine processes site streams in *super-steps*: every shard
+(= site) absorbs a batch of its local rows, evaluates the paper's send
+predicates, and a masked ``all_gather``/``psum`` plays the role of the
+site->coordinator channel.  The coordinator state is updated redundantly on
+every shard (it is a deterministic function of replicated inputs), matching
+the paper's remark that the coordinator "may be one of the sites".
+
+Message accounting is at *protocol* level (exactly the messages the
+event-driven protocol would send — masked-out lanes count zero), so the
+paper's communication bounds remain the yardstick; the cost of the physical
+collectives shows up separately in the roofline's collective term.
+
+Super-step skew: delaying a send to the super-step boundary lets a site
+overshoot its threshold by at most the batch mass ``batch * beta``; choosing
+``batch * beta << (eps/2m) * F_hat`` keeps the end-to-end guarantee intact
+(tested in tests/test_distributed.py).
+
+All three matrix protocols are provided with fixed-shape jit-able states:
+
+    * ``P1`` — per-site FD, ship-the-sketch on threshold, FD-merge at C.
+    * ``P2`` — the paper's best: per-direction sigma^2 thresholds.  After an
+      FD shrink the buffer rows *are* ``sigma_i v_i`` (orthogonal), so the
+      send set is a row mask — no extra SVD on the hot path.
+    * ``P3`` — distributed priority sampling without replacement (size-s
+      classical priority sample kept as a fixed top-(s+1) buffer).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import fd as fdlib
+
+__all__ = [
+    "ProtocolConfig",
+    "P1State",
+    "P2State",
+    "P3State",
+    "p1_init",
+    "p1_step",
+    "p2_init",
+    "p2_step",
+    "p3_init",
+    "p3_step",
+    "p2_query",
+    "p3_matrix",
+    "make_protocol_runner",
+]
+
+
+class ProtocolConfig(NamedTuple):
+    eps: float
+    m: int  # number of sites == mesh axis size
+    d: int  # row dimensionality
+    axis: str = "sites"
+    l_site: int = 0  # site sketch rows (0 -> ceil(4/eps), paper default)
+    l_coord: int = 0  # coordinator sketch rows (0 -> ceil(4/eps))
+    s: int = 0  # P3 sample size (0 -> ceil(1/eps^2 * log(1/eps)))
+    use_pallas: bool = False
+
+    def resolved(self) -> "ProtocolConfig":
+        import math
+
+        l_default = max(2, math.ceil(4.0 / self.eps))
+        s_default = max(8, math.ceil((1.0 / self.eps**2) * math.log(max(math.e, 1.0 / self.eps))))
+        return self._replace(
+            l_site=self.l_site or l_default,
+            l_coord=self.l_coord or l_default,
+            s=self.s or s_default,
+        )
+
+
+class CommCounters(NamedTuple):
+    scalar_msgs: jax.Array  # i32 — protocol-level scalar messages
+    row_msgs: jax.Array  # i32 — protocol-level row messages
+    broadcast_events: jax.Array  # i32
+
+    @staticmethod
+    def zero() -> "CommCounters":
+        z = jnp.zeros((), jnp.int32)
+        return CommCounters(z, z, z)
+
+
+def _row_sq(x: jax.Array) -> jax.Array:
+    return jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Protocol 1 — batched FD merge
+# ---------------------------------------------------------------------------
+
+
+class P1State(NamedTuple):
+    site_fd: fdlib.FDState  # per-shard
+    f_i: jax.Array  # per-shard () f32 — mass since last ship
+    coord_fd: fdlib.FDState  # replicated
+    f_c: jax.Array  # replicated — mass received at C
+    f_hat: jax.Array  # replicated — broadcast estimate
+    comm: CommCounters
+
+
+def p1_init(cfg: ProtocolConfig) -> P1State:
+    cfg = cfg.resolved()
+    return P1State(
+        site_fd=fdlib.fd_init(cfg.l_site, cfg.d),
+        f_i=jnp.zeros((), jnp.float32),
+        coord_fd=fdlib.fd_init(cfg.l_coord, cfg.d),
+        f_c=jnp.zeros((), jnp.float32),
+        f_hat=jnp.ones((), jnp.float32),
+        comm=CommCounters.zero(),
+    )
+
+
+def p1_step(cfg: ProtocolConfig, st: P1State, rows: jax.Array) -> P1State:
+    """One super-step; call inside shard_map with ``rows`` = local (b, d)."""
+    cfg = cfg.resolved()
+    site_fd = fdlib.fd_update_stream(st.site_fd, rows, use_pallas=cfg.use_pallas)
+    f_i = st.f_i + jnp.sum(_row_sq(rows))
+
+    send = f_i >= (cfg.eps / (2 * cfg.m)) * st.f_hat
+    payload = jnp.where(send, fdlib.fd_matrix(site_fd), 0.0)  # (l_site, d)
+    gathered = lax.all_gather(payload, cfg.axis)  # (m, l_site, d)
+    coord_fd = fdlib.fd_update_stream(
+        st.coord_fd, gathered.reshape(-1, cfg.d), use_pallas=cfg.use_pallas
+    )
+    shipped_rows = lax.psum(
+        jnp.where(send, jnp.sum(_row_sq(fdlib.fd_matrix(site_fd)) > 0), 0), cfg.axis
+    )
+    n_scalar = lax.psum(send.astype(jnp.int32), cfg.axis)
+
+    f_c = st.f_c + lax.psum(jnp.where(send, f_i, 0.0), cfg.axis)
+    f_i = jnp.where(send, 0.0, f_i)
+    # Reset shipped sketches.
+    empty = fdlib.fd_init(cfg.l_site, cfg.d)
+    site_fd = jax.tree.map(lambda a, b: jnp.where(send, b, a), site_fd, empty)
+
+    rebroadcast = f_c / st.f_hat > 1.0 + cfg.eps / 2.0
+    f_hat = jnp.where(rebroadcast, f_c, st.f_hat)
+    comm = CommCounters(
+        scalar_msgs=st.comm.scalar_msgs + n_scalar,
+        row_msgs=st.comm.row_msgs + shipped_rows.astype(jnp.int32),
+        broadcast_events=st.comm.broadcast_events + rebroadcast.astype(jnp.int32),
+    )
+    return P1State(site_fd, f_i, coord_fd, f_c, f_hat, comm)
+
+
+# ---------------------------------------------------------------------------
+# Protocol 2 — per-direction thresholds (the paper's best)
+# ---------------------------------------------------------------------------
+
+
+class P2State(NamedTuple):
+    site_fd: fdlib.FDState  # per-shard; buffer rows are sigma_i v_i
+    f_j: jax.Array  # per-shard () f32 — scalar-message accumulator
+    coord_fd: fdlib.FDState  # replicated
+    f_hat: jax.Array  # replicated
+    n_msg: jax.Array  # replicated i32 — scalar msgs since last broadcast
+    comm: CommCounters
+
+
+def p2_init(cfg: ProtocolConfig) -> P2State:
+    cfg = cfg.resolved()
+    return P2State(
+        site_fd=fdlib.fd_init(cfg.l_site, cfg.d),
+        f_j=jnp.zeros((), jnp.float32),
+        coord_fd=fdlib.fd_init(cfg.l_coord, cfg.d),
+        f_hat=jnp.ones((), jnp.float32),
+        n_msg=jnp.zeros((), jnp.int32),
+        comm=CommCounters.zero(),
+    )
+
+
+def p2_step(cfg: ProtocolConfig, st: P2State, rows: jax.Array) -> P2State:
+    cfg = cfg.resolved()
+    # -- scalar totals (Algorithm 5.3 first half) --
+    f_j = st.f_j + jnp.sum(_row_sq(rows))
+    send_scalar = f_j >= (cfg.eps / cfg.m) * st.f_hat
+    f_hat = st.f_hat + lax.psum(jnp.where(send_scalar, f_j, 0.0), cfg.axis)
+    n_sent = lax.psum(send_scalar.astype(jnp.int32), cfg.axis)
+    f_j = jnp.where(send_scalar, 0.0, f_j)
+    n_msg = st.n_msg + n_sent
+    rebroadcast = n_msg >= cfg.m
+    n_msg = jnp.where(rebroadcast, 0, n_msg)
+
+    # -- direction sends (Algorithm 5.3 second half) --
+    # After fd_update the buffer rows are orthogonal sigma_i v_i: the svd in
+    # Algorithm 5.3 is already materialised; the send set is a row mask.
+    site_fd = fdlib.fd_update_stream(st.site_fd, rows, use_pallas=cfg.use_pallas)
+    buf = site_fd.buf
+    sq = _row_sq(buf)
+    mask = sq >= (cfg.eps / cfg.m) * f_hat
+    payload = jnp.where(mask[:, None], buf, 0.0)
+    site_fd = site_fd._replace(buf=jnp.where(mask[:, None], 0.0, buf))
+    gathered = lax.all_gather(payload, cfg.axis)  # (m, 2*l_site, d)
+    coord_fd = fdlib.fd_update_stream(
+        st.coord_fd, gathered.reshape(-1, cfg.d), use_pallas=cfg.use_pallas
+    )
+    n_rows = lax.psum(jnp.sum(mask.astype(jnp.int32)), cfg.axis)
+
+    comm = CommCounters(
+        scalar_msgs=st.comm.scalar_msgs + n_sent,
+        row_msgs=st.comm.row_msgs + n_rows,
+        broadcast_events=st.comm.broadcast_events + rebroadcast.astype(jnp.int32),
+    )
+    return P2State(site_fd, f_j, coord_fd, f_hat, n_msg, comm)
+
+
+def p2_query(st: P2State, x: jax.Array) -> jax.Array:
+    """Coordinator estimate of ||A x||^2 (callable outside shard_map)."""
+    return fdlib.fd_query(st.coord_fd, x)
+
+
+# ---------------------------------------------------------------------------
+# Protocol 3 — distributed priority sampling (without replacement)
+# ---------------------------------------------------------------------------
+
+
+class P3State(NamedTuple):
+    rng: jax.Array  # per-shard PRNG key
+    tau: jax.Array  # replicated () f32 — round threshold
+    buf_rows: jax.Array  # replicated (s+1, d) — top-priority rows
+    buf_w: jax.Array  # replicated (s+1,)
+    buf_rho: jax.Array  # replicated (s+1,)
+    comm: CommCounters
+
+
+def p3_init(cfg: ProtocolConfig, seed: int = 0) -> P3State:
+    cfg = cfg.resolved()
+    return P3State(
+        rng=jax.random.key(seed),
+        tau=jnp.ones((), jnp.float32),
+        buf_rows=jnp.zeros((cfg.s + 1, cfg.d), jnp.float32),
+        buf_w=jnp.zeros((cfg.s + 1,), jnp.float32),
+        buf_rho=jnp.zeros((cfg.s + 1,), jnp.float32),
+        comm=CommCounters.zero(),
+    )
+
+
+def p3_step(cfg: ProtocolConfig, st: P3State, rows: jax.Array) -> P3State:
+    cfg = cfg.resolved()
+    site = lax.axis_index(cfg.axis)
+    key = jax.random.fold_in(st.rng, site)
+    key, sub = jax.random.split(key)
+    # Keep per-shard streams decorrelated across steps: carry the split key.
+    new_rng = jax.random.split(st.rng)[0]
+
+    w = _row_sq(rows)
+    u = jax.random.uniform(sub, w.shape, minval=jnp.finfo(jnp.float32).tiny, maxval=1.0)
+    rho = w / u
+    mask = rho >= st.tau
+    n_sent = lax.psum(jnp.sum(mask.astype(jnp.int32)), cfg.axis)
+
+    cand_rows = jnp.where(mask[:, None], rows.astype(jnp.float32), 0.0)
+    cand_w = jnp.where(mask, w, 0.0)
+    cand_rho = jnp.where(mask, rho, 0.0)
+    g_rows = lax.all_gather(cand_rows, cfg.axis).reshape(-1, cfg.d)
+    g_w = lax.all_gather(cand_w, cfg.axis).reshape(-1)
+    g_rho = lax.all_gather(cand_rho, cfg.axis).reshape(-1)
+
+    all_rho = jnp.concatenate([st.buf_rho, g_rho])
+    all_w = jnp.concatenate([st.buf_w, g_w])
+    all_rows = jnp.concatenate([st.buf_rows, g_rows])
+    top_rho, top_idx = lax.top_k(all_rho, cfg.s + 1)
+    buf_rows = all_rows[top_idx]
+    buf_w = all_w[top_idx]
+    buf_rho = top_rho
+
+    # Round advance: double tau while >= s buffered items exceed 2*tau.
+    def cond(tau):
+        return jnp.sum(buf_rho >= 2.0 * tau) >= cfg.s
+
+    def body(tau):
+        return tau * 2.0
+
+    new_tau = lax.while_loop(cond, body, st.tau)
+    n_broadcast = jnp.round(jnp.log2(new_tau / st.tau)).astype(jnp.int32)
+
+    comm = CommCounters(
+        scalar_msgs=st.comm.scalar_msgs,
+        row_msgs=st.comm.row_msgs + n_sent,
+        broadcast_events=st.comm.broadcast_events + n_broadcast,
+    )
+    return P3State(new_rng, new_tau, buf_rows, buf_w, buf_rho, comm)
+
+
+def p3_matrix(st: P3State) -> jax.Array:
+    """Coordinator estimate matrix B from the priority sample (s rows).
+
+    Classical priority-sample estimator: tau_hat = smallest buffered
+    priority; every kept row is rescaled to squared norm max(w, tau_hat).
+    """
+    tau_hat = jnp.min(jnp.where(st.buf_rho > 0, st.buf_rho, jnp.inf))
+    tau_hat = jnp.where(jnp.isfinite(tau_hat), tau_hat, 0.0)
+    smallest = jnp.argmin(jnp.where(st.buf_rho > 0, st.buf_rho, jnp.inf))
+    keep = (st.buf_rho > 0) & (jnp.arange(st.buf_rho.shape[0]) != smallest)
+    wbar = jnp.maximum(st.buf_w, tau_hat)
+    scale = jnp.sqrt(wbar / jnp.maximum(st.buf_w, 1e-30))
+    return jnp.where(keep[:, None], st.buf_rows * scale[:, None], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Runner: wraps a protocol step in shard_map over a mesh axis.
+# ---------------------------------------------------------------------------
+
+_INITS = {"P1": p1_init, "P2": p2_init, "P3": p3_init}
+_STEPS = {"P1": p1_step, "P2": p2_step, "P3": p3_step}
+
+
+def make_protocol_runner(protocol: str, cfg: ProtocolConfig, mesh: jax.sharding.Mesh):
+    """Return ``(init_state, step)``: ``step(state, rows)`` consumes a global
+    ``(m * b, d)`` array sharded over ``cfg.axis`` and advances the protocol
+    by one super-step.  ``state`` leaves that are per-site carry a leading
+    ``m`` axis sharded over ``cfg.axis``; replicated leaves are replicated.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    cfg = cfg.resolved()
+    init_fn = _INITS[protocol]
+    step_fn = _STEPS[protocol]
+
+    per_site_leaves = {
+        "P1": ("site_fd", "f_i"),
+        "P2": ("site_fd", "f_j"),
+        "P3": ("rng",),
+    }[protocol]
+
+    def _state_specs(state) -> object:
+        specs = {}
+        for name in state._fields:
+            leaf = getattr(state, name)
+            if name in per_site_leaves:
+                spec = jax.tree.map(lambda _: P(cfg.axis), leaf)
+            else:
+                spec = jax.tree.map(lambda _: P(), leaf)
+            specs[name] = spec
+        return type(state)(**specs)
+
+    def init_state():
+        if protocol == "P3":
+            one = init_fn(cfg)
+            keys = jax.random.split(jax.random.key(0), cfg.m)
+            state = one._replace(rng=keys)
+        else:
+            one = init_fn(cfg)
+
+            def tile(name, leaf):
+                if name in per_site_leaves:
+                    return jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.m,) + a.shape), leaf)
+                return leaf
+
+            state = type(one)(**{n: tile(n, getattr(one, n)) for n in one._fields})
+        return state
+
+    def _inner(state, rows):
+        # Inside shard_map: per-site leaves arrive with leading axis 1.
+        def unbatch(name, leaf):
+            if name in per_site_leaves:
+                return jax.tree.map(lambda a: a[0], leaf)
+            return leaf
+
+        local = type(state)(**{n: unbatch(n, getattr(state, n)) for n in state._fields})
+        new = step_fn(cfg, local, rows)
+
+        def rebatch(name, leaf):
+            if name in per_site_leaves:
+                return jax.tree.map(lambda a: a[None], leaf)
+            return leaf
+
+        return type(new)(**{n: rebatch(n, getattr(new, n)) for n in new._fields})
+
+    state0 = init_state()
+    specs = _state_specs(state0)
+
+    step = jax.jit(
+        shard_map(
+            _inner,
+            mesh=mesh,
+            in_specs=(specs, P(cfg.axis, None)),
+            out_specs=specs,
+            check_rep=False,
+        )
+    )
+    return state0, step

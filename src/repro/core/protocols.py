@@ -1,0 +1,572 @@
+"""Event-driven distributed-streaming protocols — the paper, verbatim.
+
+This module implements the paper's protocols with their exact item-at-a-time
+message semantics on one host (sites are simulated).  It is the *fidelity*
+engine: benchmarks reproduce the paper's figures with it, and the TPU
+production path (``core/distributed.py``) is validated against it.
+
+Weighted heavy hitters (Section 4):
+    * ``HHP1`` — batched Misra--Gries merge            O((m/eps^2) log(beta N))
+    * ``HHP2`` — Yi--Zhang thresholds                  O((m/eps)   log(beta N))
+    * ``HHP3`` — priority sampling (wor / wr)          O((m+s) log(beta N / s))
+    * ``HHP4`` — Huang-et-al probabilistic sends       O((sqrt m/eps) log(beta N))
+
+Matrix tracking (Section 5):
+    * ``MP1``  — batched Frequent Directions merge     O((m/eps^2) log(beta N)) rows
+    * ``MP2``  — per-direction SVD thresholds          O((m/eps)   log(beta N)) rows
+    * ``MP3``  — priority row sampling (wor / wr)      O((m+s) log(beta N / s)) rows
+    * ``MP4``  — Appendix C negative result (implemented to reproduce failure)
+
+Message accounting follows the paper: a message is one d-dimensional row (or
+one element/scalar pair); a sketch of r rows costs r messages; a coordinator
+broadcast costs m messages.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.fd import FDSketch
+from repro.core.hh import MGSketch
+
+__all__ = [
+    "CommLog",
+    "HHResult",
+    "MatrixResult",
+    "run_hh_protocol",
+    "run_matrix_protocol",
+    "HH_PROTOCOLS",
+    "MATRIX_PROTOCOLS",
+]
+
+
+@dataclass
+class CommLog:
+    """Counts messages with the paper's units."""
+
+    scalar_msgs: int = 0  # (total, W_i)-style scalar messages, site -> C
+    item_msgs: int = 0  # element/row messages, site -> C
+    sketch_rows: int = 0  # rows shipped inside sketch sends, site -> C
+    broadcast_events: int = 0  # coordinator -> all sites (each costs m)
+
+    def total(self, m: int) -> int:
+        return (
+            self.scalar_msgs
+            + self.item_msgs
+            + self.sketch_rows
+            + self.broadcast_events * m
+        )
+
+
+@dataclass
+class HHResult:
+    estimates: dict[int, float]
+    w_hat: float
+    comm: CommLog
+    m: int
+    eps: float
+
+    def heavy_hitters(self, phi: float) -> list[int]:
+        """Return e iff hat{W}_e / hat{W} >= phi - eps/2 (paper Section 4)."""
+        thr = (phi - self.eps / 2.0) * self.w_hat
+        return [e for e, v in self.estimates.items() if v >= thr]
+
+
+@dataclass
+class MatrixResult:
+    b: np.ndarray  # the coordinator's sketch matrix
+    f_hat: float
+    comm: CommLog
+    m: int
+    eps: float
+
+    def covariance_error(self, ata: np.ndarray, frob: float) -> float:
+        """``||A^T A - B^T B||_2 / ||A||_F^2`` (paper's err metric)."""
+        btb = self.b.T @ self.b
+        return float(np.linalg.norm(ata - btb, 2) / max(frob, 1e-300))
+
+
+# ---------------------------------------------------------------------------
+# Weighted heavy hitters
+# ---------------------------------------------------------------------------
+
+
+def _hh_p1(keys, weights, sites, m, eps, rng) -> HHResult:
+    """Protocol P1: per-site MG_{eps/2}, batched sketch shipping."""
+    eps_p = eps / 2.0
+    k = max(2, math.ceil(1.0 / eps_p))
+    comm = CommLog()
+    site_mg = [MGSketch(k) for _ in range(m)]
+    site_w = [0.0] * m
+    coord = MGSketch(k)
+    w_c = 0.0
+    w_hat = 1.0
+
+    for e, w, j in zip(keys.tolist(), weights.tolist(), sites.tolist()):
+        mg = site_mg[j]
+        mg.update(e, w)
+        site_w[j] += w
+        if site_w[j] >= (eps / (2 * m)) * w_hat:
+            comm.sketch_rows += len(mg.counters)
+            comm.scalar_msgs += 1
+            coord.merge(mg)
+            w_c += site_w[j]
+            site_mg[j] = MGSketch(k)
+            site_w[j] = 0.0
+            if w_c / w_hat > 1.0 + eps / 2.0:
+                w_hat = w_c
+                comm.broadcast_events += 1
+    return HHResult(coord.items(), w_hat, comm, m, eps)
+
+
+def _hh_p2(keys, weights, sites, m, eps, rng) -> HHResult:
+    """Protocol P2 (Yi--Zhang): scalar total + per-element delta thresholds."""
+    comm = CommLog()
+    site_w = [0.0] * m
+    site_delta: list[dict[int, float]] = [dict() for _ in range(m)]
+    w_hat = 1.0
+    n_msg = 0
+    est: dict[int, float] = {}
+
+    thresh = (eps / m) * w_hat
+    for e, w, j in zip(keys.tolist(), weights.tolist(), sites.tolist()):
+        site_w[j] += w
+        d = site_delta[j]
+        d[e] = d.get(e, 0.0) + w
+        if site_w[j] >= thresh:
+            comm.scalar_msgs += 1
+            w_hat_c = site_w[j]
+            site_w[j] = 0.0
+            n_msg += 1
+            w_hat += w_hat_c
+            if n_msg >= m:
+                n_msg = 0
+                comm.broadcast_events += 1
+                thresh = (eps / m) * w_hat
+        if d[e] >= thresh:
+            comm.item_msgs += 1
+            est[e] = est.get(e, 0.0) + d[e]
+            d[e] = 0.0
+    return HHResult(est, w_hat, comm, m, eps)
+
+
+def _hh_p3(keys, weights, sites, m, eps, rng, s=None) -> HHResult:
+    """Protocol P3: distributed priority sampling without replacement."""
+    if s is None:
+        s = max(8, math.ceil((1.0 / eps**2) * math.log(max(math.e, 1.0 / eps))))
+    comm = CommLog()
+    tau = 1.0
+    q_cur: list[tuple[int, float, float]] = []  # (element, w, rho)
+    q_next: list[tuple[int, float, float]] = []
+
+    n = len(keys)
+    rho_all = weights / np.maximum(rng.uniform(size=n), 1e-300)
+    for e, w, rho in zip(keys.tolist(), weights.tolist(), rho_all.tolist()):
+        if rho >= tau:  # site-side check; one message
+            comm.item_msgs += 1
+            if rho >= 2.0 * tau:
+                q_next.append((e, w, rho))
+            else:
+                q_cur.append((e, w, rho))
+            if len(q_next) >= s:
+                tau *= 2.0
+                comm.broadcast_events += 1
+                q_cur = q_next
+                q_next = [t for t in q_cur if t[2] >= 2.0 * tau]
+                q_cur = [t for t in q_cur if t[2] < 2.0 * tau]
+
+    sample = q_cur + q_next
+    est: dict[int, float] = {}
+    if not sample:
+        return HHResult(est, 0.0, comm, m, eps)
+    sample.sort(key=lambda t: t[2])
+    rho_hat = sample[0][2]
+    kept = sample[1:] if len(sample) > 1 else sample
+    w_hat = 0.0
+    for e, w, _rho in kept:
+        wbar = max(w, rho_hat)
+        est[e] = est.get(e, 0.0) + wbar
+        w_hat += wbar
+    return HHResult(est, w_hat, comm, m, eps)
+
+
+def _hh_p3wr(keys, weights, sites, m, eps, rng, s=None) -> HHResult:
+    """Protocol P3 with replacement: s independent priority samplers."""
+    if s is None:
+        s = max(8, math.ceil((1.0 / eps**2) * math.log(max(math.e, 1.0 / eps))))
+    comm = CommLog()
+    tau = 1.0
+    top1_rho = np.zeros(s)  # highest priority per sampler
+    top2_rho = np.zeros(s)  # second highest per sampler
+    top1_elem = np.full(s, -1, np.int64)
+
+    n = len(keys)
+    block = max(1, min(n, 1 << 22) // max(s, 1) or 1)
+    i = 0
+    while i < n:
+        hi = min(n, i + block)
+        u = rng.uniform(size=(hi - i, s))
+        rho = weights[i:hi, None] / np.maximum(u, 1e-300)
+        send_any = rho >= tau
+        for r in range(hi - i):
+            hit = np.nonzero(send_any[r])[0]
+            if hit.size == 0:
+                continue
+            comm.item_msgs += int(hit.size)
+            e = int(keys[i + r])
+            rr = rho[r, hit]
+            for t, p in zip(hit.tolist(), rr.tolist()):
+                if p > top1_rho[t]:
+                    top2_rho[t] = top1_rho[t]
+                    top1_rho[t] = p
+                    top1_elem[t] = e
+                elif p > top2_rho[t]:
+                    top2_rho[t] = p
+            # Round ends when every sampler's 2nd priority is above 2*tau.
+            if np.all(top2_rho > 2.0 * tau):
+                tau *= 2.0
+                comm.broadcast_events += 1
+        i = hi
+
+    w_hat = float(np.mean(top2_rho))
+    est: dict[int, float] = {}
+    for t in range(s):
+        e = int(top1_elem[t])
+        if e >= 0:
+            est[e] = est.get(e, 0.0) + w_hat / s
+    return HHResult(est, w_hat, comm, m, eps)
+
+
+def _hh_p4(keys, weights, sites, m, eps, rng) -> HHResult:
+    """Protocol P4 (Huang et al.): send f_e(A_j) with prob 1 - exp(-p*w)."""
+    comm = CommLog()
+    w_hat = 1.0  # sites' broadcast estimate; w_hat <= W_C <= 2*w_hat
+    w_c = 1.0  # coordinator's running total
+    p = 2.0 * math.sqrt(m) / (eps * w_hat)
+    site_f: list[dict[int, float]] = [dict() for _ in range(m)]
+    site_w = [0.0] * m
+    # Last received (e, j) -> value; coordinator-side.
+    recv: dict[tuple[int, int], float] = {}
+
+    n = len(keys)
+    u_all = rng.uniform(size=n)
+    for idx, (e, w, j) in enumerate(zip(keys.tolist(), weights.tolist(), sites.tolist())):
+        f = site_f[j]
+        f[e] = f.get(e, 0.0) + w
+        site_w[j] += w
+        # Deterministic total-weight tracking (eps=1/2 Yi-Zhang totals);
+        # the coordinator re-broadcasts w_hat each time its total doubles.
+        if site_w[j] >= w_hat / (2 * m):
+            comm.scalar_msgs += 1
+            w_c += site_w[j]
+            site_w[j] = 0.0
+            if w_c >= 2.0 * w_hat:
+                w_hat = w_c
+                p = 2.0 * math.sqrt(m) / (eps * w_hat)
+                comm.broadcast_events += 1
+        p_bar = 1.0 - math.exp(-p * w)
+        if u_all[idx] <= p_bar:
+            comm.item_msgs += 1
+            recv[(e, j)] = f[e]
+
+    est: dict[int, float] = {}
+    for (e, _j), v in recv.items():
+        est[e] = est.get(e, 0.0) + v + 1.0 / p
+    return HHResult(est, w_c, comm, m, eps)
+
+
+HH_PROTOCOLS = {
+    "P1": _hh_p1,
+    "P2": _hh_p2,
+    "P3": _hh_p3,
+    "P3wr": _hh_p3wr,
+    "P4": _hh_p4,
+}
+
+
+def run_hh_protocol(
+    name: str,
+    keys: np.ndarray,
+    weights: np.ndarray,
+    sites: np.ndarray,
+    m: int,
+    eps: float,
+    seed: int = 0,
+    **kw,
+) -> HHResult:
+    rng = np.random.default_rng(seed)
+    return HH_PROTOCOLS[name](keys, weights, sites, m, eps, rng, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Matrix tracking
+# ---------------------------------------------------------------------------
+
+
+def _mp1(rows, sites, m, eps, rng, l=None) -> MatrixResult:
+    """Matrix P1: per-site FD_{eps/2}, batched sketch shipping + FD merge."""
+    d = rows.shape[1]
+    if l is None:
+        l = max(2, math.ceil(4.0 / eps))  # FD err 2/l <= eps/2
+    comm = CommLog()
+    site_fd = [FDSketch(l, d) for _ in range(m)]
+    site_f = [0.0] * m
+    coord = FDSketch(l, d)
+    f_c = 0.0
+    f_hat = 1.0
+
+    row_sq = np.einsum("nd,nd->n", rows, rows)
+    for i, j in enumerate(sites.tolist()):
+        fd = site_fd[j]
+        fd.append(rows[i])
+        site_f[j] += float(row_sq[i])
+        if site_f[j] >= (eps / (2 * m)) * f_hat:
+            mat = fd.matrix()
+            nz = mat[np.einsum("rd,rd->r", mat, mat) > 0]
+            comm.sketch_rows += int(nz.shape[0])
+            comm.scalar_msgs += 1
+            coord.merge(fd)
+            f_c += site_f[j]
+            site_fd[j] = FDSketch(l, d)
+            site_f[j] = 0.0
+            if f_c / f_hat > 1.0 + eps / 2.0:
+                f_hat = f_c
+                comm.broadcast_events += 1
+    return MatrixResult(coord.matrix(), f_hat, comm, m, eps)
+
+
+class _MP2Site:
+    """Site state for matrix P2: rank-<=d residual matrix + lazy SVD.
+
+    The residual B_j is kept in factored form ``S`` (r x d, r <= d+buffer).
+    An SVD is only computed when the cheap upper bound on sigma_1^2
+    (last sigma_1^2 + Frobenius mass appended since) can cross the send
+    threshold — this is exact, since appending rows raises sigma_1^2 by at
+    most the appended squared-Frobenius mass.
+    """
+
+    def __init__(self, d: int):
+        self.d = d
+        self.dirs = np.zeros((0, d))  # sigma_i * v_i rows from last SVD
+        self.pending: list[np.ndarray] = []
+        self.sig1_sq = 0.0  # sigma_1^2 at last SVD
+        self.pending_sq = 0.0
+
+    def append(self, row: np.ndarray) -> None:
+        self.pending.append(row)
+        self.pending_sq += float(row @ row)
+
+    def maybe_send(self, thresh: float) -> list[np.ndarray]:
+        if self.sig1_sq + self.pending_sq < thresh:
+            return []
+        if self.pending:
+            b = np.concatenate([self.dirs, np.stack(self.pending)], axis=0)
+        else:
+            b = self.dirs
+        if b.shape[0] == 0:
+            return []
+        # svd: B = U diag(s) Vt
+        _, s, vt = np.linalg.svd(b, full_matrices=False)
+        send = s**2 >= thresh
+        out = [s[i] * vt[i] for i in np.nonzero(send)[0]]
+        keep = ~send
+        self.dirs = s[keep, None] * vt[keep]
+        self.pending = []
+        self.pending_sq = 0.0
+        self.sig1_sq = float(np.max(s[keep] ** 2)) if np.any(keep) else 0.0
+        return out
+
+
+def _mp2(rows, sites, m, eps, rng) -> MatrixResult:
+    """Matrix P2: the paper's best protocol — per-direction thresholds."""
+    d = rows.shape[1]
+    comm = CommLog()
+    site = [_MP2Site(d) for _ in range(m)]
+    site_f = [0.0] * m
+    f_hat = 1.0
+    n_msg = 0
+    coord_rows: list[np.ndarray] = []
+
+    row_sq = np.einsum("nd,nd->n", rows, rows)
+    thresh = (eps / m) * f_hat
+    for i, j in enumerate(sites.tolist()):
+        site_f[j] += float(row_sq[i])
+        if site_f[j] >= thresh:
+            comm.scalar_msgs += 1
+            f_hat += site_f[j]
+            site_f[j] = 0.0
+            n_msg += 1
+            if n_msg >= m:
+                n_msg = 0
+                comm.broadcast_events += 1
+                thresh = (eps / m) * f_hat
+        st = site[j]
+        st.append(rows[i])
+        sent = st.maybe_send(thresh)
+        if sent:
+            comm.item_msgs += len(sent)
+            coord_rows.extend(sent)
+
+    b = np.stack(coord_rows) if coord_rows else np.zeros((0, d))
+    return MatrixResult(b, f_hat, comm, m, eps)
+
+
+def _mp3(rows, sites, m, eps, rng, s=None) -> MatrixResult:
+    """Matrix P3: priority row-sampling without replacement."""
+    d = rows.shape[1]
+    if s is None:
+        s = max(8, math.ceil((1.0 / eps**2) * math.log(max(math.e, 1.0 / eps))))
+    comm = CommLog()
+    tau = 1.0
+    q_cur: list[tuple[int, float, float]] = []  # (row index, w, rho)
+    q_next: list[tuple[int, float, float]] = []
+
+    w_all = np.einsum("nd,nd->n", rows, rows)
+    rho_all = w_all / np.maximum(rng.uniform(size=rows.shape[0]), 1e-300)
+    for i, (w, rho) in enumerate(zip(w_all.tolist(), rho_all.tolist())):
+        if rho >= tau:
+            comm.item_msgs += 1
+            if rho >= 2.0 * tau:
+                q_next.append((i, w, rho))
+            else:
+                q_cur.append((i, w, rho))
+            if len(q_next) >= s:
+                tau *= 2.0
+                comm.broadcast_events += 1
+                q_cur = q_next
+                q_next = [t for t in q_cur if t[2] >= 2.0 * tau]
+                q_cur = [t for t in q_cur if t[2] < 2.0 * tau]
+
+    sample = q_cur + q_next
+    if not sample:
+        return MatrixResult(np.zeros((0, d)), 0.0, comm, m, eps)
+    sample.sort(key=lambda t: t[2])
+    rho_hat = sample[0][2]
+    kept = sample[1:] if len(sample) > 1 else sample
+    out = []
+    f_hat = 0.0
+    for i, w, _rho in kept:
+        wbar = max(w, rho_hat)
+        f_hat += wbar
+        scale = math.sqrt(wbar / max(w, 1e-300))
+        out.append(rows[i] * scale)
+    return MatrixResult(np.stack(out), f_hat, comm, m, eps)
+
+
+def _mp3wr(rows, sites, m, eps, rng, s=None) -> MatrixResult:
+    """Matrix P3 with replacement: s independent row samplers."""
+    d = rows.shape[1]
+    if s is None:
+        s = max(8, math.ceil(1.0 / eps**2))
+    comm = CommLog()
+    tau = 1.0
+    top1_rho = np.zeros(s)
+    top2_rho = np.zeros(s)
+    top1_idx = np.full(s, -1, np.int64)
+
+    w_all = np.einsum("nd,nd->n", rows, rows)
+    n = rows.shape[0]
+    block = max(1, min(n, 1 << 22) // max(s, 1) or 1)
+    i = 0
+    while i < n:
+        hi = min(n, i + block)
+        u = rng.uniform(size=(hi - i, s))
+        rho = w_all[i:hi, None] / np.maximum(u, 1e-300)
+        send_any = rho >= tau
+        for r in range(hi - i):
+            hit = np.nonzero(send_any[r])[0]
+            if hit.size == 0:
+                continue
+            comm.item_msgs += int(hit.size)
+            rr = rho[r, hit]
+            for t, p in zip(hit.tolist(), rr.tolist()):
+                if p > top1_rho[t]:
+                    top2_rho[t] = top1_rho[t]
+                    top1_rho[t] = p
+                    top1_idx[t] = i + r
+                elif p > top2_rho[t]:
+                    top2_rho[t] = p
+            if np.all(top2_rho > 2.0 * tau):
+                tau *= 2.0
+                comm.broadcast_events += 1
+        i = hi
+
+    w_hat = float(np.mean(top2_rho))
+    out = []
+    for t in range(s):
+        idx = int(top1_idx[t])
+        if idx < 0:
+            continue
+        w = float(w_all[idx])
+        scale = math.sqrt((w_hat / s) / max(w, 1e-300))
+        out.append(rows[idx] * scale)
+    b = np.stack(out) if out else np.zeros((0, d))
+    return MatrixResult(b, w_hat, comm, m, eps)
+
+
+def _mp4(rows, sites, m, eps, rng, variant="fixed") -> MatrixResult:
+    """Matrix P4 (Appendix C) — the paper's NEGATIVE result, reproduced.
+
+    Sites track hat{A}_j = Z V^T where V never changes (variant='fixed', as
+    Algorithm C.1 implies) or is re-seeded from the current covariance at
+    each send (variant='resvd', the charitable reading).  Either way the
+    error is NOT bounded by eps — see benchmarks/p4_negative.py.
+    """
+    d = rows.shape[1]
+    comm = CommLog()
+    f_hat = 1.0
+    p = 2.0 * math.sqrt(m) / (eps * f_hat)
+    site_cov = [np.zeros((d, d)) for _ in range(m)]  # exact A_j^T A_j
+    site_v = [np.eye(d) for _ in range(m)]
+    site_z = [np.zeros(d) for _ in range(m)]
+    site_w = [0.0] * m
+
+    w_all = np.einsum("nd,nd->n", rows, rows)
+    u_all = rng.uniform(size=rows.shape[0])
+    for i, j in enumerate(sites.tolist()):
+        a = rows[i]
+        site_cov[j] += np.outer(a, a)
+        site_w[j] += float(w_all[i])
+        if site_w[j] >= f_hat / (2 * m):
+            comm.scalar_msgs += 1
+            f_hat += site_w[j]
+            site_w[j] = 0.0
+            p = 2.0 * math.sqrt(m) / (eps * f_hat)
+        p_bar = 1.0 - math.exp(-p * float(w_all[i]))
+        if u_all[i] <= p_bar:
+            comm.item_msgs += 1  # one d-dim vector message z
+            v = site_v[j]
+            if variant == "resvd":
+                lam, vec = np.linalg.eigh(site_cov[j])
+                v = vec[:, ::-1]
+                site_v[j] = v
+            quad = np.einsum("di,dk,ki->i", v, site_cov[j], v)
+            site_z[j] = np.sqrt(np.maximum(quad + 1.0 / p, 0.0))
+
+    blocks = [site_z[j][:, None] * site_v[j].T for j in range(m)]
+    b = np.concatenate(blocks, axis=0)
+    return MatrixResult(b, f_hat, comm, m, eps)
+
+
+MATRIX_PROTOCOLS = {
+    "P1": _mp1,
+    "P2": _mp2,
+    "P3": _mp3,
+    "P3wr": _mp3wr,
+    "P4": _mp4,
+}
+
+
+def run_matrix_protocol(
+    name: str,
+    rows: np.ndarray,
+    sites: np.ndarray,
+    m: int,
+    eps: float,
+    seed: int = 0,
+    **kw,
+) -> MatrixResult:
+    rng = np.random.default_rng(seed)
+    return MATRIX_PROTOCOLS[name](rows, sites, m, eps, rng, **kw)

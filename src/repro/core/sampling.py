@@ -1,0 +1,95 @@
+"""Priority sampling (Duffield--Lund--Thorup) primitives for protocol P3.
+
+Each item with weight ``w`` draws ``u ~ Unif(0, 1]`` and gets priority
+``rho = w / u``.  A size-``s`` *without replacement* sample keeps the ``s``
+largest priorities; with ``tau`` the (s+1)-th largest priority, the
+subset-sum estimator assigns each kept item the adjusted weight
+``bar{w} = max(w, tau)``, which is unbiased: ``E[sum bar{w}] = W``.
+
+The streaming/distributed round structure (threshold doubling, queues
+Q_j/Q_{j+1}) lives in ``protocols.py``; this module provides the math.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "priorities",
+    "priority_sample",
+    "PrioritySample",
+    "subset_sum_weights",
+]
+
+
+def priorities(weights: jax.Array, key: jax.Array) -> jax.Array:
+    """rho_i = w_i / u_i with u ~ Unif(0,1] (jit-able)."""
+    u = jax.random.uniform(key, weights.shape, minval=jnp.finfo(jnp.float32).tiny, maxval=1.0)
+    return weights / u
+
+
+class PrioritySample(NamedTuple):
+    indices: jax.Array  # (s,) indices into the source array
+    weights: jax.Array  # (s,) adjusted weights bar{w}
+    tau: jax.Array  # () the (s+1)-th priority (estimator threshold)
+
+
+def priority_sample(weights: jax.Array, key: jax.Array, s: int) -> PrioritySample:
+    """One-shot size-s priority sample of a weight vector (jit-able)."""
+    n = weights.shape[0]
+    if n <= s:
+        raise ValueError(f"need n > s for a proper sample, got n={n}, s={s}")
+    rho = priorities(weights.astype(jnp.float32), key)
+    top_rho, top_idx = jax.lax.top_k(rho, s + 1)
+    tau = top_rho[s]
+    idx = top_idx[:s]
+    adj = jnp.maximum(weights[idx].astype(jnp.float32), tau)
+    return PrioritySample(indices=idx, weights=adj, tau=tau)
+
+
+def subset_sum_weights(kept_w: np.ndarray, tau: float) -> np.ndarray:
+    """Adjusted weights for a priority sample with threshold tau (numpy)."""
+    return np.maximum(kept_w, tau)
+
+
+class PrioritySampler:
+    """Streaming without-replacement priority sampler (numpy oracle).
+
+    Maintains the top-``s`` priorities over everything seen; ``sample()``
+    returns (items, adjusted weights).  This is the *centralized* oracle; the
+    distributed round protocol in protocols.py reproduces it with low
+    communication (paper Lemma 6 / Theorem 5).
+    """
+
+    def __init__(self, s: int, rng: np.random.Generator):
+        self.s = s
+        self.rng = rng
+        self._items: list = []
+        self._weights: list[float] = []
+        self._rhos: list[float] = []
+
+    def update(self, item, w: float) -> None:
+        rho = w / max(self.rng.uniform(), 1e-300)
+        self._items.append(item)
+        self._weights.append(w)
+        self._rhos.append(rho)
+        if len(self._items) > 4 * self.s:
+            self._compact()
+
+    def _compact(self) -> None:
+        order = np.argsort(self._rhos)[::-1][: self.s + 1]
+        self._items = [self._items[i] for i in order]
+        self._weights = [self._weights[i] for i in order]
+        self._rhos = [self._rhos[i] for i in order]
+
+    def sample(self):
+        self._compact()
+        if len(self._items) <= self.s:
+            return list(self._items), np.asarray(self._weights, np.float64)
+        tau = self._rhos[self.s]
+        items = self._items[: self.s]
+        w = subset_sum_weights(np.asarray(self._weights[: self.s], np.float64), tau)
+        return items, w

@@ -1,0 +1,68 @@
+"""Jit'd wrappers for the FD Pallas kernels (padding + interpret dispatch).
+
+``interpret`` defaults to True off-TPU so the same call sites work in this
+CPU container and on real hardware.  Padding: L to a multiple of 8 (f32
+sublane), d to a multiple of the d-block.  Zero rows/cols are exact no-ops
+for both kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fd_gram import DEFAULT_BLOCK_D, fd_gram_pallas
+from repro.kernels.fd_project import fd_project_pallas
+
+__all__ = ["fd_gram", "fd_project"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def _gram_padded(b, *, block_d, interpret):
+    return fd_gram_pallas(b, block_d=block_d, interpret=interpret)
+
+
+def fd_gram(b: jax.Array, *, block_d: int = 0, interpret: bool | None = None) -> jax.Array:
+    """``B @ B.T`` (f32) via the Pallas kernel, any (L, d)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    l, d = b.shape
+    if block_d <= 0:
+        block_d = min(DEFAULT_BLOCK_D, _pad_to(d, 128))
+    lp = _pad_to(max(l, 8), 8)
+    dp = _pad_to(d, block_d)
+    bp = jnp.pad(b, ((0, lp - l), (0, dp - d)))
+    g = _gram_padded(bp, block_d=block_d, interpret=interpret)
+    return g[:l, :l]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def _project_padded(w, u, b, *, block_d, interpret):
+    return fd_project_pallas(w, u, b, block_d=block_d, interpret=interpret)
+
+
+def fd_project(
+    w: jax.Array, u: jax.Array, b: jax.Array, *, block_d: int = 0, interpret: bool | None = None
+) -> jax.Array:
+    """``diag(w) @ (U.T @ B)`` via the Pallas kernel, any (L,), (L,L), (L,d)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    l, d = b.shape
+    if block_d <= 0:
+        block_d = min(DEFAULT_BLOCK_D, _pad_to(d, 128))
+    lp = _pad_to(max(l, 8), 8)
+    dp = _pad_to(d, block_d)
+    wp = jnp.pad(w, (0, lp - l))
+    up = jnp.pad(u, ((0, lp - l), (0, lp - l)))
+    bp = jnp.pad(b, ((0, lp - l), (0, dp - d)))
+    out = _project_padded(wp, up, bp, block_d=block_d, interpret=interpret)
+    return out[:l, :d]

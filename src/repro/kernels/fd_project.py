@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: fused FD shrink projection ``B' = diag(w) @ (U.T @ B)``.
+
+After the eigendecomposition ``B B^T = U diag(lam) U^T``, Frequent Directions
+rebuilds the shrunk sketch as ``diag(w) U^T B`` with
+``w = sqrt(max(lam - delta, 0) / lam)``.  Unfused, this is a (L,L)x(L,d)
+matmul plus a full (L,d) rescale pass over HBM; fusing the rescale into the
+matmul epilogue saves one complete read+write of the (L,d) product.
+
+    grid = (d / BLOCK_D,)
+    step i:  out[:, blk_i] = w[:, None] * (U.T @ B[:, blk_i])      (MXU + VPU)
+
+U (L,L) and w (L,1) stay VMEM-resident across all grid steps (their
+index_map is constant), B streams through.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_D = 512
+
+
+def _project_kernel(w_ref, u_ref, b_ref, o_ref):
+    ut_b = jax.lax.dot_general(
+        u_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),  # U.T @ B_blk
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = (w_ref[...] * ut_b).astype(o_ref.dtype)
+
+
+def fd_project_pallas(
+    w: jax.Array,
+    u: jax.Array,
+    b: jax.Array,
+    *,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+) -> jax.Array:
+    """diag(w) @ (U.T @ B).  w: (L,), u: (L, L), b: (L, d)."""
+    l, d = b.shape
+    if u.shape != (l, l) or w.shape != (l,):
+        raise ValueError(f"shape mismatch: w{w.shape} u{u.shape} b{b.shape}")
+    if d % block_d != 0:
+        raise ValueError(f"d={d} must be a multiple of block_d={block_d}")
+    grid = (d // block_d,)
+    return pl.pallas_call(
+        _project_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l, 1), lambda i: (0, 0)),  # w, resident
+            pl.BlockSpec((l, l), lambda i: (0, 0)),  # U, resident
+            pl.BlockSpec((l, block_d), lambda i: (0, i)),  # B, streamed
+        ],
+        out_specs=pl.BlockSpec((l, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((l, d), b.dtype),
+        interpret=interpret,
+    )(w[:, None], u, b)

@@ -1,0 +1,190 @@
+"""Pallas TPU kernel: causal flash attention with GQA + sliding window.
+
+TPU-native decomposition of the assigned-arch hot-spot (32k-token prefill):
+
+    grid = (batch * q_heads, n_q_blocks, n_kv_blocks)   — kv innermost
+    scratch (VMEM): acc (BQ, DH) f32, m/l (BQ, 128) f32 (lane-replicated)
+
+Per (q-block, kv-block) step the kernel performs the online-softmax update
+entirely in VMEM; KV blocks stream from HBM.  Causality and sliding windows
+are enforced two ways: whole out-of-range KV blocks are *skipped* (pl.when
+guard — on TPU the MXU work is predicated away, which is where the real
+sub-quadratic win for SWA archs comes from), and partially-masked diagonal /
+window-boundary blocks apply an in-VMEM mask.
+
+GQA is free: grid dim 0 enumerates q heads; the kv BlockSpec index_map folds
+the q head onto its kv head (h // group), so no repeat/copy of KV ever
+materialises.
+
+Restrictions (by design, this is the self-attention path): sq == skv,
+sq % block_q == 0, skv % block_kv == 0, dh % 128 == 0.  Decode (sq=1) uses
+the XLA path in models/attention.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_KV = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    logit_softcap: float,
+    block_q: int,
+    block_kv: int,
+    n_kv: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    q_start = qi * block_q
+    q_last = q_start + block_q - 1
+    k_start = ki * block_kv
+    k_last = k_start + block_kv - 1
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Whole-block validity (static per grid point except via program_id).
+    valid = jnp.bool_(True)
+    if causal:
+        valid &= k_start <= q_last
+    if window > 0:
+        # Needed iff some q row in this block can still see the kv block:
+        # the earliest visible kpos for the block is q_start - window + 1.
+        valid &= k_last > q_start - window
+
+    @pl.when(valid)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (BQ, DH)
+        k = k_ref[0, 0].astype(jnp.float32)  # (BKV, DH)
+        v = v_ref[0, 0].astype(jnp.float32)  # (BKV, DH)
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (BQ, BKV)
+        if logit_softcap > 0.0:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = jnp.ones((block_q, block_kv), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]  # (BQ, 1), lane-replicated storage
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    # Finalise once the last *valid* kv block for this q block is done.
+    if causal:
+        ki_last = jnp.minimum(q_last // block_kv, n_kv - 1)
+    else:
+        ki_last = n_kv - 1
+
+    @pl.when(ki == ki_last)
+    def _final():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    logit_softcap: float = 0.0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (b, hq, s, dh); k, v: (b, hkv, s, dh); returns (b, hq, s, dh)."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    if sq != skv:
+        raise ValueError("flash kernel is the self-attention path (sq == skv)")
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    if sq % block_q or skv % block_kv:
+        raise ValueError(f"seq {sq} not divisible by blocks ({block_q}, {block_kv})")
+    if hq % hkv:
+        raise ValueError(f"GQA needs hq % hkv == 0, got {hq}, {hkv}")
+    group = hq // hkv
+    if scale is None:
+        scale = dh**-0.5
+    n_q = sq // block_q
+    n_kv = skv // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        logit_softcap=logit_softcap,
+        block_q=block_q,
+        block_kv=block_kv,
+        n_kv=n_kv,
+    )
+    grid = (b * hq, n_q, n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_kv, dh),
+                lambda bh, qi, ki: (bh // hq, (bh % hq) // group, ki, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_kv, dh),
+                lambda bh, qi, ki: (bh // hq, (bh % hq) // group, ki, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, dh), lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

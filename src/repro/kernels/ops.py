@@ -1,0 +1,95 @@
+"""Jit'd public entry points for all Pallas kernels.
+
+* ``fd_gram`` / ``fd_project`` — FD shrink hot-spots (see fd_ops.py).
+* ``flash_attention``         — causal/GQA/windowed attention; pads seq to
+  block multiples (padded key rows are masked out by causality + explicit
+  length masking, padded q rows are dropped).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fd_ops import fd_gram, fd_project
+from repro.kernels.flash_attention import (
+    DEFAULT_BLOCK_KV,
+    DEFAULT_BLOCK_Q,
+    flash_attention_pallas,
+)
+
+__all__ = ["fd_gram", "fd_project", "flash_attention"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "logit_softcap", "block_q", "block_kv", "interpret"),
+)
+def _flash_padded(q, k, v, *, causal, window, scale, logit_softcap, block_q, block_kv, interpret):
+    return flash_attention_pallas(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        scale=scale,
+        logit_softcap=logit_softcap,
+        block_q=block_q,
+        block_kv=block_kv,
+        interpret=interpret,
+    )
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    logit_softcap: float = 0.0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Self-attention (sq == skv) with seq padding to block multiples.
+
+    Padded *key* positions sit at the end of the stream; causal masking plus
+    the zero-query trick keeps them out of every real row's softmax.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, hq, s, dh = q.shape
+    if scale is None:
+        scale = dh**-0.5
+    block_q = min(block_q, _pad_to(s, 128))
+    block_kv = min(block_kv, _pad_to(s, 128))
+    sp = _pad_to(s, max(block_q, block_kv))
+    if sp != s:
+        pad = ((0, 0), (0, 0), (0, sp - s), (0, 0))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    out = _flash_padded(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        scale=scale,
+        logit_softcap=logit_softcap,
+        block_q=block_q,
+        block_kv=block_kv,
+        interpret=interpret,
+    )
+    return out[:, :, :s, :]

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contracts).
+
+Tests sweep shapes/dtypes and assert the kernels (interpret=True on CPU)
+match these to tight tolerances.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_fd_gram(b: jax.Array) -> jax.Array:
+    b32 = b.astype(jnp.float32)
+    return jnp.matmul(b32, b32.T, preferred_element_type=jnp.float32)
+
+
+def ref_fd_project(w: jax.Array, u: jax.Array, b: jax.Array) -> jax.Array:
+    out = w[:, None].astype(jnp.float32) * jnp.matmul(
+        u.astype(jnp.float32).T, b.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    return out.astype(b.dtype)
+
+
+def ref_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    """Reference multi-head attention with GQA + sliding window.
+
+    q: (b, hq, sq, dh); k, v: (b, hkv, skv, dh).  hq % hkv == 0.
+    ``window`` > 0 masks keys further than ``window`` positions behind the
+    query (sliding-window attention); 0 means unlimited.
+    Query position i attends key positions [max(0, i+off-window+1), i+off]
+    where off = skv - sq (decode-style alignment: queries are the last sq
+    positions of the key stream).
+    """
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = dh**-0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # Expand kv heads to q heads.
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if logit_softcap > 0.0:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    off = skv - sq
+    qpos = jnp.arange(sq)[:, None] + off
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)

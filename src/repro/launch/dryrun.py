@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+#   init).  512 placeholder host devices back the production meshes.
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs.registry import (  # noqa: E402
+    ARCH_NAMES,
+    SHAPE_NAMES,
+    SHAPES,
+    cell_supported,
+    get_config,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import lower_cell  # noqa: E402
+from repro.roofline.analysis import (  # noqa: E402
+    RooflineReport,
+    model_flops,
+    parse_collective_bytes,
+)
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) cell:
+  jit(step).lower(**input_specs).compile()
+must succeed; we print/persist memory_analysis() (proves it fits) and a
+*loop-corrected* cost analysis (XLA's cost_analysis counts a scan body once,
+not x trip-count — verified empirically; see EXPERIMENTS.md §Dry-run).
+
+Loop correction: each cell is lowered twice more with scans unrolled at
+1 and 2 pattern-cycles; per-cycle cost = cost(2 cycles) - cost(1 cycle),
+total = cost(1 cycle + remainder) + (cycles - 1) * per-cycle.  All three
+lowers use the same mesh/shardings, so per-device numbers stay faithful.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+
+
+def _mem_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    out["total_bytes_per_device"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0)
+    )
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = parse_collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective": float(coll.total),
+        "by_kind": dict(coll.by_kind),
+    }
+
+
+def _combine(base: dict, percycle: dict, extra_cycles: int) -> dict:
+    """Linear extrapolation; per-cycle costs are clamped at >= 0 (XLA may
+    pick different collective strategies at different unroll depths — a
+    negative per-cycle delta is noise, not physics)."""
+    out = {
+        "flops": base["flops"] + extra_cycles * max(percycle["flops"], 0.0),
+        "bytes": base["bytes"] + extra_cycles * max(percycle["bytes"], 0.0),
+        "by_kind": {},
+    }
+    kinds = set(base["by_kind"]) | set(percycle["by_kind"])
+    for k in kinds:
+        out["by_kind"][k] = max(
+            0.0,
+            base["by_kind"].get(k, 0.0)
+            + extra_cycles * max(percycle["by_kind"].get(k, 0.0), 0.0),
+        )
+    out["collective"] = sum(out["by_kind"].values())
+    return out
+
+
+def structural_cost(arch: str, cfg, shape_cfg, mesh, seq_parallel: bool, layout: str = "tp") -> dict:
+    """Loop-corrected per-device cost via 1-cycle/2-cycle unrolled lowers."""
+    p = len(cfg.layer_pattern)
+    cycles, rem = divmod(cfg.n_layers, p)
+    if cycles <= 2:  # small enough: unroll everything exactly
+        full = dataclasses.replace(cfg, scan_unroll=True)
+        c = lower_cell(arch, shape_cfg, mesh, cfg_override=full, seq_parallel=seq_parallel, layout=layout).compile()
+        return _cost_dict(c)
+    one = dataclasses.replace(cfg, n_layers=p + rem, scan_unroll=True)
+    two = dataclasses.replace(cfg, n_layers=2 * p + rem, scan_unroll=True)
+    c1 = _cost_dict(
+        lower_cell(arch, shape_cfg, mesh, cfg_override=one, seq_parallel=seq_parallel, layout=layout).compile()
+    )
+    c2 = _cost_dict(
+        lower_cell(arch, shape_cfg, mesh, cfg_override=two, seq_parallel=seq_parallel, layout=layout).compile()
+    )
+    percycle = {
+        "flops": c2["flops"] - c1["flops"],
+        "bytes": c2["bytes"] - c1["bytes"],
+        "collective": c2["collective"] - c1["collective"],
+        "by_kind": {
+            k: c2["by_kind"].get(k, 0.0) - c1["by_kind"].get(k, 0.0)
+            for k in set(c1["by_kind"]) | set(c2["by_kind"])
+        },
+    }
+    return _combine(c1, percycle, cycles - 1)
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    outdir: str | None,
+    *,
+    seq_parallel: bool = True,
+    layout: str = "tp",
+    tag: str = "",
+) -> dict:
+    shape_cfg = SHAPES[shape_name]
+    cfg = get_config(arch)
+    ok, reason = cell_supported(cfg, shape_cfg)
+    mesh_desc = "2x16x16" if multi_pod else "16x16"
+    cell = f"{arch} x {shape_name} x {mesh_desc}"
+    if not ok:
+        print(f"[SKIP] {cell}: {reason}")
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_desc, "status": "skip", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    with mesh:
+        # 1. the real (scanned) module: proves lowering+compile+fit
+        lowered = lower_cell(arch, shape_cfg, mesh, seq_parallel=seq_parallel, layout=layout)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = _mem_dict(compiled)
+        # 2. loop-corrected per-device cost accounting
+        cost = structural_cost(arch, cfg, shape_cfg, mesh, seq_parallel, layout)
+
+    report = RooflineReport(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_desc,
+        chips=chips,
+        flops_per_device=cost["flops"],
+        bytes_per_device=cost["bytes"],
+        collective_bytes_per_device=cost["collective"],
+        collective_by_kind=cost["by_kind"],
+        model_flops_global=model_flops(cfg, shape_cfg),
+    )
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_desc,
+        "chips": chips,
+        "status": "ok",
+        "seq_parallel": seq_parallel,
+        "tag": tag,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "flops_per_device": report.flops_per_device,
+        "bytes_per_device": report.bytes_per_device,
+        "collective_bytes_per_device": report.collective_bytes_per_device,
+        "collective_by_kind": report.collective_by_kind,
+        "roofline": report.row(),
+    }
+    print(
+        f"[OK] {cell}{('['+tag+']') if tag else ''}: compile {t_compile:.1f}s | "
+        f"mem/device {mem['total_bytes_per_device']/2**30:.2f} GiB | "
+        f"flops/device {report.flops_per_device:.3e} | "
+        f"coll bytes/device {report.collective_bytes_per_device:.3e} | "
+        f"dominant={report.dominant} "
+        f"(c={report.compute_s*1e3:.2f}ms m={report.memory_s*1e3:.2f}ms "
+        f"n={report.collective_s*1e3:.2f}ms) mfu@roofline={report.mfu:.2%}"
+    )
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fn = os.path.join(outdir, f"{arch}__{shape_name}__{mesh_desc}{suffix}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=SHAPE_NAMES)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every live cell x both meshes")
+    ap.add_argument("--no-seq-parallel", action="store_true", help="baseline layout")
+    ap.add_argument("--layout", choices=["tp", "dp", "dp_compressed"], default="tp")
+    ap.add_argument("--tag", default="", help="variant tag for output filenames")
+    ap.add_argument("--out", default=None, help="directory for per-cell JSON records")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for arch in ARCH_NAMES:
+            for shape in SHAPE_NAMES:
+                cells.append((arch, shape, False))
+                cells.append((arch, shape, True))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        if args.multi_pod and not args.single_pod:
+            meshes = [True]
+        elif args.single_pod and not args.multi_pod:
+            meshes = [False]
+        else:
+            meshes = [False, True]
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        try:
+            run_cell(
+                arch,
+                shape,
+                mp,
+                args.out,
+                seq_parallel=not args.no_seq_parallel,
+                layout=args.layout,
+                tag=args.tag,
+            )
+        except Exception:
+            failures += 1
+            print(f"[FAIL] {arch} x {shape} x {'2x16x16' if mp else '16x16'}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — DP over
+(pod, data), TP/EP over model.  PP extension point: stages over the pod axis
+(not enabled for the assigned 2-pod mesh; see DESIGN.md §6).
+
+Functions, not module constants, so importing never touches jax device state
+(the dry-run must set XLA_FLAGS before any jax initialisation).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever devices exist on this host (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))

@@ -1,0 +1,75 @@
+"""Batched serving driver.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
+        --batch 4 --prompt-len 24 --gen 16
+
+Loads (or random-inits) weights, prefills a batch of prompts, decodes with
+the KV cache (ring buffers for SWA layers), reports tok/s and greedy
+consistency against the teacher-forced forward.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import latest_step, restore
+from repro.configs.registry import ARCH_NAMES, get_config, reduced_config
+from repro.models.transformer import LM
+from repro.serve import ServeConfig, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true", help="CPU-sized config")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--ckpt-dir", default=None, help="restore weights from a training run")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    lm = LM(cfg)
+    params = lm.init(jax.random.key(args.seed))
+    if args.ckpt_dir and (last := latest_step(args.ckpt_dir)) is not None:
+        from repro.train.step import TrainConfig, init_train_state
+
+        tpl = init_train_state(lm, jax.random.key(args.seed), TrainConfig())
+        state, _ = restore(args.ckpt_dir, last, tpl)
+        params = state.params
+        print(f"[serve] restored weights from step {last}")
+
+    engine = ServeEngine(
+        lm, params, ServeConfig(max_len=args.max_len, temperature=args.temperature, seed=args.seed)
+    )
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32
+    )
+    t0 = time.time()
+    out = engine.generate(prompts, args.gen)
+    dt = time.time() - t0
+    print(
+        f"[serve] {cfg.name}: {args.batch}x{args.gen} tokens in {dt:.2f}s "
+        f"({args.batch * args.gen / dt:.1f} tok/s batched)"
+    )
+    if args.temperature == 0.0:
+        logits, _ = lm.forward(params, out[:, :-1])
+        greedy = np.asarray(jnp.argmax(logits[:, args.prompt_len - 1 :], -1))
+        match = float((greedy == np.asarray(out[:, args.prompt_len :])).mean())
+        print(f"[serve] greedy consistency vs teacher-forced forward: {match:.1%}")
+    for row in np.asarray(out[:, args.prompt_len :])[:4]:
+        print("  ", row.tolist())
+
+
+if __name__ == "__main__":
+    main()

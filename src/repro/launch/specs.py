@@ -1,0 +1,208 @@
+"""Dry-run plumbing: ShapeDtypeStruct input specs + lowered step builders.
+
+``input_specs(arch, shape)`` returns weak-type-correct, shardable stand-ins
+for every model input — no device allocation ever happens; the dry-run
+lowers + compiles against these (deliverable e).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ShapeConfig, get_config
+from repro.models.config import ModelConfig
+from repro.models.sharding import (
+    activation_sharding,
+    batch_sharding,
+    cache_shardings,
+    param_shardings,
+)
+from repro.models.transformer import LM
+from repro.train.step import TrainConfig, TrainState, init_train_state, train_state_shardings
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, layout: str = "tp") -> dict:
+    """ShapeDtypeStructs for the data inputs of this (arch x shape) cell."""
+    from repro.models.sharding import full_batch_sharding
+
+    gb, s = shape.global_batch, shape.seq_len
+    tok_sh = full_batch_sharding(mesh, gb) if layout == "dp" else batch_sharding(mesh, gb)
+    if shape.kind == "train":
+        specs = {"tokens": _sds((gb, s), jnp.int32, tok_sh)}
+        if cfg.frontend == "patch":
+            n = cfg.n_frontend_tokens
+            specs["tokens"] = _sds((gb, s - n), jnp.int32, tok_sh)
+            specs["vision_embeds"] = _sds(
+                (gb, n, cfg.d_model), jnp.bfloat16, batch_sharding(mesh, gb, extra_dims=2)
+            )
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((gb, s), jnp.int32, tok_sh)}
+        if cfg.frontend == "patch":
+            n = cfg.n_frontend_tokens
+            specs["tokens"] = _sds((gb, s - n), jnp.int32, tok_sh)
+            specs["vision_embeds"] = _sds(
+                (gb, n, cfg.d_model), jnp.bfloat16, batch_sharding(mesh, gb, extra_dims=2)
+            )
+        return specs
+    if shape.kind == "decode":
+        return {
+            "tokens": _sds((gb, 1), jnp.int32, tok_sh),
+            "index": _sds((), jnp.int32, NamedSharding(mesh, P())),
+        }
+    raise ValueError(shape.kind)
+
+
+@dataclass
+class LoweredCell:
+    arch: str
+    shape: str
+    mesh_desc: str
+    lowered: object
+    abstract_state: object  # whatever the step consumes (for reporting)
+
+
+def _train_templates(lm: LM, mesh: Mesh, layout: str = "tp"):
+    tcfg = TrainConfig()
+    state_tpl = jax.eval_shape(lambda: init_train_state(lm, jax.random.key(0), tcfg))
+    if layout == "dp":
+        from repro.models.sharding import dp_param_shardings
+        from repro.optim.adamw import AdamWState
+        from jax.sharding import NamedSharding
+
+        p_sh = dp_param_shardings(state_tpl.params, mesh)
+        st_sh = TrainState(
+            params=p_sh,
+            opt=AdamWState(mu=p_sh, nu=p_sh, count=NamedSharding(mesh, P())),
+            residuals=None,
+        )
+    else:
+        st_sh = train_state_shardings(state_tpl, mesh)
+    state_tpl = jax.tree.map(
+        lambda t, s: _sds(t.shape, t.dtype, s), state_tpl, st_sh,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    return tcfg, state_tpl, st_sh
+
+
+def _lower_compressed(
+    lm: LM, shape_cfg: ShapeConfig, mesh: Mesh, specs: dict, compress_axis: str | None = None
+):
+    """dp layout + the paper's FD gradient compression replacing the dense
+    DP all-reduce (hillclimb variant; params/opt replicated, ZeRO omitted
+    for clarity of the comm comparison).  ``compress_axis='pod'`` compresses
+    only the inter-pod link (dense intra-pod reduce)."""
+    from jax.sharding import NamedSharding
+
+    from repro.optim.grad_compress import FDCompressConfig
+    from repro.train.step import make_compressed_train_step
+
+    tcfg = TrainConfig(grad_compression=FDCompressConfig(rank=8, sketch_rows=16))
+    state_tpl = jax.eval_shape(lambda: init_train_state(lm, jax.random.key(0), tcfg))
+    rep = jax.tree.map(
+        lambda t: _sds(t.shape, t.dtype, NamedSharding(mesh, P())),
+        state_tpl,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    axes = tuple(mesh.axis_names)
+    dp_total = mesh.devices.size
+    if shape_cfg.global_batch % dp_total:
+        # batch can't cover every chip (e.g. 256 seqs on 512 chips): restrict
+        # the shard_map DP grid to the axes the batch divides; the remaining
+        # axis replicates (the metric of interest here is link traffic).
+        axes = tuple(a for a in axes if a in ("pod", "data"))
+    step = make_compressed_train_step(lm, tcfg, mesh, axes=axes, compress_axis=compress_axis)
+    return step.lower(rep, specs)
+
+
+def lower_cell(
+    arch: str,
+    shape_cfg: ShapeConfig,
+    mesh: Mesh,
+    *,
+    donate: bool = True,
+    seq_parallel: bool = True,
+    layout: str = "tp",
+    cfg_override: ModelConfig | None = None,
+):
+    """Lower (not compile) the step for one (arch x shape x mesh) cell.
+
+    layout="dp": FSDP-style layout for small models — params/optimizer
+    sharded over 'data', batch spread over EVERY mesh axis, no TP/SP.
+    """
+    cfg = cfg_override or get_config(arch)
+    lm = LM(cfg)
+    specs = input_specs(cfg, shape_cfg, mesh, layout=layout)
+    act_ctx = activation_sharding(
+        mesh,
+        seq_axis="model" if (seq_parallel and layout == "tp") else None,
+        dp_over_all=layout == "dp",
+    )
+
+    if shape_cfg.kind == "train":
+        from repro.train.step import make_train_step
+
+        if layout == "dp_compressed":
+            return _lower_compressed(lm, shape_cfg, mesh, specs)
+        if layout == "dp_compressed_pod":
+            return _lower_compressed(lm, shape_cfg, mesh, specs, compress_axis="pod")
+        tcfg, state_tpl, st_sh = _train_templates(lm, mesh, layout)
+        step = make_train_step(lm, tcfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(st_sh, {k: v.sharding for k, v in specs.items()}),
+            out_shardings=(st_sh, None),
+            donate_argnums=(0,) if donate else (),
+        )
+        with act_ctx:
+            return jitted.lower(state_tpl, specs)
+
+    if shape_cfg.kind == "prefill":
+        def prefill_step(params, batch):
+            return lm.prefill(
+                params,
+                batch["tokens"],
+                shape_cfg.seq_len,
+                vision_embeds=batch.get("vision_embeds"),
+            )
+
+        params_tpl = jax.eval_shape(lambda: lm.init(jax.random.key(0)))
+        p_sh = param_shardings(params_tpl, mesh)
+        params_tpl = jax.tree.map(lambda t, s: _sds(t.shape, t.dtype, s), params_tpl, p_sh)
+        jitted = jax.jit(prefill_step, in_shardings=(p_sh, {k: v.sharding for k, v in specs.items()}))
+        with act_ctx:
+            return jitted.lower(params_tpl, specs)
+
+    if shape_cfg.kind == "decode":
+        def serve_step(params, cache, tokens, index):
+            return lm.decode_step(params, cache, tokens, index)
+
+        params_tpl = jax.eval_shape(lambda: lm.init(jax.random.key(0)))
+        p_sh = param_shardings(params_tpl, mesh)
+        params_tpl = jax.tree.map(lambda t, s: _sds(t.shape, t.dtype, s), params_tpl, p_sh)
+        cache_tpl = jax.eval_shape(
+            lambda: lm.init_cache(shape_cfg.global_batch, shape_cfg.seq_len)
+        )
+        c_sh = cache_shardings(
+            cache_tpl, mesh, shape_cfg.global_batch, shard_seq=shape_cfg.name == "long_500k"
+        )
+        cache_tpl = jax.tree.map(lambda t, s: _sds(t.shape, t.dtype, s), cache_tpl, c_sh)
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(p_sh, c_sh, specs["tokens"].sharding, specs["index"].sharding),
+            out_shardings=(None, c_sh),
+            donate_argnums=(1,) if donate else (),
+        )
+        with act_ctx:
+            return jitted.lower(params_tpl, cache_tpl, specs["tokens"], specs["index"])
+
+    raise ValueError(shape_cfg.kind)

@@ -1,0 +1,3 @@
+"""Model zoo: composable decoder stack covering the 10 assigned archs."""
+from repro.models.config import ModelConfig, group_pattern
+from repro.models.transformer import LM

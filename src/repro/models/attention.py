@@ -1,0 +1,234 @@
+"""GQA attention: XLA and Pallas paths, KV caches with ring-buffer SWA.
+
+Modes (driven by ``cache`` and sequence length):
+  * train:   full sequence, no cache.
+  * prefill: full sequence, returns a filled cache.
+  * decode:  T == 1 against a cache.  Local (windowed) layers keep a
+    *ring-buffer* cache of only ``window`` slots — this is what makes
+    ``long_500k`` decode cheap for SWA archs: KV memory is O(window), not
+    O(context).  Global layers keep the full ``max_len`` cache.
+
+Caches are dicts: {"k": (B, KVH, S, Dh), "v": ..., "index": ()} where S is
+window (ring) or max_len (global).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of, linear_init, norm_init, rms_norm, rope
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg) -> dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    dt = dtype_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": linear_init(k1, d, cfg.n_heads * hd, dt),
+        "wk": linear_init(k2, d, cfg.n_kv_heads * hd, dt),
+        "wv": linear_init(k3, d, cfg.n_kv_heads * hd, dt),
+        "wo": linear_init(k4, cfg.n_heads * hd, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(hd)
+        p["k_norm"] = norm_init(hd)
+    return p
+
+
+def init_cache(cfg, batch: int, max_len: int, window: int) -> dict:
+    """Cache for one attention layer.  Ring-buffer sized for local layers."""
+    hd = cfg.resolved_head_dim
+    s = min(max_len, window) if window > 0 else max_len
+    dt = dtype_of(cfg)
+    return {
+        "k": jnp.zeros((batch, cfg.n_kv_heads, s, hd), dt),
+        "v": jnp.zeros((batch, cfg.n_kv_heads, s, hd), dt),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def _qkv(cfg, params, x, positions):
+    b, t, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("btd,dh->bth", x, params["wq"]).reshape(b, t, cfg.n_heads, hd)
+    k = jnp.einsum("btd,dh->bth", x, params["wk"]).reshape(b, t, cfg.n_kv_heads, hd)
+    v = jnp.einsum("btd,dh->bth", x, params["wv"]).reshape(b, t, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _self_attention_xla(cfg, q, k, v, window: int):
+    """Causal attention; q: (B, T, H, Dh), k/v: (B, KVH, S, Dh), fp32 softmax."""
+    b, t, h, hd = q.shape
+    kvh = k.shape[1]
+    group = h // kvh
+    qh = q.reshape(b, t, kvh, group, hd)
+    logits = jnp.einsum("btkgd,bksd->bkgts", qh, k).astype(jnp.float32)
+    logits *= hd**-0.5
+    if cfg.logit_softcap > 0.0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    qpos = jnp.arange(t)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bksd->btkgd", probs, v)
+    return out.reshape(b, t, h, hd)
+
+
+def _self_attention_chunked(cfg, q, k, v, window: int):
+    """Flash-style attention in pure XLA: ``lax.scan`` over q blocks keeps
+    peak memory at one (B, H, BQ, KV-span) logits block instead of (T, T).
+
+    For windowed (local) layers the KV span per q block is a *static-length*
+    dynamic_slice of ``window + BQ`` keys — this is a real FLOP reduction
+    (not just masking), which is what makes 32k-prefill SWA layers cheap.
+    Global causal layers scan the full KV with masking (the causal half-waste
+    is reclaimed by the Pallas kernel on real TPU; see kernels/).
+    """
+    b, t, h, hd = q.shape
+    kvh, s = k.shape[1], k.shape[2]
+    group = h // kvh
+    bq = min(cfg.attn_block_q, t)
+    while t % bq:
+        bq -= 1
+    nq = t // bq
+    span = min(s, window + bq) if window > 0 else s
+
+    qb = q.reshape(b, nq, bq, kvh, group, hd).transpose(1, 0, 3, 4, 2, 5)
+    # (nq, b, kvh, group, bq, hd)
+
+    @jax.checkpoint  # backward recomputes per q-block: O(BQ x span) residency
+    def body(_, inp):
+        qblk, qi = inp
+        qs = qi * bq
+        if window > 0 and span < s:
+            start = jnp.clip(qs + bq - span, 0, s - span)
+            kblk = jax.lax.dynamic_slice_in_dim(k, start, span, axis=2)
+            vblk = jax.lax.dynamic_slice_in_dim(v, start, span, axis=2)
+            kpos = start + jnp.arange(span)
+        else:
+            kblk, vblk = k, v
+            kpos = jnp.arange(s)
+        logits = jnp.einsum("bkgqd,bksd->bkgqs", qblk, kblk).astype(jnp.float32)
+        logits *= hd**-0.5
+        if cfg.logit_softcap > 0.0:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        qpos = qs + jnp.arange(bq)
+        mask = kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgqs,bksd->bkgqd", probs, vblk)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qb, jnp.arange(nq)))
+    # outs: (nq, b, kvh, group, bq, hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, t, h, hd)
+    return out
+
+
+def _self_attention_pallas(cfg, q, k, v, window: int):
+    from repro.kernels.ops import flash_attention
+
+    qt = q.transpose(0, 2, 1, 3)  # (B, H, T, Dh)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(
+        qt, kt, vt, causal=True, window=window, logit_softcap=cfg.logit_softcap
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+def _decode_attention(cfg, q, cache, window: int):
+    """One-token attention against a (possibly ring-buffer) cache.
+
+    q: (B, 1, H, Dh).  Returns (B, 1, H, Dh).
+    """
+    b, _, h, hd = q.shape
+    k, v, index = cache["k"], cache["v"], cache["index"]
+    s = k.shape[2]
+    kvh = k.shape[1]
+    group = h // kvh
+    qh = q.reshape(b, kvh, group, hd)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qh, k).astype(jnp.float32)
+    logits *= hd**-0.5
+    if cfg.logit_softcap > 0.0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    slots = jnp.arange(s)
+    if window > 0 and s == window:
+        # Ring buffer: slot r holds absolute position
+        #   index - ((write_pos - r) mod window), write_pos = index mod window.
+        write_pos = index % window
+        abs_pos = index - ((write_pos - slots) % window)
+        valid = (abs_pos >= 0) & (abs_pos <= index) & (abs_pos > index - window)
+    else:
+        valid = slots <= index
+        if window > 0:
+            valid &= slots > index - window
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bksd->bkgd", probs, v)
+    return out.reshape(b, 1, h, hd)
+
+
+def attn_apply(
+    cfg,
+    params: dict,
+    x: jax.Array,
+    *,
+    window: int,
+    positions: jax.Array,
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """x: (B, T, D).  See module docstring for mode selection."""
+    b, t, d = x.shape
+    hd = cfg.resolved_head_dim
+
+    if cache is not None and t == 1:
+        # ---- decode ----
+        index = cache["index"]
+        q, k, v = _qkv(cfg, params, x, positions)
+        s = cache["k"].shape[2]
+        slot = index % s  # ring for local, linear for global (index < s)
+        knew = cache["k"].at[:, :, slot, :].set(k[:, 0])
+        vnew = cache["v"].at[:, :, slot, :].set(v[:, 0])
+        new_cache = {"k": knew, "v": vnew, "index": index + 1}
+        out = _decode_attention(cfg, q, {**new_cache, "index": index}, window)
+    else:
+        # ---- train / prefill ----
+        q, k, v = _qkv(cfg, params, x, positions)
+        kt = k.transpose(0, 2, 1, 3)  # (B, KVH, T, Dh)
+        vt = v.transpose(0, 2, 1, 3)
+        if cfg.attn_impl == "pallas":
+            out = _self_attention_pallas(cfg, q, kt, vt, window)
+        elif cfg.attn_impl == "xla_chunked":
+            out = _self_attention_chunked(cfg, q, kt, vt, window)
+        else:
+            out = _self_attention_xla(cfg, q, kt, vt, window)
+        new_cache = None
+        if cache is not None:
+            s = cache["k"].shape[2]
+            if s >= t:
+                knew = jax.lax.dynamic_update_slice(cache["k"], kt, (0, 0, 0, 0))
+                vnew = jax.lax.dynamic_update_slice(cache["v"], vt, (0, 0, 0, 0))
+            else:  # ring cache smaller than prompt: keep the tail, ring-aligned
+                # Position p must land in slot p % s so decode's ring indexing
+                # stays consistent: roll the tail by (t - s) % s.
+                knew = jnp.roll(kt[:, :, t - s :, :], (t - s) % s, axis=2)
+                vnew = jnp.roll(vt[:, :, t - s :, :], (t - s) % s, axis=2)
+            new_cache = {"k": knew, "v": vnew, "index": jnp.asarray(t, jnp.int32)}
+
+    out = out.reshape(b, t, cfg.n_heads * hd)
+    y = jnp.einsum("bth,hd->btd", out, params["wo"])
+    return y, new_cache

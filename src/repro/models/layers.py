@@ -1,0 +1,84 @@
+"""Shared neural layers: RMSNorm, RoPE, SwiGLU MLP, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm in f32, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def norm_init(d: int) -> jax.Array:
+    return jnp.zeros((d,), jnp.float32)  # (1 + scale) parameterisation
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., T, n_heads, head_dim); positions: (..., T)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., T, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., T, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def linear_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    if scale is None:
+        scale = d_in**-0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def mlp_init(key, cfg, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": linear_init(k1, d, ff, dt),
+        "w_up": linear_init(k2, d, ff, dt),
+        "w_down": linear_init(k3, ff, d, dt, scale=ff**-0.5),
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array) -> jax.Array:
+    """SwiGLU: w_down(silu(w_gate x) * (w_up x))."""
+    gate = jax.nn.silu(jnp.einsum("...d,df->...f", x, params["w_gate"]))
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    return jnp.einsum("...f,fd->...d", gate * up, params["w_down"])
+
+
+def embed_init(key, cfg) -> dict:
+    dt = dtype_of(cfg)
+    v = cfg.padded_vocab  # padded for clean vocab sharding over "model"
+    p = {"table": (jax.random.normal(key, (v, cfg.d_model), jnp.float32) * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["unembed"] = (jax.random.normal(k2, (v, cfg.d_model), jnp.float32) * 0.02).astype(dt)
+    return p
+
+
+def embed_apply(params: dict, tokens: jax.Array) -> jax.Array:
+    return params["table"][tokens]
+
+
+def unembed_apply(params: dict, x: jax.Array, softcap: float = 0.0, true_vocab: int = 0) -> jax.Array:
+    table = params.get("unembed", params["table"])
+    logits = jnp.einsum("...d,vd->...v", x, table).astype(jnp.float32)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if true_vocab and true_vocab < table.shape[0]:
+        pad_mask = jnp.arange(table.shape[0]) >= true_vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits

@@ -1,0 +1,136 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block structure (Griffin "recurrent block"):
+
+    gate = gelu(x @ W_gate)                                (B, T, W)
+    u    = causal_conv1d(x @ W_in, width=4)                (B, T, W)
+    h    = RG-LRU(u)                                       (B, T, W)
+    y    = (gate * h) @ W_out                              (B, T, D)
+
+RG-LRU recurrence (c = 8, block-diagonal gates with n_heads blocks):
+
+    r_t = sigmoid(u_t @ W_a)          a_t = exp(-c * softplus(Lambda) * r_t)
+    i_t = sigmoid(u_t @ W_i)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over T (parallel prefix,
+the TPU-idiomatic form of the linear recurrence); decode is the O(1) update.
+State: {"h": (B, W) f32, "conv": (B, conv_width-1, W)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of, linear_init
+
+RG_LRU_C = 8.0
+
+
+def rglru_init(key, cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.resolved_rnn_width
+    heads = cfg.n_heads
+    bw = w // heads
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate": linear_init(ks[0], d, w, dt),
+        "w_in": linear_init(ks[1], d, w, dt),
+        "w_out": linear_init(ks[2], w, d, dt, scale=w**-0.5),
+        "conv": (jax.random.normal(ks[3], (cfg.conv_width, w), jnp.float32) * 0.1).astype(dt),
+        "w_a": (jax.random.normal(ks[4], (heads, bw, bw), jnp.float32) * bw**-0.5).astype(dt),
+        "w_i": (jax.random.normal(ks[5], (heads, bw, bw), jnp.float32) * bw**-0.5).astype(dt),
+        # Lambda parameterised so softplus(Lambda) spans slow/fast decay.
+        "lam": jnp.linspace(-2.0, 2.0, w, dtype=jnp.float32),
+    }
+
+
+def init_state(cfg, batch: int) -> dict:
+    w = cfg.resolved_rnn_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype_of(cfg)),
+    }
+
+
+def _causal_conv(u: jax.Array, weight: jax.Array, tail: jax.Array | None):
+    """Depthwise causal conv along T.  u: (B, T, W); weight: (cw, W).
+    ``tail``: (B, cw-1, W) carry-in (decode/prefill continuation)."""
+    cw = weight.shape[0]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([tail, u], axis=1)  # (B, T+cw-1, W)
+    out = sum(ext[:, i : i + u.shape[1], :] * weight[i][None, None, :] for i in range(cw))
+    new_tail = ext[:, -(cw - 1) :, :] if cw > 1 else tail
+    return out, new_tail
+
+
+def _block_diag_gate(u: jax.Array, w: jax.Array) -> jax.Array:
+    """u: (..., W) with W = heads*bw; w: (heads, bw, bw)."""
+    heads, bw, _ = w.shape
+    uh = u.reshape(u.shape[:-1] + (heads, bw))
+    out = jnp.einsum("...hb,hbc->...hc", uh, w)
+    return out.reshape(u.shape)
+
+
+CHUNK = 256
+
+
+def _gates_and_coeffs(params, u_chunk):
+    """Per-chunk gate math in f32: returns (a, v) recurrence coefficients."""
+    uf = u_chunk.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_diag_gate(uf, params["w_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(_block_diag_gate(uf, params["w_i"].astype(jnp.float32)))
+    log_a = -RG_LRU_C * jax.nn.softplus(params["lam"]) * r  # <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * uf)
+
+
+def _combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+
+def rglru_apply(cfg, params: dict, x: jax.Array, state: dict | None = None):
+    """x: (B, T, D) -> (y, new_state).  state=None => training (no carry).
+
+    Training/prefill runs a chunked parallel scan: gates + the associative
+    scan are computed per CHUNK-token slab inside a rematted ``lax.scan``
+    (carrying h across slabs), so full-sequence f32 gate tensors never
+    materialise — the same residency discipline as the SSD block.
+    """
+    b, t, _ = x.shape
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, params["w_gate"]))
+    u = jnp.einsum("btd,dw->btw", x, params["w_in"])
+    tail = state["conv"] if state is not None else None
+    u, new_tail = _causal_conv(u, params["conv"], tail)
+    w = u.shape[-1]
+
+    h0 = state["h"] if state is not None else jnp.zeros((b, w), jnp.float32)
+    if t == 1 and state is not None:
+        a, v = _gates_and_coeffs(params, u)
+        h = a[:, 0] * h0 + v[:, 0]
+        hs = h[:, None].astype(x.dtype)
+    else:
+        q = min(CHUNK, t)
+        while t % q:
+            q -= 1
+        nc = t // q
+        uc = u.reshape(b, nc, q, w).transpose(1, 0, 2, 3)  # (nc, B, q, W)
+
+        @jax.checkpoint
+        def body(h, u_c):
+            a, v = _gates_and_coeffs(params, u_c)
+            v = v.at[:, 0].add(a[:, 0] * h)
+            _, hs_c = jax.lax.associative_scan(_combine, (a, v), axis=1)
+            return hs_c[:, -1], hs_c.astype(x.dtype)
+
+        h, hs = jax.lax.scan(body, h0, uc)
+        hs = hs.transpose(1, 0, 2, 3).reshape(b, t, w)
+
+    y = jnp.einsum("btw,wd->btd", gate * hs, params["w_out"])
+    new_state = {"h": h, "conv": new_tail} if state is not None else None
+    return y, new_state

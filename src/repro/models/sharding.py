@@ -1,0 +1,274 @@
+"""Parameter/activation sharding rules for the production meshes.
+
+Axis convention: ``model`` = tensor/expert parallel, ``data`` (and ``pod``)
+= data parallel.  Rules are *adaptive*: a dimension is only sharded if the
+mesh axis size divides it (e.g. smollm's 9 heads fall back to replicated
+attention projections instead of failing to lower) — this is what makes one
+rule set serve all 10 assigned architectures.
+
+Trailing-dim templates: a rule names the spec of the *last* ``len(rule)``
+dims; any extra leading dims (scan-group stacking) get None.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# --- activation sharding (sequence parallelism) -----------------------------
+# The residual stream between blocks is constrained to
+#   P(dp_axes, "model", None)   (batch over DP, sequence over the TP axis)
+# which shrinks the per-layer scan-boundary saves by the TP degree
+# (Korthikanti-style sequence parallelism; XLA SPMD inserts the
+# all-gather/reduce-scatter pairs around the TP matmuls).
+
+_ACT_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_act_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, *, seq_axis: str | None = "model", dp_over_all: bool = False):
+    """Enable residual-stream sharding constraints during tracing.
+
+    ``dp_over_all``: the FSDP/dp layout — every mesh axis acts as data
+    parallelism (used for models too small to tensor-parallelize)."""
+    dp = tuple(mesh.axis_names) if dp_over_all else data_axes(mesh)
+    if dp_over_all:
+        seq_axis = None
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    ctx = {
+        "mesh": mesh,
+        "dp": dp,
+        "dp_size": dp_size,
+        "seq": seq_axis,
+        "seq_size": mesh.shape.get(seq_axis, 1) if seq_axis else 1,
+        "model_size": mesh.shape.get("model", 1),
+    }
+    tok = _ACT_CTX.set(ctx)
+    try:
+        yield
+    finally:
+        _ACT_CTX.reset(tok)
+
+
+def current_dp_size() -> int:
+    """DP degree from the active activation-sharding context (1 outside)."""
+    ctx = _ACT_CTX.get()
+    return ctx["dp_size"] if ctx else 1
+
+
+def current_ctx():
+    return _ACT_CTX.get()
+
+
+def constrain_moe_tokens(x):
+    """(G, n_local, d) grouped-token constraint: groups over DP."""
+    ctx = _ACT_CTX.get()
+    if ctx is None or x.ndim != 3:
+        return x
+    if ctx["dp_size"] > 1 and x.shape[0] % ctx["dp_size"] == 0:
+        return jax.lax.with_sharding_constraint(x, P(ctx["dp"], None, None))
+    return x
+
+
+def constrain_moe_experts(x):
+    """(G, E, C, d) expert-buffer constraint: groups over DP, experts over
+    the model axis when divisible (the dispatch all-to-all boundary)."""
+    ctx = _ACT_CTX.get()
+    if ctx is None or x.ndim != 4:
+        return x
+    dp = ctx["dp"] if ctx["dp_size"] > 1 and x.shape[0] % ctx["dp_size"] == 0 else None
+    mdl = (
+        ctx["seq"]
+        if ctx["seq"] and ctx["seq_size"] > 1 and x.shape[1] % ctx["seq_size"] == 0
+        else None
+    )
+    if dp is None and mdl is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(dp, mdl, None, None))
+
+
+def constrain_residual(x):
+    """Apply the residual-stream constraint to a (B, T, D) activation (no-op
+    outside an activation_sharding context or for non-dividing shapes)."""
+    ctx = _ACT_CTX.get()
+    if ctx is None or x.ndim != 3:
+        return x
+    b, t, _ = x.shape
+    batch_ok = ctx["dp_size"] > 1 and b % ctx["dp_size"] == 0
+    # XLA pads non-dividing shardings; only skip degenerate tiny-T cases.
+    seq_ok = ctx["seq"] is not None and ctx["seq_size"] > 1 and t >= 4 * ctx["seq_size"]
+    spec = P(
+        ctx["dp"] if batch_ok else None,
+        ctx["seq"] if seq_ok else None,
+        None,
+    )
+    if spec == P(None, None, None):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+# (path regex, trailing-dim axis template)
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed/(table|unembed)$", ("model", None)),
+    (r"attn/(wq|wk|wv)$", (None, "model")),
+    (r"attn/wo$", ("model", None)),
+    (r"ffn/router$", (None, None)),
+    (r"ffn/(w_gate|w_up)$", "FFN_IN"),  # 2D (d,ff) or 3D MoE (e,d,ff)
+    (r"ffn/w_down$", "FFN_OUT"),
+    (r"mixer/(w_gate|w_in)$", (None, "model")),
+    (r"mixer/w_out$", ("model", None)),
+    (r"mixer/conv$", (None, "model")),
+    (r"mixer/(w_a|w_i)$", (None, None, None)),
+]
+
+
+def _resolve_template(template, ndim: int) -> list[tuple]:
+    """Candidate trailing-dim specs, best first (EP if E divides, else TP
+    over the ff dim — e.g. mixtral's 8 experts on a 16-way model axis)."""
+    if template == "FFN_IN":
+        if ndim >= 3:
+            return [("model", None, None), (None, None, "model")]
+        return [(None, "model")]
+    if template == "FFN_OUT":
+        if ndim >= 3:
+            return [("model", None, None), (None, "model", None)]
+        return [("model", None)]
+    return [template]
+
+
+def _spec_for(path: str, shape: tuple[int, ...], mesh_axes: dict[str, int]) -> P:
+    for pat, template in _RULES:
+        if not re.search(pat, path):
+            continue
+        candidates = _resolve_template(template, len(shape))
+        best = None
+        for tmpl in candidates:
+            tmpl = tuple(tmpl)
+            n_lead = len(shape) - len(tmpl)
+            if n_lead < 0:  # rule wider than leaf (shouldn't happen)
+                continue
+            full = (None,) * n_lead + tmpl
+            # Adaptive: drop axes that don't divide the dim.
+            checked = tuple(
+                ax if (ax is not None and shape[i] % mesh_axes.get(ax, 1) == 0) else None
+                for i, ax in enumerate(full)
+            )
+            if best is None:
+                best = checked
+            if any(ax is not None for ax in checked):
+                return P(*checked)  # first candidate that actually shards
+        return P(*best) if best else P()
+    return P()  # norms, scalars, biases: replicated
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_shardings(params, mesh: Mesh):
+    """NamedSharding pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(path, leaf):
+        spec = _spec_for(_path_str(path), leaf.shape, axes)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a production mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_param_shardings(params, mesh: Mesh):
+    """FSDP/ZeRO-3-style layout for models too small to tensor-parallelize:
+    every matrix is sharded over the *data* axis on its largest dividing dim
+    (XLA all-gathers weights per layer); no TP.  Used with the batch spread
+    over ALL mesh axes (the 'model' axis becomes extra data parallelism)."""
+    data = mesh.shape.get("data", 1)
+
+    def one(path, leaf):
+        spec = [None] * len(leaf.shape)
+        if data > 1 and leaf.ndim >= 2:
+            dims = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+            for i in dims:
+                if leaf.shape[i] % data == 0 and leaf.shape[i] >= data:
+                    spec[i] = "data"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def full_batch_sharding(mesh: Mesh, batch: int, extra_dims: int = 1):
+    """Batch sharded over every mesh axis (dp layout)."""
+    axes = tuple(mesh.axis_names)
+    size = mesh.devices.size
+    if batch % size == 0 and size > 1:
+        return NamedSharding(mesh, P(axes, *([None] * extra_dims)))
+    return batch_sharding(mesh, batch, extra_dims)
+
+
+def batch_sharding(mesh: Mesh, batch: int, extra_dims: int = 1):
+    """Sharding for a (batch, ...) input: batch over the DP axes if they
+    divide it, else replicated (long_500k has batch=1)."""
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if batch % dp_size == 0 and dp_size > 1:
+        return NamedSharding(mesh, P(dp, *([None] * extra_dims)))
+    return NamedSharding(mesh, P(*([None] * (1 + extra_dims))))
+
+
+def cache_shardings(cache, mesh: Mesh, batch: int, shard_seq: bool):
+    """Shardings for a decode cache pytree.
+
+    Default: batch over DP axes.  ``shard_seq`` (long_500k, batch=1):
+    KV seq dim over "data" (context parallelism); recurrent states
+    replicated over DP (they are O(1) per sequence).
+    """
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def one(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        # Leading dims may include a scan-stack axis; find the batch dim by
+        # structure: caches are (stack?, B, KVH, S, Dh) for kv, (stack?, B, ...)
+        # for recurrent states, () for index scalars.
+        if not shape:
+            return NamedSharding(mesh, P())
+        if shape[0] == batch:
+            lead = 0
+        elif len(shape) > 1 and shape[1] == batch:
+            lead = 1  # scan-stacked cache: (repeats, B, ...)
+        else:
+            lead = -1
+        if lead >= 0 and batch % dp_size == 0 and dp_size > 1:
+            spec[lead] = dp
+        if shard_seq and re.search(r"/(k|v)$", name) and len(shape) >= 3:
+            seq_dim = len(shape) - 2
+            if shape[seq_dim] % axes.get("data", 1) == 0:
+                spec[seq_dim] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

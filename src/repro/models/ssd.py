@@ -1,0 +1,161 @@
+"""Mamba-2 SSD block (state-space duality, chunked dual form).
+
+The block (no separate MLP — SSD blocks are self-contained):
+
+    z, xBC, dt = split(x @ W_in)
+    xBC        = silu(causal_conv1d(xBC, width=4))
+    xs, B, C   = split(xBC)                      # B, C: (B, T, N), one group
+    y          = SSD(xs, dt, A, B, C) + D * xs   # multi-head, P = head_dim
+    out        = (rmsnorm(y) * silu(z)) @ W_out  # gated norm, mamba2-style
+
+Training/prefill runs the *chunked* SSD algorithm: quadratic attention-like
+math within chunks of Q tokens (MXU-friendly), a linear ``lax.scan`` carrying
+the (H, P, N) state across chunks.  Decode is the O(1) recurrent update
+
+    h = exp(dt*A) h + dt * B (x)          y = C h + D x
+
+State: {"h": (B, H, P, N) f32, "conv": (B, cw-1, conv_channels)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of, linear_init
+
+CHUNK = 256
+
+
+def _dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    p = cfg.ssm_head_dim
+    h = di // p
+    n = cfg.ssm_state
+    return di, h, p, n
+
+
+def ssd_init(key, cfg) -> dict:
+    d = cfg.d_model
+    di, h, p, n = _dims(cfg)
+    conv_ch = di + 2 * n
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input projection: [z (di), xBC (di + 2n), dt (h)]
+        "w_in": linear_init(ks[0], d, 2 * di + 2 * n + h, dt),
+        "w_out": linear_init(ks[1], di, d, dt, scale=di**-0.5),
+        "conv": (jax.random.normal(ks[2], (cfg.conv_width, conv_ch), jnp.float32) * 0.1).astype(dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01, jnp.float32))),  # softplus^-1
+        "norm": jnp.zeros((di,), jnp.float32),
+    }
+
+
+def init_state(cfg, batch: int) -> dict:
+    di, h, p, n = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * n), dtype_of(cfg)),
+    }
+
+
+def _causal_conv(u, weight, tail):
+    cw = weight.shape[0]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([tail, u], axis=1)
+    out = sum(ext[:, i : i + u.shape[1], :] * weight[i][None, None, :] for i in range(cw))
+    new_tail = ext[:, -(cw - 1) :, :] if cw > 1 else tail
+    return out, new_tail
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., q) -> (..., q, q) lower-triangular pairwise cumulative sums."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(xs, dt, a, bm, cm, h0):
+    """Chunked SSD.  xs: (B,T,H,P); dt: (B,T,H); a: (H,) (negative);
+    bm, cm: (B,T,N); h0: (B,H,P,N).  Returns (y, h_final).
+
+    All per-chunk math (decay kernel, intra-chunk quadratic form, state
+    update) lives *inside* a rematted ``lax.scan`` body, so peak residency is
+    one chunk's (q x q) decay kernel, never (T/q) of them."""
+    b, t, h, p = xs.shape
+    n = bm.shape[-1]
+    q = min(CHUNK, t)
+    while t % q:  # largest divisor <= CHUNK (trace-time only)
+        q -= 1
+    nc = t // q
+
+    xc = xs.reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4)  # (nc,b,q,h,p)
+    dtc = dt.reshape(b, nc, q, h).transpose(1, 0, 2, 3)
+    bc = bm.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    cc = cm.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+
+    @jax.checkpoint
+    def step(h_prev, inp):
+        x_c, dt_c, b_c, c_c = inp  # (b,q,h,p), (b,q,h), (b,q,n), (b,q,n)
+        x_c = x_c.astype(jnp.float32)
+        b_c = b_c.astype(jnp.float32)
+        c_c = c_c.astype(jnp.float32)
+        da = (dt_c * a[None, None, :]).transpose(0, 2, 1)  # (b,h,q), <= 0
+        da_cum = jnp.cumsum(da, axis=-1)
+        da_sum = da_cum[..., -1]  # (b,h)
+        # intra-chunk quadratic form
+        l_mat = jnp.exp(_segsum(da))  # (b,h,q,q)
+        scores = jnp.einsum("bln,bsn->bls", c_c, b_c)  # (b,q,q)
+        xdt = x_c * dt_c[..., None]  # (b,q,h,p)
+        y_diag = jnp.einsum("bls,bhls,bshp->blhp", scores, l_mat, xdt)
+        # carried-state contribution + state update
+        y_off = jnp.einsum("bln,bhpn,bhl->blhp", c_c, h_prev, jnp.exp(da_cum))
+        decay_states = jnp.exp(da_sum[..., None] - da_cum)  # (b,h,q)
+        s_c = jnp.einsum("bsn,bhs,bshp->bhpn", b_c, decay_states, xdt)
+        h_new = jnp.exp(da_sum)[..., None, None] * h_prev + s_c
+        return h_new, (y_diag + y_off).astype(xs.dtype)
+
+    h_final, y = jax.lax.scan(step, h0.astype(jnp.float32), (xc, dtc, bc, cc))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(b, t, h, p)
+    return y, h_final
+
+
+def ssd_apply(cfg, params: dict, x: jax.Array, state: dict | None = None):
+    """x: (B, T, D) -> (y, new_state)."""
+    b, t, d = x.shape
+    di, h, p, n = _dims(cfg)
+    proj = jnp.einsum("btd,dk->btk", x, params["w_in"])
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    tail = state["conv"] if state is not None else None
+    xbc, new_tail = _causal_conv(xbc, params["conv"], tail)
+    xbc = jax.nn.silu(xbc)
+    xs, bm, cm = jnp.split(xbc, [di, di + n], axis=-1)
+    xs = xs.reshape(b, t, h, p)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,T,H)
+    a = -jnp.exp(params["a_log"])  # (H,), negative
+
+    h0 = state["h"] if state is not None else jnp.zeros((b, h, p, n), jnp.float32)
+    if t == 1 and state is not None:
+        da = jnp.exp(dt[:, 0] * a[None, :])  # (B, H)
+        inc = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xs[:, 0].astype(jnp.float32), bm[:, 0].astype(jnp.float32))
+        h_new = da[..., None, None] * h0 + inc
+        y = jnp.einsum("bn,bhpn->bhp", cm[:, 0].astype(jnp.float32), h_new)[:, None]
+        y = y.reshape(b, 1, h, p)
+        h_final = h_new
+    else:
+        y, h_final = _ssd_chunked(xs, dt, a, bm, cm, h0)
+
+    y = y + (params["d_skip"][None, None, :, None] * xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, t, di)
+    # gated RMSNorm (mamba2): norm(y) * silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yn = yf * jax.lax.rsqrt(var + cfg.norm_eps) * (1.0 + params["norm"])
+    gated = (yn * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("btk,kd->btd", gated, params["w_out"])
+    new_state = {"h": h_final, "conv": new_tail} if state is not None else None
+    return out, new_state

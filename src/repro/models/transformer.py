@@ -1,0 +1,289 @@
+"""Model assembly: blocks, scan-group stacking, train/prefill/decode.
+
+The layer pattern from the config is folded into scan groups
+(``config.group_pattern``): each group is a block of ``p`` layer kinds
+repeated ``k`` times; params/caches carry a leading ``k`` axis and the group
+executes as one ``lax.scan`` — a 94-layer MoE compiles as a single loop body.
+
+Block shapes:
+    global/local:  x += attn(norm(x));  x += ffn(norm(x))   (ffn = MLP | MoE)
+    rglru:         x += rglru(norm(x)); x += mlp(norm(x))
+    ssd:           x += ssd(norm(x))                         (self-contained)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, moe, rglru, sharding, ssd
+from repro.models.config import ModelConfig, group_pattern
+from repro.models.layers import (
+    dtype_of,
+    embed_apply,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    norm_init,
+    rms_norm,
+    unembed_apply,
+)
+
+ATTN_KINDS = ("global", "local")
+
+
+# ---------------------------------------------------------------------------
+# Single blocks
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    if kind in ATTN_KINDS:
+        ffn = moe.moe_init(k2, cfg) if cfg.is_moe else mlp_init(k2, cfg)
+        return {
+            "norm1": norm_init(d),
+            "attn": attention.attn_init(k1, cfg),
+            "norm2": norm_init(d),
+            "ffn": ffn,
+        }
+    if kind == "rglru":
+        return {
+            "norm1": norm_init(d),
+            "mixer": rglru.rglru_init(k1, cfg),
+            "norm2": norm_init(d),
+            "ffn": mlp_init(k2, cfg),
+        }
+    if kind == "ssd":
+        return {"norm": norm_init(d), "mixer": ssd.ssd_init(k1, cfg)}
+    raise ValueError(f"unknown layer kind {kind}")
+
+
+def block_apply(cfg: ModelConfig, kind: str, params: dict, x, positions, cache):
+    if kind in ATTN_KINDS:
+        window = cfg.window if kind == "local" else 0
+        h, new_cache = attention.attn_apply(
+            cfg,
+            params["attn"],
+            rms_norm(x, params["norm1"], cfg.norm_eps),
+            window=window,
+            positions=positions,
+            cache=cache,
+        )
+        x = x + h
+        hin = rms_norm(x, params["norm2"], cfg.norm_eps)
+        f = moe.moe_apply(cfg, params["ffn"], hin) if cfg.is_moe else mlp_apply(params["ffn"], hin)
+        return x + f, new_cache
+    if kind == "rglru":
+        h, new_cache = rglru.rglru_apply(
+            cfg, params["mixer"], rms_norm(x, params["norm1"], cfg.norm_eps), cache
+        )
+        x = x + h
+        f = mlp_apply(params["ffn"], rms_norm(x, params["norm2"], cfg.norm_eps))
+        return x + f, new_cache
+    if kind == "ssd":
+        h, new_cache = ssd.ssd_apply(
+            cfg, params["mixer"], rms_norm(x, params["norm"], cfg.norm_eps), cache
+        )
+        return x + h, new_cache
+    raise ValueError(kind)
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int) -> dict:
+    if kind in ATTN_KINDS:
+        window = cfg.window if kind == "local" else 0
+        return attention.init_cache(cfg, batch, max_len, window)
+    if kind == "rglru":
+        return rglru.init_state(cfg, batch)
+    if kind == "ssd":
+        return ssd.init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+
+class LM:
+    """Decoder LM over the configured layer pattern.
+
+    Params pytree:
+      {"embed": {...}, "groups": [group_params, ...], "final_norm": arr}
+    where group_params = {"pos{i}": block_params} with leaves stacked over
+    the group's repeat axis (absent if repeats == 1).
+    """
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        if cfg.scan_unroll:  # cost-accounting mode: no while loops in HLO
+            self.groups = [((k,), 1) for k in cfg.pattern()]
+        else:
+            self.groups = group_pattern(cfg.pattern())  # [(kinds, repeats)]
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, len(self.groups) + 1)
+        groups = []
+        for (kinds, repeats), gk in zip(self.groups, keys[:-1]):
+            pos_params = {}
+            for i, kind in enumerate(kinds):
+                if repeats == 1:
+                    pos_params[f"pos{i}"] = block_init(jax.random.fold_in(gk, i), cfg, kind)
+                else:
+                    ks = jax.random.split(jax.random.fold_in(gk, i), repeats)
+                    stacked = jax.vmap(lambda k: block_init(k, cfg, kind))(ks)
+                    pos_params[f"pos{i}"] = stacked
+            groups.append(pos_params)
+        return {
+            "embed": embed_init(keys[-1], cfg),
+            "groups": groups,
+            "final_norm": norm_init(cfg.d_model),
+        }
+
+    def init_cache(self, batch: int, max_len: int) -> list:
+        cfg = self.cfg
+        caches = []
+        for kinds, repeats in self.groups:
+            pos_cache = {}
+            for i, kind in enumerate(kinds):
+                c = block_cache_init(cfg, kind, batch, max_len)
+                if repeats > 1:
+                    c = jax.tree.map(lambda a: jnp.broadcast_to(a, (repeats,) + a.shape), c)
+                pos_cache[f"pos{i}"] = c
+            caches.append(pos_cache)
+        return caches
+
+    # -- forward ------------------------------------------------------------
+
+    def _run_group(self, kinds, repeats, gparams, x, positions, gcache):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h = carry
+            params_t, cache_t = xs
+            new_caches = {}
+            for i, kind in enumerate(kinds):
+                c = cache_t[f"pos{i}"] if cache_t is not None else None
+                h, nc = block_apply(cfg, kind, params_t[f"pos{i}"], h, positions, c)
+                if nc is not None:
+                    new_caches[f"pos{i}"] = nc
+            h = sharding.constrain_residual(h)  # sequence-parallel boundaries
+            return h, (new_caches if new_caches else None)
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+
+        if repeats == 1:
+            x, new_cache = body(x, (gparams, gcache))
+            return x, new_cache
+        x, new_cache = jax.lax.scan(body, x, (gparams, gcache))
+        return x, new_cache
+
+    def hidden(
+        self,
+        params: dict,
+        tokens: jax.Array,
+        *,
+        vision_embeds: jax.Array | None = None,
+        cache: list | None = None,
+        index: jax.Array | None = None,
+    ):
+        """Final-norm hidden states (frontend positions stripped) + cache.
+
+        * train/prefill: index=None, positions = arange(T) (plus frontend
+          offset); cache=None (train) or init_cache output (prefill).
+        * decode: T == 1 and ``index`` = current position scalar.
+        """
+        cfg = self.cfg
+        b, t = tokens.shape
+        x = embed_apply(params["embed"], tokens)
+        n_front = 0
+        if vision_embeds is not None:
+            n_front = vision_embeds.shape[1]
+            x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+        if index is None:
+            positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :].repeat(b, 0)
+        else:
+            positions = jnp.full((b, x.shape[1]), index, jnp.int32)
+        x = sharding.constrain_residual(x)
+
+        new_caches = []
+        for (kinds, repeats), gparams, gcache in zip(
+            self.groups,
+            params["groups"],
+            cache if cache is not None else [None] * len(self.groups),
+        ):
+            x, nc = self._run_group(kinds, repeats, gparams, x, positions, gcache)
+            new_caches.append(nc)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if n_front:
+            x = x[:, n_front:]
+        return x, (new_caches if cache is not None else None)
+
+    def forward(self, params, tokens, *, vision_embeds=None, cache=None, index=None):
+        """Full logits (small sequences / decode).  (logits, new_cache)."""
+        x, new_cache = self.hidden(
+            params, tokens, vision_embeds=vision_embeds, cache=cache, index=index
+        )
+        logits = unembed_apply(params["embed"], x, true_vocab=self.cfg.vocab_size)
+        return logits, new_cache
+
+    # -- convenience entry points (used by launch/, tests, examples) --------
+
+    def loss(self, params, batch: dict, *, loss_chunk: int = 1024) -> jax.Array:
+        """Next-token CE with *chunked* unembedding: the (B, chunk, V) f32
+        logits block is the only vocab-sized activation ever materialised
+        (rematted in backward), instead of a (B, T, V) monster."""
+        tokens = batch["tokens"]
+        # Full-T hidden pass (keeps T divisible by attention/scan blocks);
+        # the final position has no target and is masked out below.
+        x, _ = self.hidden(
+            params, tokens, vision_embeds=batch.get("vision_embeds")
+        )
+        targets = jnp.concatenate(
+            [tokens[:, 1:], jnp.full((tokens.shape[0], 1), -1, tokens.dtype)], axis=1
+        )
+        b, t, d = x.shape
+        chunk = min(loss_chunk, t)
+        pad = (-t) % chunk
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+        nc = (t + pad) // chunk
+        xs = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+        ts = targets.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+        @jax.checkpoint
+        def body(carry, inp):
+            xc, tc = inp
+            logits = unembed_apply(params["embed"], xc, true_vocab=self.cfg.vocab_size)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            tgt = jnp.take_along_axis(logits, jnp.maximum(tc, 0)[..., None], axis=-1)[..., 0]
+            mask = (tc >= 0).astype(jnp.float32)
+            return carry + jnp.sum((lse - tgt) * mask), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ts))
+        return total / (b * (tokens.shape[1] - 1))
+
+    def decode_step(self, params, cache, tokens, index):
+        """One serving step: tokens (B, 1), index () -> (logits, new_cache)."""
+        return self.forward(params, tokens, cache=cache, index=index)
+
+    def prefill(self, params, tokens, max_len: int, vision_embeds=None):
+        """Returns (*last-position* logits (B, V), cache) — the production
+        semantics; full-prompt logits are never materialised."""
+        cache = self.init_cache(tokens.shape[0], max_len)
+        x, cache = self.hidden(
+            params, tokens, cache=cache, vision_embeds=vision_embeds
+        )
+        logits = unembed_apply(
+            params["embed"], x[:, -1:], true_vocab=self.cfg.vocab_size
+        )
+        return logits[:, 0], cache

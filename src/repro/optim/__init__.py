@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_state_shardings, adamw_update
+from repro.optim.grad_compress import FDCompressConfig, compress_and_aggregate, init_residuals
+from repro.optim.schedule import warmup_cosine

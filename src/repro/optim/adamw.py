@@ -1,0 +1,81 @@
+"""AdamW with ZeRO-1-ready state sharding (functional, pytree-based)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+class AdamWState(NamedTuple):
+    mu: dict
+    nu: dict
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr: jax.Array | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+):
+    """Returns (new_params, new_state).  Global-norm clip, decoupled WD."""
+    gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if grad_clip > 0:
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g * g) for g in jax.tree.leaves(gf)) + 1e-12
+        )
+        scale = jnp.minimum(1.0, grad_clip / gnorm)
+        gf = jax.tree.map(lambda g: g * scale, gf)
+    count = state.count + 1
+    c1 = 1.0 - b1**count.astype(jnp.float32)
+    c2 = 1.0 - b2**count.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, gf)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, gf)
+
+    def step(p, m, v):
+        update = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        if weight_decay > 0 and p.ndim >= 2:  # no decay on norms/biases
+            update = update + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+
+    new_params = jax.tree.map(step, params, mu, nu)
+    return new_params, AdamWState(mu=mu, nu=nu, count=count)
+
+
+def adamw_state_shardings(params_template, param_shardings, mesh: Mesh) -> AdamWState:
+    """ZeRO-1: shard m/v additionally over the DP 'data' axis on the first
+    dimension that is unsharded and divisible — cuts optimizer memory by the
+    DP degree without changing any math (the update is elementwise)."""
+    data = mesh.shape.get("data", 1)
+
+    def zero1(sh: NamedSharding, leaf):
+        spec = list(sh.spec)
+        spec += [None] * (leaf.ndim - len(spec))
+        if data > 1:
+            for i, (ax, dim) in enumerate(zip(spec, leaf.shape)):
+                if ax is None and dim % data == 0 and dim >= data:
+                    spec[i] = "data"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    mv = jax.tree.map(zero1, param_shardings, params_template)
+    return AdamWState(mu=mv, nu=mv, count=NamedSharding(mesh, P()))

@@ -1,0 +1,108 @@
+"""FD-sketched data-parallel gradient aggregation with error feedback.
+
+The paper's distributed matrix protocol, applied as a *gradient compression*
+distributed-optimization trick.  In data-parallel training each shard j holds
+a local gradient G_j for every 2D parameter (d_in rows of dimension d_out):
+exactly the paper's "distributed matrix whose rows arrive at m sites".
+Instead of all-reducing d_in x d_out floats:
+
+  1. each shard FD-sketches  (G_j + residual_j)  ->  B_j (l, d_out)
+  2. all_gather + FD-merge the sketches          ->  B   (l, d_out)
+     (this is the paper's P1 merge; comm = m * l * d_out, replicated result)
+  3. the top-k rows of B, normalized, form a shared basis V (k, d_out) —
+     the FD guarantee says V captures every direction with squared mass
+     >= ||G||_F^2 / l of the *global* gradient;
+  4. project-and-reduce: P = pmean_j(G_j' @ V.T)  (comm = d_in * k)
+  5. decompress ghat = P @ V; error feedback residual_j = G_j' - (G_j'V^T)V.
+
+Compression ratio per layer: (d_in*d_out) / (m*l*d_out/m + d_in*k)
+~ d_out / k for the usual d_in >> m*l regime.  Error feedback makes the
+scheme convergent despite the lossy step (PowerSGD-style); the FD guarantee
+bounds the per-step bias by ||G||_F^2 / l along every direction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import fd as fdlib
+
+
+class FDCompressConfig(NamedTuple):
+    rank: int = 8  # k: basis size communicated densely
+    sketch_rows: int = 16  # l: FD sketch parameter (l >= k)
+    axis: str = "data"  # DP axis name inside shard_map
+    min_size: int = 4096  # small tensors use plain psum
+
+
+def _is_matrix(leaf) -> bool:
+    return leaf.ndim >= 2
+
+
+def init_residuals(params) -> dict:
+    """Error-feedback buffers: zeros for matrices, () placeholder otherwise."""
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape if _is_matrix(p) else (), jnp.float32), params
+    )
+
+
+class CompressionStats(NamedTuple):
+    full_bytes: jax.Array  # what a dense all-reduce would have moved
+    compressed_bytes: jax.Array  # what this scheme moved
+
+
+def compress_and_aggregate(
+    grads,
+    residuals,
+    cfg: FDCompressConfig,
+):
+    """Inside shard_map over cfg.axis: per-shard grads -> (global grads,
+    new residuals, stats).  Non-matrix (or small) leaves take plain pmean."""
+    l, k = cfg.sketch_rows, cfg.rank
+    full_bytes = jnp.zeros((), jnp.float32)
+    comp_bytes = jnp.zeros((), jnp.float32)
+    m = lax.psum(1, cfg.axis)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out_g, out_r = [], []
+    for g, r in zip(flat_g, flat_r):
+        size = g.size
+        if (not _is_matrix(g)) or size < cfg.min_size or g.shape[-1] < 2 * k:
+            out_g.append(lax.pmean(g, cfg.axis))
+            out_r.append(r)
+            full_bytes += 4.0 * size
+            comp_bytes += 4.0 * size
+            continue
+        d_out = g.shape[-1]
+        rows = size // d_out
+        acc = g.reshape(rows, d_out).astype(jnp.float32) + r.reshape(rows, d_out)
+
+        # 1. local sketch
+        st = fdlib.fd_init(l, d_out)
+        st = fdlib.fd_update_stream(st, acc)
+        b_local = fdlib.fd_matrix(st)  # (l, d_out)
+        # 2. gather + merge (paper P1 merge: stack and re-sketch)
+        gathered = lax.all_gather(b_local, cfg.axis).reshape(m * l, d_out)
+        st_m = fdlib.fd_init(l, d_out)
+        st_m = fdlib.fd_update_stream(st_m, gathered)
+        b = fdlib.fd_matrix(st_m)
+        # 3. orthonormal basis from top-k sketch rows (rows are sigma_i v_i)
+        norms = jnp.sqrt(jnp.sum(b * b, axis=1, keepdims=True))
+        v = (b / jnp.maximum(norms, 1e-12))[:k]  # (k, d_out)
+        # 4. project and reduce
+        p_local = acc @ v.T  # (rows, k)
+        p = lax.pmean(p_local, cfg.axis)
+        # 5. decompress + error feedback
+        ghat = p @ v
+        new_r = acc - p_local @ v
+        out_g.append(ghat.reshape(g.shape).astype(g.dtype))
+        out_r.append(new_r.reshape(r.shape))
+        full_bytes += 4.0 * size
+        comp_bytes += 4.0 * (l * d_out + rows * k)
+
+    stats = CompressionStats(full_bytes=full_bytes, compressed_bytes=comp_bytes)
+    return treedef.unflatten(out_g), treedef.unflatten(out_r), stats

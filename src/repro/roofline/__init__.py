@@ -1,0 +1,9 @@
+from repro.roofline.analysis import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    RooflineReport,
+    model_flops,
+    parse_collective_bytes,
+    report_from_compiled,
+)

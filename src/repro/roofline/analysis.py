@@ -1,0 +1,212 @@
+"""Three-term roofline from compiled dry-run artifacts (deliverable g).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+Per-device quantities come straight from the compiled (SPMD, per-device)
+module: ``cost_analysis()`` for FLOPs/bytes, and an HLO-text parse summing
+operand sizes of every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute for collective bytes (cost_analysis does not expose
+them).  Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# matches: %name = <result type> opcode(...operands...)
+_OP_RE = re.compile(
+    r"=\s*[^=]*?\b("
+    + "|".join(_COLLECTIVES)
+    + r")(-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+@dataclass
+class CollectiveBytes:
+    by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total(self) -> int:
+        return sum(self.by_kind.values())
+
+
+def parse_collective_bytes(hlo_text: str) -> CollectiveBytes:
+    """Per-device ICI traffic of every collective in an HLO module text,
+    under the standard ring-cost model (S = replica-group size, R = result
+    bytes of the op):
+
+        all-gather:          R * (S-1)/S      (receives the other shards)
+        all-reduce:          2R * (S-1)/S     (reduce-scatter + all-gather)
+        reduce-scatter:      R * (S-1)        (ships S-1 result-sized shards)
+        all-to-all:          R * (S-1)/S
+        collective-permute:  R
+
+    Only ``*-start`` (or plain) forms are counted; ``*-done`` consumes the
+    start's result and would double count.
+    """
+    out = CollectiveBytes()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # result type sits between '=' and the opcode name
+        shapes = _SHAPE_RE.findall(line[m.start() : m.end()])
+        if not shapes:
+            shapes = _SHAPE_RE.findall(line)
+        r = sum(_shape_bytes(d, s) for d, s in shapes)
+        s = _group_size(line)
+        if kind == "all-gather":
+            nbytes = r * (s - 1) / s
+        elif kind == "all-reduce":
+            nbytes = 2 * r * (s - 1) / s
+        elif kind == "reduce-scatter":
+            nbytes = r * (s - 1)
+        elif kind == "all-to-all":
+            nbytes = r * (s - 1) / s
+        else:  # collective-permute
+            nbytes = r
+        out.by_kind[kind] = out.by_kind.get(kind, 0) + int(nbytes)
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_by_kind: dict
+    model_flops_global: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return max(self.collective_bytes_per_device, 0.0) / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline estimate: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / compiled FLOPs — catches remat/redundancy waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilisation at the roofline step time."""
+        t = self.step_time_s
+        return self.model_flops_global / (self.chips * PEAK_FLOPS * t) if t else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops_global,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_at_roofline": self.mfu,
+            "collective_by_kind": self.collective_by_kind,
+        }
+
+
+def model_flops(cfg, shape_cfg) -> float:
+    """6*N_active*D (train) or 2*N_active*D (inference forward)."""
+    n = cfg.active_param_count()
+    if shape_cfg.kind == "train":
+        tokens = shape_cfg.global_batch * (shape_cfg.seq_len - 1)
+        return 6.0 * n * tokens
+    if shape_cfg.kind == "prefill":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 2.0 * n * tokens
+    tokens = shape_cfg.global_batch  # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def report_from_compiled(arch, shape_cfg, mesh_desc, chips, compiled, cfg) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # some backends return [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collective_bytes(compiled.as_text())
+    return RooflineReport(
+        arch=arch,
+        shape=shape_cfg.name,
+        mesh=mesh_desc,
+        chips=chips,
+        flops_per_device=flops,
+        bytes_per_device=nbytes,
+        collective_bytes_per_device=float(coll.total),
+        collective_by_kind=dict(coll.by_kind),
+        model_flops_global=model_flops(cfg, shape_cfg),
+    )

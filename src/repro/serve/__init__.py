@@ -1,0 +1,1 @@
+from repro.serve.engine import ServeConfig, ServeEngine, make_serve_step

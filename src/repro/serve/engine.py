@@ -1,0 +1,62 @@
+"""Batched serving: prefill + decode with greedy/temperature sampling.
+
+``serve_step`` (one token for the whole batch against the KV cache) is the
+function the decode_* dry-run cells lower.  The ``ServeEngine`` host loop
+drives it for real generation (examples/serve_batched.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ServeConfig(NamedTuple):
+    max_len: int
+    temperature: float = 0.0  # 0 => greedy
+    seed: int = 0
+
+
+def make_serve_step(lm):
+    """(params, cache, tokens (B,1), index ()) -> (next_tokens, logits, cache)."""
+
+    def serve_step(params, cache, tokens, index, rng, temperature):
+        logits, cache = lm.decode_step(params, cache, tokens, index)
+        greedy = jnp.argmax(logits[:, -1], axis=-1)
+        gumbel = -jnp.log(-jnp.log(jax.random.uniform(rng, logits[:, -1].shape) + 1e-9) + 1e-9)
+        sampled = jnp.argmax(logits[:, -1] / jnp.maximum(temperature, 1e-6) + gumbel, axis=-1)
+        nxt = jnp.where(temperature > 0.0, sampled, greedy).astype(jnp.int32)
+        return nxt[:, None], logits, cache
+
+    return serve_step
+
+
+class ServeEngine:
+    def __init__(self, lm, params, cfg: ServeConfig):
+        self.lm = lm
+        self.params = params
+        self.cfg = cfg
+        self._step = jax.jit(make_serve_step(lm))
+        self._rng = jax.random.key(cfg.seed)
+
+    def generate(self, prompts: jax.Array, n_tokens: int):
+        """prompts: (B, T0) -> (B, T0 + n_tokens) greedy/temperature tokens."""
+        b, t0 = prompts.shape
+        pf_logits, cache = self.lm.prefill(self.params, prompts, self.cfg.max_len)
+        cur = jnp.argmax(pf_logits, axis=-1).astype(jnp.int32)[:, None]
+        out = [prompts, cur]
+        # cur (position t0) is already chosen; each decode step consumes it
+        # and emits the next token.
+        for i in range(n_tokens - 1):
+            self._rng, sub = jax.random.split(self._rng)
+            cur, _, cache = self._step(
+                self.params,
+                cache,
+                cur,
+                jnp.asarray(t0 + i, jnp.int32),
+                sub,
+                jnp.asarray(self.cfg.temperature, jnp.float32),
+            )
+            out.append(cur)
+        return jnp.concatenate(out, axis=1)

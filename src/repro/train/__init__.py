@@ -1,0 +1,9 @@
+from repro.train.step import (
+    TrainConfig,
+    TrainState,
+    init_train_state,
+    make_compressed_train_step,
+    make_jitted_train_step,
+    make_train_step,
+    train_state_shardings,
+)

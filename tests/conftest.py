@@ -1,0 +1,37 @@
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_multidevice(script: str, n_devices: int = 8, timeout: int = 420) -> str:
+    """Run a python snippet in a subprocess with n fake CPU devices.
+
+    Multi-device tests must not pollute this process (smoke tests and
+    benches are required to see exactly 1 device), so shard_map/mesh tests
+    execute out-of-process.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+    )
+    assert proc.returncode == 0, f"subprocess failed:\nSTDOUT:{proc.stdout}\nSTDERR:{proc.stderr}"
+    return proc.stdout

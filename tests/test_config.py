@@ -1,0 +1,90 @@
+"""Layer-pattern compiler + config invariants (hypothesis-backed)."""
+import hypothesis
+import hypothesis.strategies as st
+
+from repro.configs.registry import ARCH_NAMES, SHAPES, cell_supported, get_config, reduced_config
+from repro.models.config import group_pattern
+
+
+def _expand(groups):
+    out = []
+    for kinds, repeats in groups:
+        out.extend(list(kinds) * repeats)
+    return tuple(out)
+
+
+@hypothesis.given(
+    pattern=st.lists(st.sampled_from(["global", "local", "rglru", "ssd"]), min_size=1, max_size=40)
+)
+@hypothesis.settings(max_examples=200, deadline=None)
+def test_group_pattern_roundtrip(pattern):
+    """Folding into scan groups must exactly reproduce the layer sequence."""
+    groups = group_pattern(tuple(pattern))
+    assert _expand(groups) == tuple(pattern)
+
+
+def test_group_pattern_folds_uniform_stacks():
+    groups = group_pattern(("global",) * 94)
+    assert groups == [(("global",), 94)]
+
+
+def test_group_pattern_gemma3():
+    pat = ("local",) * 5 + ("global",)
+    groups = group_pattern(pat * 4 + ("local", "local"))
+    assert _expand(groups) == pat * 4 + ("local", "local")
+    assert sum(r for _, r in groups) < 26  # actually folded something
+
+
+def test_all_archs_have_configs_and_param_counts():
+    expected = {
+        "recurrentgemma-2b": (2.0e9, 4.5e9),
+        "qwen3-moe-235b-a22b": (2.0e11, 2.7e11),
+        "mixtral-8x7b": (4.0e10, 5.2e10),
+        "gemma3-1b": (0.7e9, 1.5e9),
+        "h2o-danube-3-4b": (3.0e9, 4.5e9),
+        "qwen3-0.6b": (0.4e9, 0.9e9),
+        "smollm-135m": (1.0e8, 1.8e8),
+        "internvl2-2b": (1.5e9, 2.5e9),
+        "mamba2-370m": (2.5e8, 5.0e8),
+        "musicgen-medium": (1.0e9, 2.0e9),
+    }
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        n = cfg.param_count()
+        lo, hi = expected[arch]
+        assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e}, {hi:.1e}]"
+        if cfg.is_moe:
+            assert cfg.active_param_count() < n
+
+
+def test_moe_active_params_match_a22b():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    active = cfg.active_param_count()
+    assert 1.5e10 <= active <= 3.0e10, f"A22B active params: {active:.3e}"
+
+
+def test_long_500k_skips_match_design_doc():
+    skip = {a for a in ARCH_NAMES if not cell_supported(get_config(a), SHAPES["long_500k"])[0]}
+    assert skip == {
+        "qwen3-moe-235b-a22b",
+        "qwen3-0.6b",
+        "smollm-135m",
+        "internvl2-2b",
+        "musicgen-medium",
+    }
+
+
+def test_reduced_configs_stay_in_family():
+    for arch in ARCH_NAMES:
+        full = get_config(arch)
+        red = reduced_config(full)
+        assert red.family == full.family
+        assert red.layer_pattern == full.layer_pattern
+        assert red.is_moe == full.is_moe
+        assert red.param_count() < 1e7
+
+
+def test_vocab_padding():
+    cfg = get_config("internvl2-2b")
+    assert cfg.padded_vocab % 128 == 0 and cfg.padded_vocab >= cfg.vocab_size
+    assert cfg.padded_vocab % 16 == 0  # shards over the model axis

@@ -1,0 +1,111 @@
+"""Frequent Directions: paper guarantees, mergeability, JAX-vs-numpy parity."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fd import (
+    FDSketch,
+    fd_init,
+    fd_matrix,
+    fd_merge,
+    fd_query,
+    fd_update_stream,
+)
+
+SLACK = 1e-4  # fp slack on the exact-arithmetic bounds
+
+
+def _lowrank(rng, n, d, rank=5, noise=0.05):
+    u = rng.normal(size=(n, rank)) * (np.arange(rank, 0, -1) ** 2)
+    return u @ rng.normal(size=(rank, d)) + noise * rng.normal(size=(n, d))
+
+
+def test_fd_covariance_bound(rng):
+    n, d, l = 3000, 32, 16
+    a = _lowrank(rng, n, d)
+    sk = FDSketch(l, d)
+    sk.extend(a)
+    err = sk.covariance_error(a)
+    assert err <= 2.0 / l + SLACK
+    # the instance-specific bound is tighter and must also hold
+    assert err * np.sum(a * a) <= sk.delta_sum + SLACK * np.sum(a * a)
+
+
+def test_fd_directional_invariant(rng):
+    n, d, l = 2000, 24, 12
+    a = _lowrank(rng, n, d)
+    st_ = fd_update_stream(fd_init(l, d), jnp.asarray(a, jnp.float32))
+    frob = float(np.sum(a * a))
+    for _ in range(25):
+        x = rng.normal(size=d)
+        x /= np.linalg.norm(x)
+        ax = float(np.sum((a @ x) ** 2))
+        bx = float(fd_query(st_, jnp.asarray(x, jnp.float32)))
+        # 0 <= ||Ax||^2 - ||Bx||^2 <= delta_sum   (paper Section 3)
+        assert ax - bx >= -SLACK * frob
+        assert ax - bx <= float(st_.delta_sum) + SLACK * frob
+
+
+def test_fd_jax_matches_numpy(rng):
+    n, d, l = 512, 16, 8
+    a = _lowrank(rng, n, d).astype(np.float32)
+    sk = FDSketch(l, d)
+    # numpy oracle consumes in l-row chunks to match the JAX batched variant
+    for i in range(0, n, l):
+        sk.extend(a[i : i + l])
+        if sk.fill > l:
+            sk._shrink()
+    st_ = fd_update_stream(fd_init(l, d), jnp.asarray(a))
+    ga = sk.matrix()[:l]
+    gb = np.asarray(fd_matrix(st_))
+    # sketches are equal up to sign/rotation: compare Gram matrices
+    np.testing.assert_allclose(ga.T @ ga, gb.T @ gb, rtol=2e-3, atol=2e-2)
+
+
+def test_fd_merge_error_adds(rng):
+    n, d, l = 2000, 24, 16
+    a = _lowrank(rng, n, d)
+    st1 = fd_update_stream(fd_init(l, d), jnp.asarray(a[: n // 2], jnp.float32))
+    st2 = fd_update_stream(fd_init(l, d), jnp.asarray(a[n // 2 :], jnp.float32))
+    merged = fd_merge(st1, st2)
+    b = np.asarray(fd_matrix(merged))
+    err = np.linalg.norm(a.T @ a - b.T @ b, 2)
+    assert err <= float(merged.delta_sum) + SLACK * np.sum(a * a)
+    assert float(merged.frob) == pytest.approx(np.sum(a * a), rel=1e-3)
+    assert int(merged.n_seen) == n
+
+
+def test_fd_zero_rows_are_free(rng):
+    d, l = 16, 8
+    a = rng.normal(size=(64, d)).astype(np.float32)
+    st1 = fd_update_stream(fd_init(l, d), jnp.asarray(a))
+    padded = np.concatenate([a, np.zeros((40, d), np.float32)])
+    st2 = fd_update_stream(fd_init(l, d), jnp.asarray(padded))
+    assert int(st2.n_seen) == int(st1.n_seen)
+    assert float(st2.frob) == pytest.approx(float(st1.frob), rel=1e-5)
+
+
+@hypothesis.given(
+    a=hnp.arrays(
+        np.float32,
+        st.tuples(st.integers(20, 60), st.integers(4, 10)),
+        elements=st.floats(-5, 5, width=32),
+    ),
+    l=st.integers(3, 8),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_fd_property_invariant(a, l):
+    """For arbitrary matrices: 0 <= ||Ax||^2 - ||Bx||^2 <= 2||A||_F^2 / l."""
+    d = a.shape[1]
+    st_ = fd_update_stream(fd_init(l, d), jnp.asarray(a))
+    frob = float(np.sum(a.astype(np.float64) ** 2))
+    x = np.ones(d) / np.sqrt(d)
+    ax = float(np.sum((a @ x) ** 2))
+    bx = float(fd_query(st_, jnp.asarray(x, jnp.float32)))
+    slack = 1e-3 * frob + 1e-4
+    assert ax - bx >= -slack
+    assert ax - bx <= 2.0 * frob / l + slack

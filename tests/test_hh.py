@@ -1,0 +1,95 @@
+"""Weighted Misra--Gries / SpaceSaving bounds + mergeability."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hh import (
+    MGSketch,
+    SpaceSaving,
+    exact_heavy_hitters,
+    mg_estimate,
+    mg_init,
+    mg_merge,
+    mg_update_stream,
+)
+
+
+def _stream(rng, n=20000, universe=2000, beta=100.0, skew=2.0):
+    keys = (rng.zipf(skew, size=n) % universe).astype(np.int64)
+    w = rng.uniform(1.0, beta, size=n)
+    return keys, w
+
+
+def test_mg_dict_bound(rng):
+    keys, w = _stream(rng)
+    k = 100
+    mg = MGSketch(k)
+    mg.extend(keys, w)
+    _, totals, W = exact_heavy_hitters(keys, w, 0.01)
+    for e, true in totals.items():
+        est = mg.estimate(e)
+        assert est <= true + 1e-6  # MG underestimates
+        assert true - est <= W / (k + 1) + 1e-6
+
+
+def test_spacesaving_bound(rng):
+    keys, w = _stream(rng)
+    k = 100
+    ss = SpaceSaving(k)
+    for kk, ww in zip(keys.tolist(), w.tolist()):
+        ss.update(kk, ww)
+    _, totals, W = exact_heavy_hitters(keys, w, 0.01)
+    for e, true in totals.items():
+        est = ss.estimate(e)
+        if est > 0:
+            assert est >= true - 1e-6  # SS overestimates
+            assert est - true <= W / k + 1e-6
+
+
+def test_mg_jax_matches_dict(rng):
+    keys, w = _stream(rng, n=3000, universe=300)
+    k = 64
+    mg = MGSketch(k)
+    mg.extend(keys, w)
+    st_ = mg_update_stream(mg_init(k), jnp.asarray(keys), jnp.asarray(w))
+    for e in list(mg.counters)[:30]:
+        np.testing.assert_allclose(
+            float(mg_estimate(st_, jnp.int32(e))), mg.estimate(e), rtol=1e-4, atol=1e-2
+        )
+
+
+def test_mg_merge_bound(rng):
+    keys, w = _stream(rng, n=4000, universe=300)
+    k = 64
+    half = len(keys) // 2
+    s1 = mg_update_stream(mg_init(k), jnp.asarray(keys[:half]), jnp.asarray(w[:half]))
+    s2 = mg_update_stream(mg_init(k), jnp.asarray(keys[half:]), jnp.asarray(w[half:]))
+    merged = mg_merge(s1, s2)
+    _, totals, W = exact_heavy_hitters(keys, w, 0.01)
+    for e, true in list(totals.items())[:50]:
+        est = float(mg_estimate(merged, jnp.int32(e)))
+        assert est <= true + 1e-2
+        assert true - est <= 2 * W / (k + 1) + 1e-2  # merged error adds
+
+
+@hypothesis.given(
+    data=st.lists(
+        st.tuples(st.integers(0, 30), st.floats(1.0, 50.0)), min_size=10, max_size=300
+    ),
+    k=st.integers(4, 32),
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_mg_property(data, k):
+    mg = MGSketch(k)
+    totals: dict[int, float] = {}
+    W = 0.0
+    for e, w in data:
+        mg.update(e, w)
+        totals[e] = totals.get(e, 0.0) + w
+        W += w
+    for e, true in totals.items():
+        est = mg.estimate(e)
+        assert est <= true + 1e-6
+        assert true - est <= W / (k + 1) + 1e-6

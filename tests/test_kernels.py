@@ -1,0 +1,80 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracles."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import fd_gram, fd_project, flash_attention
+from repro.kernels.ref import ref_attention, ref_fd_gram, ref_fd_project
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("l,d", [(8, 128), (16, 256), (32, 512), (17, 300), (64, 1024), (128, 2048)])
+def test_fd_gram_sweep(l, d, dtype):
+    b = jnp.asarray(RNG.normal(size=(l, d)), dtype)
+    got = np.asarray(fd_gram(b))
+    want = np.asarray(ref_fd_gram(b))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * d)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("l,d", [(8, 128), (32, 512), (17, 300), (64, 1024)])
+def test_fd_project_sweep(l, d, dtype):
+    b = jnp.asarray(RNG.normal(size=(l, d)), dtype)
+    w = jnp.asarray(RNG.uniform(size=(l,)), jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(l, l)), jnp.float32)
+    got = np.asarray(fd_project(w, u, b).astype(jnp.float32))
+    want = np.asarray(ref_fd_project(w, u, b).astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * np.sqrt(l * d))
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,dh,window,softcap",
+    [
+        (1, 4, 2, 256, 64, 0, 0.0),
+        (2, 4, 1, 128, 32, 0, 0.0),
+        (1, 2, 2, 256, 64, 96, 0.0),
+        (1, 4, 4, 200, 64, 0, 30.0),  # non-block-multiple seq (padding path)
+        (1, 8, 2, 512, 128, 128, 0.0),
+        (1, 3, 3, 192, 64, 0, 0.0),  # odd head count
+    ],
+)
+def test_flash_attention_sweep(b, hq, hkv, s, dh, window, softcap):
+    q = jnp.asarray(RNG.normal(size=(b, hq, s, dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, s, dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, s, dh)), jnp.float32)
+    got = flash_attention(
+        q, k, v, causal=True, window=window, logit_softcap=softcap, block_q=64, block_kv=64
+    )
+    want = ref_attention(q, k, v, causal=True, window=window, logit_softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.normal(size=(1, 4, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    got = flash_attention(q, k, v, block_q=64, block_kv=64).astype(jnp.float32)
+    want = ref_attention(q, k, v).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-2, atol=5e-2)
+
+
+@hypothesis.given(
+    l=st.integers(2, 40),
+    d=st.integers(2, 300),
+    scale=st.floats(0.1, 100.0),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_fd_gram_property(l, d, scale):
+    """Gram kernel is exact-psd and scale-consistent for any (L, d)."""
+    b = jnp.asarray(RNG.normal(size=(l, d)) * scale, jnp.float32)
+    g = np.asarray(fd_gram(b))
+    np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-3 * scale**2)
+    want = np.asarray(ref_fd_gram(b))
+    np.testing.assert_allclose(g, want, rtol=1e-4, atol=1e-3 * scale**2 * d)

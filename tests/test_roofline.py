@@ -1,0 +1,76 @@
+"""Roofline accounting: HLO collective parser + three-term report."""
+import numpy as np
+
+from repro.configs.registry import SHAPES, get_config
+from repro.roofline.analysis import (
+    RooflineReport,
+    model_flops,
+    parse_collective_bytes,
+)
+
+HLO = """
+HloModule jit_step
+ENTRY main {
+  %p = f32[128,256]{1,0} parameter(0)
+  %ag = f32[2048,256]{1,0} all-gather(%p), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = bf16[1024]{0} all-reduce(%x), replica_groups=[128,2]<=[256], to_apply=%add
+  %rs = f32[64,64]{1,0} reduce-scatter(%y), replica_groups=[16,16]<=[256], dimensions={0}
+  %a2a = f32[512]{0} all-to-all(%z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = f32[256]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ags = f32[100]{0} all-gather-start(%q), replica_groups=[2,8]<=[16], dimensions={0}
+  %agd = f32[100]{0} all-gather-done(%ags)
+  %dot = f32[32,32]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_parser_kinds_and_ring_model():
+    cb = parse_collective_bytes(HLO)
+    # all-gather: R(2048*256*4) * 15/16 + start-form R(400)*7/8
+    ag = 2048 * 256 * 4 * 15 / 16 + 400 * 7 / 8
+    assert abs(cb.by_kind["all-gather"] - int(ag)) <= 2
+    # all-reduce: 2R * (S-1)/S with S=2
+    assert cb.by_kind["all-reduce"] == int(2 * 1024 * 2 * 1 / 2)
+    # reduce-scatter: R * (S-1), S=16
+    assert cb.by_kind["reduce-scatter"] == 64 * 64 * 4 * 15
+    # all-to-all: explicit group of 4
+    assert cb.by_kind["all-to-all"] == int(512 * 4 * 3 / 4)
+    assert cb.by_kind["collective-permute"] == 256 * 4
+    assert cb.total == sum(cb.by_kind.values())
+
+
+def test_parser_ignores_done_and_noncollectives():
+    cb = parse_collective_bytes(HLO)
+    assert len(cb.by_kind) == 5  # no dot, no all-gather-done double count
+
+
+def test_report_terms_and_dominance():
+    r = RooflineReport(
+        arch="x", shape="train_4k", mesh="16x16", chips=256,
+        flops_per_device=197e12 * 0.1,  # 100 ms compute
+        bytes_per_device=819e9 * 0.05,  # 50 ms memory
+        collective_bytes_per_device=50e9 * 0.2,  # 200 ms collective
+        collective_by_kind={}, model_flops_global=197e12 * 0.1 * 256 * 0.5,
+    )
+    assert abs(r.compute_s - 0.1) < 1e-9
+    assert abs(r.memory_s - 0.05) < 1e-9
+    assert abs(r.collective_s - 0.2) < 1e-9
+    assert r.dominant == "collective"
+    assert abs(r.useful_flops_ratio - 0.5) < 1e-9
+    assert 0 < r.mfu < 1
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("smollm-135m")
+    t = model_flops(cfg, SHAPES["train_4k"])
+    d = model_flops(cfg, SHAPES["decode_32k"])
+    n = cfg.param_count()
+    assert t == 6.0 * n * 256 * 4095
+    assert d == 2.0 * n * 128
+
+
+def test_moe_model_flops_use_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    f = model_flops(cfg, SHAPES["train_4k"])
+    assert f < 6.0 * cfg.param_count() * 256 * 4095
+    assert f == 6.0 * cfg.active_param_count() * 256 * 4095

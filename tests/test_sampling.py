@@ -1,0 +1,39 @@
+"""Priority sampling: unbiasedness + threshold semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampling import PrioritySampler, priority_sample
+
+
+def test_priority_sample_unbiased_subset_sum(rng):
+    n, s = 500, 100
+    w = rng.uniform(1.0, 50.0, size=n).astype(np.float32)
+    total = float(w.sum())
+    ests = []
+    for seed in range(60):
+        ps = priority_sample(jnp.asarray(w), jax.random.key(seed), s)
+        ests.append(float(jnp.sum(ps.weights)))
+    mean = np.mean(ests)
+    # E[sum w_bar] = W (Duffield--Lund--Thorup); 60 trials, generous CI
+    assert abs(mean - total) / total < 0.05, (mean, total)
+
+
+def test_priority_sample_large_weights_deterministic(rng):
+    n, s = 200, 50
+    w = np.ones(n, np.float32)
+    w[:5] = 1e6  # heavy items must always be kept
+    ps = priority_sample(jnp.asarray(w), jax.random.key(1), s)
+    kept = set(np.asarray(ps.indices).tolist())
+    assert set(range(5)).issubset(kept)
+
+
+def test_streaming_sampler_matches_oneshot_estimates(rng):
+    n, s = 2000, 200
+    w = rng.uniform(1.0, 20.0, size=n)
+    sampler = PrioritySampler(s, np.random.default_rng(7))
+    for i in range(n):
+        sampler.update(i, float(w[i]))
+    items, ww = sampler.sample()
+    assert len(items) == s
+    assert abs(ww.sum() - w.sum()) / w.sum() < 0.2

@@ -1,0 +1,159 @@
+"""Training substrate: loss descent, FD gradient compression, fault tolerance
+(checkpoint/restart determinism, elastic restore), tracker integration."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_multidevice
+from repro.ckpt import latest_step, restore, save
+from repro.data import TokenStream
+from repro.models.config import ModelConfig
+from repro.models.transformer import LM
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+TINY = ModelConfig(
+    name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab_size=256, dtype="float32", remat="none",
+)
+
+
+def _train(n_steps, state=None, start=0, seed=0):
+    lm = LM(TINY)
+    tcfg = TrainConfig(peak_lr=1e-2, warmup_steps=5, total_steps=100)
+    if state is None:
+        state = init_train_state(lm, jax.random.key(seed), tcfg)
+    step = jax.jit(make_train_step(lm, tcfg))
+    ds = TokenStream(global_batch=8, seq_len=64, vocab=256, seed=0)
+    losses = []
+    for i in range(start, start + n_steps):
+        state, m = step(state, {"tokens": jnp.asarray(ds.batch_at(i)["tokens"])})
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+def test_loss_decreases():
+    _, losses = _train(40)
+    assert losses[-1] < losses[0] - 1.0, (losses[0], losses[-1])
+
+
+def test_checkpoint_restart_determinism():
+    """Restarted run must produce bit-identical parameters to an
+    uninterrupted run (pipeline is a pure function of (seed, step))."""
+    full_state, _ = _train(20)
+
+    state_a, _ = _train(10)
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 10, state_a)
+        assert latest_step(d) == 10
+        restored, _ = restore(d, 10, state_a)
+        resumed, _ = _train(10, state=restored, start=10)
+    for a, b in zip(jax.tree.leaves(full_state), jax.tree.leaves(resumed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_checkpoint_corruption_detected():
+    state, _ = _train(1)
+    with tempfile.TemporaryDirectory() as d:
+        path = save(d, 1, state)
+        # corrupt one shard
+        victim = next(f for f in sorted(os.listdir(path)) if f.endswith(".zst"))
+        with open(os.path.join(path, victim), "r+b") as f:
+            f.seek(8)
+            f.write(b"\x00\x00\x00\x00")
+        with pytest.raises(Exception):
+            restore(d, 1, state)
+
+
+def test_elastic_restore_to_different_mesh():
+    """A checkpoint written replicated restores onto a 2x4 mesh (and back)."""
+    out = run_multidevice(
+        """
+import tempfile, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.ckpt import save, restore
+from repro.models.config import ModelConfig
+from repro.models.transformer import LM
+from repro.models.sharding import param_shardings
+
+cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab_size=256, dtype="float32", remat="none")
+lm = LM(cfg)
+params = lm.init(jax.random.key(0))
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+sh = param_shardings(params, mesh)
+with tempfile.TemporaryDirectory() as d:
+    save(d, 0, params)
+    resharded, _ = restore(d, 0, params, shardings=sh)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(resharded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the resharded copy really is distributed
+    leaf = resharded["embed"]["table"]
+    assert len(leaf.sharding.device_set) > 1
+print("OK")
+"""
+    )
+    assert "OK" in out
+
+
+def test_fd_gradient_compression_trains_and_saves_comm():
+    out = run_multidevice(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.data import TokenStream
+from repro.models.config import ModelConfig
+from repro.models.transformer import LM
+from repro.train import TrainConfig, init_train_state, make_compressed_train_step
+from repro.optim import FDCompressConfig
+
+mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                  d_ff=128, vocab_size=256, dtype="float32", remat="none")
+lm = LM(cfg)
+tc = TrainConfig(peak_lr=1e-2, warmup_steps=5, total_steps=60,
+                 grad_compression=FDCompressConfig(rank=8, sketch_rows=16, min_size=2048))
+state = init_train_state(lm, jax.random.key(0), tc)
+step = make_compressed_train_step(lm, tc, mesh)
+ds = TokenStream(global_batch=16, seq_len=64, vocab=256, seed=0)
+losses = []
+for i in range(35):
+    state, m = step(state, {"tokens": jnp.asarray(ds.batch_at(i)["tokens"])})
+    losses.append(float(m["loss"]))
+assert losses[-1] < losses[0] - 1.0, (losses[0], losses[-1])
+ratio = float(m["comm_full_bytes"]) / float(m["comm_compressed_bytes"])
+assert ratio > 2.0, ratio
+print("OK ratio", ratio)
+"""
+    )
+    assert "OK" in out
+
+
+def test_tracker_rides_training_stream():
+    out = run_multidevice(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.tracker import DistributedMatrixTracker
+
+mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+rng = np.random.default_rng(0)
+d = 32
+tracker = DistributedMatrixTracker(mesh, d, eps=0.25, axis="data")
+u = rng.normal(size=(4096, 4)) * np.array([8.0, 4.0, 2.0, 1.0])
+A = (u @ rng.normal(size=(4, d))).astype(np.float32)
+for i in range(0, 4096, 512):
+    tracker.update(jnp.asarray(A[i:i+512]))
+snap = tracker.snapshot(k=4)
+# top direction of the sketch matches the true top right-singular vector
+_, _, vt = np.linalg.svd(A, full_matrices=False)
+cos = abs(float(np.dot(snap.basis[0], vt[0])))
+assert cos > 0.95, cos
+assert snap.messages["total"] < 4096
+print("OK cos", cos, snap.messages)
+"""
+    )
+    assert "OK" in out
