@@ -1,0 +1,82 @@
+"""Query-serving throughput: naive per-query SVD vs cached-eigh vs Pallas.
+
+Builds an FD sketch over a synthetic low-rank stream, publishes it, then
+serves a 1024-direction batch through ``repro.query.QueryEngine`` on each
+path.  Emits per-query latencies as CSV rows and writes
+``BENCH_query_service.json`` with queries/sec for all three paths plus the
+batched-vs-naive speedup (the PR gate is >= 5x).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, scale
+
+BATCH = 1024
+NAIVE_SAMPLE = 32  # per-query SVDs are slow; measure a slice, report per-query
+
+
+def _build_engine(rng, n, d, eps):
+    import jax.numpy as jnp
+
+    from repro.core.fd import fd_init, fd_matrix, fd_update_stream
+    from repro.query import QueryEngine, SketchStore
+
+    u = rng.normal(size=(n, 8)) * (np.arange(8, 0, -1) ** 2)
+    a = (u @ rng.normal(size=(8, d)) + 0.05 * rng.normal(size=(n, d))).astype(np.float32)
+    l = int(np.ceil(4.0 / eps))
+    st = fd_update_stream(fd_init(l, d), jnp.asarray(a))
+    store = SketchStore()
+    store.publish(
+        "bench",
+        np.asarray(fd_matrix(st)),
+        frob=float(np.sum(a * a)),
+        eps=eps,
+        delta_sum=float(st.delta_sum),
+        n_seen=n,
+    )
+    return QueryEngine(store)
+
+
+def _time_path(engine, x, path, iters):
+    engine.query_batch(x, tenant="bench", path=path)  # warm (jit / cache fill)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        engine.query_batch(x, tenant="bench", path=path)
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    n = int(20000 * scale())
+    d, eps = 256, 0.1
+    engine = _build_engine(rng, n, d, eps)
+    x = rng.normal(size=(BATCH, d)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+
+    qps: dict[str, float] = {}
+    sec = _time_path(engine, x[:NAIVE_SAMPLE], "naive", iters=1)
+    qps["naive_svd"] = NAIVE_SAMPLE / sec
+    emit(f"query/naive_svd/batch={NAIVE_SAMPLE}", sec / NAIVE_SAMPLE * 1e6, f"qps={qps['naive_svd']:.0f}")
+
+    for path, key in (("cached", "cached_eigh"), ("pallas", "pallas_batched")):
+        sec = _time_path(engine, x, path, iters=3)
+        qps[key] = BATCH / sec
+        emit(f"query/{key}/batch={BATCH}", sec / BATCH * 1e6, f"qps={qps[key]:.0f}")
+
+    speedup = qps["pallas_batched"] / qps["naive_svd"]
+    emit("query/speedup_pallas_vs_naive", 0.0, f"x{speedup:.1f}")
+
+    out = {
+        "batch": BATCH,
+        "sketch": {"d": d, "eps": eps, "rows_streamed": n},
+        "queries_per_sec": qps,
+        "speedup_pallas_vs_naive": speedup,
+    }
+    path = os.path.join(os.getcwd(), "BENCH_query_service.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)

@@ -16,6 +16,7 @@ def main() -> None:
         kernels_bench,
         matrix_protocols,
         p4_negative,
+        query_service,
         roofline_table,
         tradeoff,
     )
@@ -29,6 +30,7 @@ def main() -> None:
         p4_negative,
         grad_compression,
         kernels_bench,
+        query_service,
         roofline_table,
     ):
         name = mod.__name__.split(".")[-1]

@@ -1,0 +1,60 @@
+"""Query serving end-to-end: sketch -> store -> engine -> batched service.
+
+The paper's coordinator answers ``||A x||^2`` for any direction from its
+sketch B; this demo is that query path at serving shape.  An FD sketch of a
+PAMAP-like stream is published into the versioned store, then a batch of
+single-direction queries is coalesced by the service and served three ways
+(naive per-query SVD, cached-eigh, Pallas-batched) with throughput and the
+paper's error envelope reported.
+
+    PYTHONPATH=src python examples/query_service.py [--queries 2048]
+"""
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fd import fd_init, fd_matrix, fd_update_stream
+from repro.data import pamap_like
+from repro.query import QueryEngine, QueryService, SketchStore
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--n", type=int, default=40_000)
+ap.add_argument("--queries", type=int, default=2048)
+ap.add_argument("--eps", type=float, default=0.1)
+args = ap.parse_args()
+
+rng = np.random.default_rng(0)
+a = pamap_like(args.n, seed=1).astype(np.float32)
+n, d = a.shape
+l = int(np.ceil(4.0 / args.eps))
+frob = float(np.sum(a.astype(np.float64) ** 2))
+
+state = fd_update_stream(fd_init(l, d), jnp.asarray(a))
+store = SketchStore()
+snap = store.publish(
+    "pamap", np.asarray(fd_matrix(state)), frob=frob, eps=args.eps,
+    delta_sum=float(state.delta_sum), n_seen=n,
+)
+print(f"published sketch v{snap.version}: {snap.matrix.shape} of a {n}x{d} stream "
+      f"(compression {n / snap.matrix.shape[0]:.0f}x, bound {snap.error_bound / frob:.2e} ||A||_F^2)")
+
+engine = QueryEngine(store)
+x = rng.normal(size=(args.queries, d)).astype(np.float32)
+x /= np.linalg.norm(x, axis=1, keepdims=True)
+truth = np.sum((a.astype(np.float64) @ x.T.astype(np.float64)) ** 2, axis=0)
+
+print(f"\n{'path':<16}{'qps':>12}{'max gap / ||A||_F^2':>22}")
+for path, n_q in [("naive", 64), ("cached", args.queries), ("pallas", args.queries)]:
+    svc = QueryService(engine, tenant="pamap", path=path, max_batch=1024)
+    tickets = [svc.submit(row) for row in x[:n_q]]
+    svc.flush()
+    est = np.array([t.result()[0] for t in tickets])
+    gap = np.max(np.abs(truth[:n_q] - est)) / frob
+    print(f"{path:<16}{svc.stats().queries_per_sec:>12.0f}{gap:>22.2e}")
+
+vt_k, s_k = engine.top_directions(3, tenant="pamap")
+print(f"\ntop singular values (streaming PCA): {np.round(s_k, 1)}")
+print(f"stable rank: {engine.stable_rank(tenant='pamap'):.2f}")
+print(f"spectrum cache: {engine.cache_stats()}")

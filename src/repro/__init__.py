@@ -2,6 +2,7 @@
 
 Core entry points:
     repro.core        — the paper's protocols (FD, HH, distributed tracking)
+    repro.query       — coordinator query serving (store -> engine -> service)
     repro.models      — 10-arch decoder zoo (``--arch``)
     repro.launch      — mesh / dryrun / train / serve drivers
     repro.kernels     — Pallas TPU kernels + oracles

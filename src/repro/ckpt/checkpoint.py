@@ -25,14 +25,37 @@ import json
 import os
 import re
 import threading
+import zlib
 
 import jax
 import numpy as np
-import zstandard
+
+try:  # optional: fall back to stdlib zlib on minimal installs
+    import zstandard
+except ModuleNotFoundError:
+    zstandard = None
 
 __all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
 
 _MANIFEST = "manifest.json"
+
+
+def _compressor() -> tuple[str, "callable"]:
+    if zstandard is not None:
+        return "zstd", zstandard.ZstdCompressor(level=3).compress
+    return "zlib", lambda raw: zlib.compress(raw, 6)
+
+
+def _decompress(codec: str, data: bytes) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                "checkpoint was written with zstd; install `zstandard` to restore it"
+            )
+        return zstandard.ZstdDecompressor().decompress(data)
+    if codec == "zlib":
+        return zlib.decompress(data)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _leaf_paths(tree):
@@ -52,11 +75,12 @@ def save(directory: str, step: int, tree, *, extra: dict | None = None) -> str:
     final = os.path.join(directory, f"step_{step:09d}")
     tmp = os.path.join(directory, f".tmp-step_{step:09d}")
     os.makedirs(tmp, exist_ok=True)
-    cctx = zstandard.ZstdCompressor(level=3)
+    codec, compress = _compressor()
     leaves, treedef = _leaf_paths(tree)
     manifest = {
         "step": step,
         "treedef": str(treedef),
+        "codec": codec,
         "extra": extra or {},
         "leaves": {},
     }
@@ -65,9 +89,9 @@ def save(directory: str, step: int, tree, *, extra: dict | None = None) -> str:
         buf = io.BytesIO()
         np.save(buf, arr, allow_pickle=False)
         raw = buf.getvalue()
-        comp = cctx.compress(raw)
+        comp = compress(raw)
         digest = hashlib.sha256(raw).hexdigest()
-        fn = f"{name}.npy.zst"
+        fn = f"{name}.npy.{'zst' if codec == 'zstd' else codec}"
         with open(os.path.join(tmp, fn), "wb") as f:
             f.write(comp)
         manifest["leaves"][name] = {
@@ -103,7 +127,7 @@ def restore(directory: str, step: int, template, *, shardings=None):
     path = os.path.join(directory, f"step_{step:09d}")
     with open(os.path.join(path, _MANIFEST)) as f:
         manifest = json.load(f)
-    dctx = zstandard.ZstdDecompressor()
+    codec = manifest.get("codec", "zstd")
     leaves, treedef = _leaf_paths(template)
     shard_leaves = None
     if shardings is not None:
@@ -114,7 +138,7 @@ def restore(directory: str, step: int, template, *, shardings=None):
         if meta is None:
             raise KeyError(f"checkpoint {path} missing leaf {name}")
         with open(os.path.join(path, meta["file"]), "rb") as f:
-            raw = dctx.decompress(f.read())
+            raw = _decompress(codec, f.read())
         if hashlib.sha256(raw).hexdigest() != meta["sha256"]:
             raise IOError(f"checkpoint corruption in leaf {name} ({path})")
         arr = np.load(io.BytesIO(raw), allow_pickle=False)

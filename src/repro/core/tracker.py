@@ -52,11 +52,13 @@ class DistributedMatrixTracker:
         self.cfg = dist.ProtocolConfig(eps=eps, m=m, d=d, axis=axis).resolved()
         self.protocol = protocol
         self.rows_per_step = rows_per_step
+        self.rows_fed = 0
         self.state, self._step = dist.make_protocol_runner(protocol, self.cfg, mesh)
 
     def update(self, rows: jax.Array) -> None:
         """Absorb a global (n, d) batch of rows (sharded over the axis)."""
         self.state = self._step(self.state, rows)
+        self.rows_fed += int(rows.shape[0])
 
     def sketch_matrix(self) -> np.ndarray:
         if self.protocol == "P3":
@@ -67,6 +69,32 @@ class DistributedMatrixTracker:
         b = self.sketch_matrix()
         v = b @ np.asarray(x)
         return float(v @ v)
+
+    def publish(self, store, tenant: str = "default", *, meta: dict | None = None):
+        """Publish the coordinator sketch into a ``repro.query.SketchStore``.
+
+        Snapshots are immutable and versioned, so the serving layer
+        (``repro.query``) answers batched queries against a pinned version
+        while training keeps streaming rows into this tracker.  Returns the
+        ``SketchSnapshot``.
+        """
+        b = self.sketch_matrix()
+        # P1/P2 carry the coordinator's running mass estimate f_hat
+        # (within (1+eps) of ||A||_F^2); P3's estimator matrix preserves the
+        # stream mass by construction, so its own Frobenius norm stands in.
+        f_hat = getattr(self.state, "f_hat", None)
+        frob = float(f_hat) if f_hat is not None else float(np.sum(b * b))
+        md = {"protocol": self.protocol, "m": self.cfg.m}
+        if meta:
+            md.update(meta)
+        return store.publish(
+            tenant,
+            b,
+            frob=frob,
+            eps=self.cfg.eps,
+            n_seen=self.rows_fed,
+            meta=md,
+        )
 
     def snapshot(self, k: int = 8) -> TrackerSnapshot:
         b = self.sketch_matrix()

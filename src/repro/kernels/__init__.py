@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
 fd_gram / fd_project — the two matmul-shaped stages of the Frequent
-Directions shrink; flash_attention — the assigned-arch prefill hot-spot.
+Directions shrink; quadform — the batched ``||B x||^2`` serving hot-spot
+(repro.query); flash_attention — the assigned-arch prefill hot-spot.
 Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py /
 fd_ops.py.  On CPU the wrappers dispatch with interpret=True.
 """

@@ -18,8 +18,9 @@ from repro.kernels.flash_attention import (
     DEFAULT_BLOCK_Q,
     flash_attention_pallas,
 )
+from repro.kernels.quadform import DEFAULT_BLOCK_D, DEFAULT_BLOCK_N, quadform_pallas
 
-__all__ = ["fd_gram", "fd_project", "flash_attention"]
+__all__ = ["fd_gram", "fd_project", "flash_attention", "quadform"]
 
 
 def _on_tpu() -> bool:
@@ -28,6 +29,41 @@ def _on_tpu() -> bool:
 
 def _pad_to(x: int, mult: int) -> int:
     return -(-x // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d", "interpret"))
+def _quadform_padded(b, x, *, block_n, block_d, interpret):
+    return quadform_pallas(b, x, block_n=block_n, block_d=block_d, interpret=interpret)
+
+
+def quadform(
+    b: jax.Array,
+    x: jax.Array,
+    *,
+    block_n: int = 0,
+    block_d: int = 0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched ``||B x_j||^2`` via the Pallas kernel, any (L, d) x (N, d) -> (N,).
+
+    Pads L to the f32 sublane multiple and N/d to block multiples; zero
+    rows/cols contribute zero to every dot product, so padding is exact.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    l, d = b.shape
+    n = x.shape[0]
+    if block_n <= 0:
+        block_n = min(DEFAULT_BLOCK_N, _pad_to(n, 128))
+    if block_d <= 0:
+        block_d = min(DEFAULT_BLOCK_D, _pad_to(d, 128))
+    lp = _pad_to(max(l, 8), 8)
+    dp = _pad_to(d, block_d)
+    np_ = _pad_to(max(n, block_n), block_n)
+    bp = jnp.pad(b, ((0, lp - l), (0, dp - d)))
+    xp = jnp.pad(x, ((0, np_ - n), (0, dp - d)))
+    out = _quadform_padded(bp, xp, block_n=block_n, block_d=block_d, interpret=interpret)
+    return out[0, :n]
 
 
 @functools.partial(

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: fused batched quadratic form ``q_j = ||B x_j||^2``.
+
+The coordinator answers the paper's query — ``||A x||^2`` estimated by
+``||B x||^2`` — for *batches* of directions at serving time
+(``repro.query.engine``).  Unfused, that is a (L, d) x (d, N) matmul whose
+(L, N) product round-trips HBM before the square-and-reduce pass.  The kernel
+keeps the product tile VMEM-resident and folds the reduction into the final
+d-step, so the (L, N) intermediate never touches HBM:
+
+    grid = (N / BLOCK_N, d / BLOCK_D)          # d innermost
+    step (j, i):  acc += B[:, blk_i] @ X[blk_j, blk_i].T          (MXU)
+    step (j, nd-1):  out[blk_j] = sum_L acc * acc                 (VPU)
+
+VMEM working set: L*BLOCK_D + BLOCK_N*BLOCK_D inputs plus the (L, BLOCK_N)
+f32 accumulator — with L=128, BLOCK_N=256, BLOCK_D=512 under 1 MiB, far
+inside v5e VMEM, and every matmul tile is 128-lane aligned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_N = 256
+DEFAULT_BLOCK_D = 512
+
+
+def _quadform_kernel(b_ref, x_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        b_ref[...].astype(jnp.float32),
+        x_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),  # B_blk @ X_blk.T
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    def _reduce():
+        acc = acc_ref[...]
+        o_ref[...] = jnp.sum(acc * acc, axis=0, keepdims=True)
+
+
+def quadform_pallas(
+    b: jax.Array,
+    x: jax.Array,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+) -> jax.Array:
+    """``sum_i (B @ x_j)_i^2`` for every row x_j of X.
+
+    b: (L, d) sketch, x: (N, d) directions -> (1, N) f32.
+    L % 8 == 0, N % block_n == 0, d % block_d == 0 (pad upstream —
+    ``repro.kernels.ops.quadform`` does; zero pad rows/cols are exact no-ops).
+    """
+    l, d = b.shape
+    n, dx = x.shape
+    if dx != d:
+        raise ValueError(f"direction dim {dx} != sketch dim {d}")
+    if n % block_n != 0 or d % block_d != 0:
+        raise ValueError(f"(N={n}, d={d}) must tile into ({block_n}, {block_d}) blocks")
+    grid = (n // block_n, d // block_d)
+    return pl.pallas_call(
+        _quadform_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l, block_d), lambda j, i: (0, i)),  # B, streams d
+            pl.BlockSpec((block_n, block_d), lambda j, i: (j, i)),  # X
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((l, block_n), jnp.float32)],
+        interpret=interpret,
+    )(b, x)

@@ -21,6 +21,14 @@ def ref_fd_project(w: jax.Array, u: jax.Array, b: jax.Array) -> jax.Array:
     return out.astype(b.dtype)
 
 
+def ref_quadform(b: jax.Array, x: jax.Array) -> jax.Array:
+    """Batched quadratic form ``q_j = ||B x_j||^2``.  b: (L, d), x: (N, d) -> (N,)."""
+    bx = jnp.matmul(
+        b.astype(jnp.float32), x.astype(jnp.float32).T, preferred_element_type=jnp.float32
+    )
+    return jnp.sum(bx * bx, axis=0)
+
+
 def ref_attention(
     q: jax.Array,
     k: jax.Array,

@@ -1,0 +1,28 @@
+"""Coordinator query-serving subsystem.
+
+The paper splits the problem in two: cheap continuous communication builds a
+coordinator sketch B, and B then answers ``||A x||^2`` queries for any
+direction at any time.  This package is the second half at serving scale:
+
+  * store.py   — versioned, per-tenant registry of immutable published
+                 sketches (trackers publish; readers pin a version).
+  * engine.py  — batched quadratic-form serving with an LRU-cached
+                 eigendecomposition per (tenant, version) and a fused
+                 Pallas kernel path (``repro.kernels.quadform``).
+  * service.py — admission front-end coalescing single queries into
+                 kernel-sized batches, with throughput accounting.
+"""
+from repro.query.engine import QueryEngine, QueryResult, Spectrum
+from repro.query.service import QueryService, QueryTicket, ServiceStats
+from repro.query.store import SketchSnapshot, SketchStore
+
+__all__ = [
+    "QueryEngine",
+    "QueryResult",
+    "QueryService",
+    "QueryTicket",
+    "ServiceStats",
+    "SketchSnapshot",
+    "SketchStore",
+    "Spectrum",
+]

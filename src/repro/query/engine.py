@@ -1,0 +1,172 @@
+"""Batched ``||A x||^2`` query engine over the versioned sketch store.
+
+Serves the paper's query — ``||B x||^2`` as an eps-approximation of
+``||A x||^2`` — for whole batches of directions against a pinned snapshot,
+three ways:
+
+  * ``pallas``  — the fused batched quadratic-form kernel
+                  (``repro.kernels.quadform``): one pass over B per batch.
+  * ``cached``  — factor once per (tenant, version) into the sketch's
+                  singular spectrum (an LRU-cached eigendecomposition of
+                  the Gram ``B B^T``), then every batch is a thin
+                  ``(N, d) @ (d, l)`` matmul; ``top_directions`` and
+                  ``stable_rank`` read the same cache entry for free.
+  * ``naive``   — recompute the SVD per query: the strawman a serving
+                  layer exists to beat (see benchmarks/query_service.py).
+
+All paths agree to fp tolerance; every result carries the snapshot's
+additive error bound (``delta_sum`` when known, else ``eps ||A||_F^2``).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.query.store import SketchSnapshot, SketchStore
+
+__all__ = ["QueryEngine", "QueryResult", "Spectrum"]
+
+PATHS = ("pallas", "cached", "naive")
+
+
+class Spectrum(NamedTuple):
+    """Cached factorization of a snapshot: B = U diag(s) Vt (thin)."""
+
+    s: np.ndarray  # (l,) singular values, descending
+    vt: np.ndarray  # (l, d) right singular directions
+
+
+class QueryResult(NamedTuple):
+    estimates: np.ndarray  # (n,) f32 — ||B x_j||^2 per direction
+    error_bound: float  # additive bound vs ||A x||^2 for unit directions
+    tenant: str
+    version: int
+    path: str
+
+
+def _svd_spectrum(matrix: np.ndarray) -> Spectrum:
+    _, s, vt = np.linalg.svd(matrix, full_matrices=False)
+    return Spectrum(s=s, vt=vt)
+
+
+class QueryEngine:
+    def __init__(
+        self,
+        store: SketchStore,
+        *,
+        cache_size: int = 16,
+        interpret: bool | None = None,
+    ):
+        if cache_size < 1:
+            raise ValueError(f"cache_size must be >= 1, got {cache_size}")
+        self.store = store
+        self.cache_size = cache_size
+        self.interpret = interpret
+        self._cache: OrderedDict[tuple[str, int], Spectrum] = OrderedDict()
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # -- spectrum cache ------------------------------------------------------
+
+    def spectrum(self, tenant: str, version: int | None = None) -> Spectrum:
+        """The snapshot's singular spectrum, LRU-cached by (tenant, version).
+
+        Versions are immutable, so a hit can never be stale; publishing a
+        new version changes the key, which *is* the invalidation.
+        """
+        return self._spectrum_for(self.store.get(tenant, version))
+
+    def _spectrum_for(self, snap: SketchSnapshot) -> Spectrum:
+        key = (snap.tenant, snap.version)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+            self.cache_hits += 1
+            return hit
+        self.cache_misses += 1
+        spec = _svd_spectrum(snap.matrix)
+        self._cache[key] = spec
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+        return spec
+
+    def cache_stats(self) -> dict[str, int]:
+        return {
+            "hits": self.cache_hits,
+            "misses": self.cache_misses,
+            "entries": len(self._cache),
+        }
+
+    # -- batched quadratic forms --------------------------------------------
+
+    def query_batch(
+        self,
+        x: np.ndarray,
+        *,
+        tenant: str = "default",
+        version: int | None = None,
+        path: str = "pallas",
+    ) -> QueryResult:
+        """Serve ``||B x_j||^2`` for every row of ``x`` (any batch size)."""
+        if path not in PATHS:
+            raise ValueError(f"unknown query path {path!r}; choose from {PATHS}")
+        snap = self.store.get(tenant, version)
+        x = np.asarray(x, np.float32)
+        if x.ndim != 2 or x.shape[1] != snap.matrix.shape[1]:
+            raise ValueError(
+                f"directions must be (n, {snap.matrix.shape[1]}), got {x.shape}"
+            )
+        if path == "pallas":
+            est = self._pallas_batch(snap, x)
+        elif path == "cached":
+            est = self._cached_batch(snap, x)
+        else:
+            est = self._naive_batch(snap, x)
+        return QueryResult(
+            estimates=est,
+            error_bound=snap.error_bound,
+            tenant=snap.tenant,
+            version=snap.version,
+            path=path,
+        )
+
+    def query(self, x: np.ndarray, **kw) -> float:
+        """Single-direction convenience wrapper over ``query_batch``."""
+        return float(self.query_batch(np.asarray(x)[None, :], **kw).estimates[0])
+
+    def _pallas_batch(self, snap: SketchSnapshot, x: np.ndarray) -> np.ndarray:
+        from repro.kernels.ops import quadform
+
+        return np.asarray(quadform(snap.matrix, x, interpret=self.interpret))
+
+    def _cached_batch(self, snap: SketchSnapshot, x: np.ndarray) -> np.ndarray:
+        spec = self._spectrum_for(snap)
+        proj = (x @ spec.vt.T) * spec.s[None, :]
+        return np.sum(proj * proj, axis=1, dtype=np.float32).astype(np.float32)
+
+    def _naive_batch(self, snap: SketchSnapshot, x: np.ndarray) -> np.ndarray:
+        out = np.empty(x.shape[0], np.float32)
+        for i, row in enumerate(x):
+            spec = _svd_spectrum(snap.matrix)  # deliberately recomputed per query
+            proj = spec.s * (spec.vt @ row)
+            out[i] = np.float32(proj @ proj)
+        return out
+
+    # -- spectral summaries (served from the same cache) ---------------------
+
+    def top_directions(
+        self, k: int, *, tenant: str = "default", version: int | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Streaming-PCA answer: top-k right singular directions + values."""
+        spec = self.spectrum(tenant, version)
+        k = min(k, spec.s.shape[0])
+        return spec.vt[:k], spec.s[:k]
+
+    def stable_rank(self, *, tenant: str = "default", version: int | None = None) -> float:
+        """``||B||_F^2 / sigma_1^2`` of the pinned sketch."""
+        spec = self.spectrum(tenant, version)
+        if spec.s.size == 0:
+            return 0.0
+        return float(np.sum(spec.s**2) / max(float(spec.s[0] ** 2), 1e-30))

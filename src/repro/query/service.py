@@ -1,0 +1,145 @@
+"""Admission + batching front-end over the query engine.
+
+Modeled on the ``ServeEngine`` host loop: callers submit single directions
+(the traffic pattern of the paper's coordinator under heavy query load) and
+the service coalesces them into kernel-sized batches so the hot path always
+sees the fixed shapes the jit/Pallas stack compiles for.  Ragged tails are
+zero-padded up to a power-of-two bucket (zero directions cost zero and are
+discarded), bounding the number of compiled batch shapes to
+``log2(max_batch)`` per tenant.
+
+    svc = QueryService(engine, tenant="run-42")
+    tickets = [svc.submit(x) for x in directions]
+    svc.flush()                       # or wait for max_batch auto-flush
+    tickets[0].result()               # (estimate, error_bound, version)
+
+``stats()`` reports served queries, batches, padding overhead and the
+measured queries/sec of the engine-facing hot path.
+"""
+from __future__ import annotations
+
+import time
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.query.engine import QueryEngine
+
+__all__ = ["QueryService", "QueryTicket", "ServiceStats"]
+
+
+class ServiceStats(NamedTuple):
+    queries: int
+    batches: int
+    padded: int  # zero-filled slots added to round batches up
+    busy_s: float  # wall time inside the engine hot path
+    queries_per_sec: float
+
+
+class QueryTicket:
+    """Handle for one submitted direction; resolved at flush time."""
+
+    __slots__ = ("_service", "estimate", "error_bound", "version", "done")
+
+    def __init__(self, service: "QueryService"):
+        self._service = service
+        self.estimate: float | None = None
+        self.error_bound: float | None = None
+        self.version: int | None = None
+        self.done = False
+
+    def result(self) -> tuple[float, float, int]:
+        """(estimate, error_bound, version) — flushes the service if pending."""
+        if not self.done:
+            self._service.flush()
+        assert self.done, "flush() must resolve every pending ticket"
+        return self.estimate, self.error_bound, self.version
+
+    def _resolve(self, estimate: float, error_bound: float, version: int) -> None:
+        self.estimate = estimate
+        self.error_bound = error_bound
+        self.version = version
+        self.done = True
+
+
+def _bucket(n: int, min_bucket: int, max_batch: int) -> int:
+    """Smallest power-of-two >= n, clamped to [min_bucket, max_batch]."""
+    b = min_bucket
+    while b < n:
+        b *= 2
+    return min(b, max_batch)
+
+
+class QueryService:
+    def __init__(
+        self,
+        engine: QueryEngine,
+        *,
+        tenant: str = "default",
+        path: str = "pallas",
+        max_batch: int = 1024,
+        min_bucket: int = 8,
+        auto_flush: bool = True,
+    ):
+        if max_batch < min_bucket or min_bucket < 1:
+            raise ValueError(f"need 1 <= min_bucket <= max_batch, got {min_bucket}, {max_batch}")
+        self.engine = engine
+        self.tenant = tenant
+        self.path = path
+        self.max_batch = max_batch
+        self.min_bucket = min_bucket
+        self.auto_flush = auto_flush
+        self._pending: list[tuple[np.ndarray, QueryTicket]] = []
+        self._queries = 0
+        self._batches = 0
+        self._padded = 0
+        self._busy_s = 0.0
+
+    def submit(self, x: np.ndarray) -> QueryTicket:
+        """Enqueue one direction; auto-flushes when a full batch is waiting."""
+        x = np.asarray(x, np.float32)
+        if x.ndim != 1:
+            raise ValueError(f"submit takes a single (d,) direction, got shape {x.shape}")
+        ticket = QueryTicket(self)
+        self._pending.append((x, ticket))
+        if self.auto_flush and len(self._pending) >= self.max_batch:
+            self.flush()
+        return ticket
+
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def flush(self) -> int:
+        """Serve every pending ticket in coalesced batches; returns #served."""
+        served = 0
+        while self._pending:
+            # Pop only after the engine succeeds: a raising batch stays
+            # pending, so the caller can fix the cause and flush again.
+            take = self._pending[: self.max_batch]
+            rows = np.stack([x for x, _ in take])
+            bucket = _bucket(rows.shape[0], self.min_bucket, self.max_batch)
+            batch = np.zeros((bucket, rows.shape[1]), np.float32)
+            batch[: rows.shape[0]] = rows
+            t0 = time.perf_counter()
+            res = self.engine.query_batch(
+                batch, tenant=self.tenant, path=self.path
+            )
+            self._busy_s += time.perf_counter() - t0
+            del self._pending[: len(take)]
+            for (_, ticket), est in zip(take, res.estimates):
+                ticket._resolve(float(est), res.error_bound, res.version)
+            self._queries += len(take)
+            self._batches += 1
+            self._padded += bucket - len(take)
+            served += len(take)
+        return served
+
+    def stats(self) -> ServiceStats:
+        qps = self._queries / self._busy_s if self._busy_s > 0 else 0.0
+        return ServiceStats(
+            queries=self._queries,
+            batches=self._batches,
+            padded=self._padded,
+            busy_s=self._busy_s,
+            queries_per_sec=qps,
+        )

@@ -1,0 +1,134 @@
+"""Versioned sketch store — the coordinator's published artifact shelf.
+
+In the paper the coordinator maintains one sketch B and answers
+``||A x||^2 ~ ||B x||^2`` queries against it.  At serving scale the sketch
+and the query path must be decoupled: trackers *publish* coordinator
+sketches here as immutable, monotonically-versioned snapshots (one sequence
+per tenant namespace), and the query engine pins a version for the lifetime
+of a batch — readers never observe a half-updated sketch and repeated
+queries against a pinned version are trivially cacheable.
+
+    tracker.publish(store, tenant="run-42")   # writer side, cheap
+    store.get("run-42")                       # latest snapshot
+    store.get("run-42", version=7)            # pinned historical snapshot
+
+``retain`` bounds memory: only the newest ``retain`` versions per tenant
+are kept (0 = unbounded).  All operations are thread-safe.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Mapping, NamedTuple
+
+import numpy as np
+
+__all__ = ["SketchSnapshot", "SketchStore"]
+
+
+class SketchSnapshot(NamedTuple):
+    """One immutable published sketch.
+
+    matrix:    (l, d) f32 sketch B, write-protected.
+    frob:      coordinator estimate of the stream mass ``||A||_F^2``.
+    eps:       approximation parameter the sketch was built for.
+    delta_sum: accumulated FD shrink mass when known (single-stream
+               sketches) — the instance-specific error bound; None for
+               distributed protocols where only the paper's worst case
+               ``eps * ||A||_F^2`` is certified.
+    n_seen:    rows of the stream the sketch summarizes.
+    """
+
+    tenant: str
+    version: int
+    matrix: np.ndarray
+    frob: float
+    eps: float
+    delta_sum: float | None
+    n_seen: int
+    meta: Mapping[str, Any]
+
+    @property
+    def error_bound(self) -> float:
+        """Additive bound on ``||A x||^2 - ||B x||^2`` for unit directions x."""
+        if self.delta_sum is not None:
+            return float(self.delta_sum)
+        return float(self.eps * self.frob)
+
+
+class SketchStore:
+    """Per-tenant, monotonically versioned snapshot registry."""
+
+    def __init__(self, *, retain: int = 0):
+        if retain < 0:
+            raise ValueError(f"retain must be >= 0, got {retain}")
+        self.retain = retain
+        self._lock = threading.Lock()
+        self._snaps: dict[str, dict[int, SketchSnapshot]] = {}
+        self._next_version: dict[str, int] = {}
+
+    def publish(
+        self,
+        tenant: str,
+        matrix: np.ndarray,
+        *,
+        frob: float,
+        eps: float,
+        delta_sum: float | None = None,
+        n_seen: int = 0,
+        meta: Mapping[str, Any] | None = None,
+    ) -> SketchSnapshot:
+        """Register a sketch as the tenant's next version; returns the snapshot."""
+        b = np.array(matrix, dtype=np.float32, copy=True)
+        if b.ndim != 2:
+            raise ValueError(f"sketch matrix must be 2-D, got shape {b.shape}")
+        b.setflags(write=False)
+        with self._lock:
+            version = self._next_version.get(tenant, 1)
+            self._next_version[tenant] = version + 1
+            snap = SketchSnapshot(
+                tenant=tenant,
+                version=version,
+                matrix=b,
+                frob=float(frob),
+                eps=float(eps),
+                delta_sum=None if delta_sum is None else float(delta_sum),
+                n_seen=int(n_seen),
+                meta=dict(meta or {}),
+            )
+            shelf = self._snaps.setdefault(tenant, {})
+            shelf[version] = snap
+            if self.retain:
+                for old in sorted(shelf)[: -self.retain]:
+                    del shelf[old]
+            return snap
+
+    def get(self, tenant: str, version: int | None = None) -> SketchSnapshot:
+        """Fetch a snapshot; ``version=None`` means the latest."""
+        with self._lock:
+            shelf = self._snaps.get(tenant)
+            if not shelf:
+                raise KeyError(f"no sketches published for tenant {tenant!r}")
+            if version is None:
+                version = max(shelf)
+            snap = shelf.get(version)
+            if snap is None:
+                raise KeyError(
+                    f"tenant {tenant!r} has no version {version} "
+                    f"(available: {sorted(shelf)})"
+                )
+            return snap
+
+    def latest_version(self, tenant: str) -> int:
+        return self.get(tenant).version
+
+    def versions(self, tenant: str) -> list[int]:
+        with self._lock:
+            return sorted(self._snaps.get(tenant, {}))
+
+    def tenants(self) -> list[str]:
+        with self._lock:
+            return sorted(self._snaps)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return sum(len(s) for s in self._snaps.values())

@@ -1,6 +1,11 @@
 """Layer-pattern compiler + config invariants (hypothesis-backed)."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+try:  # property-based tests skip gracefully on minimal installs
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:
+    hypothesis = None
 
 from repro.configs.registry import ARCH_NAMES, SHAPES, cell_supported, get_config, reduced_config
 from repro.models.config import group_pattern
@@ -13,14 +18,21 @@ def _expand(groups):
     return tuple(out)
 
 
-@hypothesis.given(
-    pattern=st.lists(st.sampled_from(["global", "local", "rglru", "ssd"]), min_size=1, max_size=40)
-)
-@hypothesis.settings(max_examples=200, deadline=None)
-def test_group_pattern_roundtrip(pattern):
+def test_group_pattern_roundtrip():
     """Folding into scan groups must exactly reproduce the layer sequence."""
-    groups = group_pattern(tuple(pattern))
-    assert _expand(groups) == tuple(pattern)
+    pytest.importorskip("hypothesis")
+
+    @hypothesis.given(
+        pattern=st.lists(
+            st.sampled_from(["global", "local", "rglru", "ssd"]), min_size=1, max_size=40
+        )
+    )
+    @hypothesis.settings(max_examples=200, deadline=None)
+    def check(pattern):
+        groups = group_pattern(tuple(pattern))
+        assert _expand(groups) == tuple(pattern)
+
+    check()
 
 
 def test_group_pattern_folds_uniform_stacks():

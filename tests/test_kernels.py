@@ -1,13 +1,17 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracles."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ops import fd_gram, fd_project, flash_attention
-from repro.kernels.ref import ref_attention, ref_fd_gram, ref_fd_project
+try:  # property-based tests skip gracefully on minimal installs
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:
+    hypothesis = None
+
+from repro.kernels.ops import fd_gram, fd_project, flash_attention, quadform
+from repro.kernels.ref import ref_attention, ref_fd_gram, ref_fd_project, ref_quadform
 
 RNG = np.random.default_rng(0)
 
@@ -65,16 +69,32 @@ def test_flash_attention_bf16():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-2, atol=5e-2)
 
 
-@hypothesis.given(
-    l=st.integers(2, 40),
-    d=st.integers(2, 300),
-    scale=st.floats(0.1, 100.0),
-)
-@hypothesis.settings(max_examples=20, deadline=None)
-def test_fd_gram_property(l, d, scale):
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("l,d,n", [(8, 128, 128), (32, 512, 256), (17, 300, 37), (64, 1024, 1024)])
+def test_quadform_sweep(l, d, n, dtype):
+    b = jnp.asarray(RNG.normal(size=(l, d)), dtype)
+    x = jnp.asarray(RNG.normal(size=(n, d)), dtype)
+    got = np.asarray(quadform(b, x))
+    want = np.asarray(ref_quadform(b, x))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * d)
+
+
+def test_fd_gram_property():
     """Gram kernel is exact-psd and scale-consistent for any (L, d)."""
-    b = jnp.asarray(RNG.normal(size=(l, d)) * scale, jnp.float32)
-    g = np.asarray(fd_gram(b))
-    np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-3 * scale**2)
-    want = np.asarray(ref_fd_gram(b))
-    np.testing.assert_allclose(g, want, rtol=1e-4, atol=1e-3 * scale**2 * d)
+    pytest.importorskip("hypothesis")
+
+    @hypothesis.given(
+        l=st.integers(2, 40),
+        d=st.integers(2, 300),
+        scale=st.floats(0.1, 100.0),
+    )
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def check(l, d, scale):
+        b = jnp.asarray(RNG.normal(size=(l, d)) * scale, jnp.float32)
+        g = np.asarray(fd_gram(b))
+        np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-3 * scale**2)
+        want = np.asarray(ref_fd_gram(b))
+        np.testing.assert_allclose(g, want, rtol=1e-4, atol=1e-3 * scale**2 * d)
+
+    check()

@@ -60,7 +60,9 @@ def test_checkpoint_corruption_detected():
     with tempfile.TemporaryDirectory() as d:
         path = save(d, 1, state)
         # corrupt one shard
-        victim = next(f for f in sorted(os.listdir(path)) if f.endswith(".zst"))
+        victim = next(
+            f for f in sorted(os.listdir(path)) if f.endswith((".zst", ".zlib"))
+        )
         with open(os.path.join(path, victim), "r+b") as f:
             f.seek(8)
             f.write(b"\x00\x00\x00\x00")
