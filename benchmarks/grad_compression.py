@@ -7,7 +7,6 @@ tests/test_train.py (subprocess, 8 devices).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

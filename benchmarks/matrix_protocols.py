@@ -6,6 +6,10 @@ the two all-data baselines the paper uses (centralized FD, offline SVD_k).
 Checks the paper's qualitative findings: SVD << eps for PAMAP (low rank),
 SVD ~ 6e-3 for MSD (high rank); P1 accurate but expensive; P2 cheapest
 deterministic; P3wor dominates P3wr.
+
+Protocols are enumerated and driven through the runtime registry
+(``repro.runtime.registry``): one typed interface — step / matrix /
+comm_report — instead of per-protocol result handling.
 """
 from __future__ import annotations
 
@@ -13,10 +17,8 @@ import numpy as np
 
 from benchmarks.common import emit, scale, timed
 from repro.core.fd import FDSketch
-from repro.core.protocols import run_matrix_protocol
 from repro.data.synthetic import msd_like, pamap_like, site_assignment
-
-PROTOS = ["P1", "P2", "P3", "P3wr"]
+from repro.runtime.registry import create_protocol, protocol_names
 
 
 def _svd_err(a, k):
@@ -25,11 +27,25 @@ def _svd_err(a, k):
     return float(np.linalg.norm(a.T @ a - bk.T @ bk, 2) / np.sum(a * a))
 
 
+def _cov_err(eng, ata, frob):
+    """Paper err metric for a registry engine's sketch (MatrixResult.covariance_error)."""
+    b = eng.matrix()
+    return float(np.linalg.norm(ata - b.T @ b, 2) / max(frob, 1e-300))
+
+
 def _dataset(name):
     n = int(150_000 * scale())
     if name == "pamap":
         return pamap_like(n, seed=21), 30
     return msd_like(n, seed=22), 50
+
+
+def _run_event(proto, a, sites, m, eps, seed):
+    """Stream the whole matrix through a registry event engine; returns
+    (err_fn_inputs, comm_total) via the uniform interface."""
+    eng = create_protocol(proto, engine="event", m=m, eps=eps, d=a.shape[1], seed=seed)
+    eng.step(a, sites)
+    return eng
 
 
 def run() -> None:
@@ -48,31 +64,30 @@ def run() -> None:
         _, us = timed(fd.extend, a)
         emit(f"matrix/table1/{ds}/FD", us, f"err={fd.covariance_error(a):.3e};msg={n}")
 
-        for proto in PROTOS:
-            res, us = timed(run_matrix_protocol, proto, a, sites, m, eps, seed=1)
-            err = res.covariance_error(ata, frob)
+        for proto in protocol_names("event"):
+            eng, us = timed(_run_event, proto, a, sites, m, eps, 1)
             emit(
                 f"matrix/table1/{ds}/{proto}",
                 us,
-                f"err={err:.3e};msg={res.comm.total(m)}",
+                f"err={_cov_err(eng, ata, frob):.3e};msg={eng.comm_report().total}",
             )
 
         # Fig 2/3 (a-b): sweep eps
         for eps_i in [5e-2, 1e-1, 5e-1]:
             for proto in ["P2", "P3"]:
-                res, us = timed(run_matrix_protocol, proto, a, sites, m, eps_i, seed=2)
+                eng, us = timed(_run_event, proto, a, sites, m, eps_i, 2)
                 emit(
                     f"matrix/fig23/{ds}/{proto}/eps={eps_i:g}",
                     us,
-                    f"err={res.covariance_error(ata, frob):.3e};msg={res.comm.total(m)}",
+                    f"err={_cov_err(eng, ata, frob):.3e};msg={eng.comm_report().total}",
                 )
         # Fig 2/3 (c-d): sweep m
         for m_i in [10, 50, 100]:
             sites_i = site_assignment(n, m_i, seed=24)
             for proto in ["P2", "P3"]:
-                res, us = timed(run_matrix_protocol, proto, a, sites_i, m_i, eps, seed=3)
+                eng, us = timed(_run_event, proto, a, sites_i, m_i, eps, 3)
                 emit(
                     f"matrix/fig23/{ds}/{proto}/m={m_i}",
                     us,
-                    f"err={res.covariance_error(ata, frob):.3e};msg={res.comm.total(m_i)}",
+                    f"err={_cov_err(eng, ata, frob):.3e};msg={eng.comm_report().total}",
                 )

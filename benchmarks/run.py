@@ -18,6 +18,7 @@ def main() -> None:
         p4_negative,
         query_service,
         roofline_table,
+        runtime_pipeline,
         tradeoff,
     )
 
@@ -31,6 +32,7 @@ def main() -> None:
         grad_compression,
         kernels_bench,
         query_service,
+        runtime_pipeline,
         roofline_table,
     ):
         name = mod.__name__.split(".")[-1]

@@ -1,0 +1,109 @@
+"""Streaming runtime throughput: packed cross-tenant serving vs per-tenant
+serial dispatch, plus publish latency.
+
+Drives a ``StreamingPipeline`` with many tenants end to end — policy-driven
+ingest→publish, then a query storm served two ways:
+
+  * serial — one ``quadform`` engine call per tenant (T kernel dispatches),
+  * packed — one ``query_packed`` call for all tenants whose sketches share
+    (l, d) (a single ``quadform_packed`` launch).
+
+This is the heavy multi-user regime the runtime layer exists for: many
+tenants, modest per-tenant batches, where per-dispatch overhead dominates.
+Emits CSV rows and writes ``BENCH_runtime_pipeline.json`` with packed /
+serial queries-per-sec, their speedup, and mean publish latency.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, scale
+from repro.data.synthetic import lowrank_stream
+
+TENANTS = 8
+QUERIES_PER_TENANT = 64
+D, EPS = 128, 0.2
+ITERS = 10
+
+
+def run() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.query.engine import PackedRequest
+    from repro.runtime import EveryKSteps, StreamingPipeline
+
+    n = max(512, int(4096 * scale()))
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    pipe = StreamingPipeline(mesh, eps=EPS, policy=EveryKSteps(2))
+    streams = {
+        f"tenant-{t}": lowrank_stream(n, D, rank=4 + t % 3, seed=t)
+        for t in range(TENANTS)
+    }
+    for tenant in streams:
+        pipe.add_tenant(tenant, D)
+
+    batch = max(128, n // 8)
+    for tenant, a in streams.items():
+        for i in range(0, n, batch):
+            pipe.ingest(tenant, jnp.asarray(a[i : i + batch]))
+
+    publishes = sum(pipe.stats(t).publishes for t in pipe.tenants())
+    publish_mean_s = pipe.publish_latency_s() / max(publishes, 1)
+    emit(
+        f"runtime/publish/tenants={TENANTS}",
+        publish_mean_s * 1e6,
+        f"publishes={publishes}",
+    )
+
+    rng = np.random.default_rng(99)
+    xs = {
+        tenant: (lambda x: x / np.linalg.norm(x, axis=1, keepdims=True))(
+            rng.normal(size=(QUERIES_PER_TENANT, D)).astype(np.float32)
+        )
+        for tenant in streams
+    }
+    engine = pipe.engine
+    requests = [PackedRequest(tenant, x) for tenant, x in xs.items()]
+    total_q = TENANTS * QUERIES_PER_TENANT
+
+    # Warm both paths (jit compile + store reads), then verify equivalence.
+    packed = engine.query_packed(requests)
+    serial = [engine.query_batch(x, tenant=t, path="pallas") for t, x in xs.items()]
+    for p, s in zip(packed, serial):
+        np.testing.assert_allclose(p.estimates, s.estimates, rtol=1e-5)
+
+    t0 = time.perf_counter()
+    for _ in range(ITERS):
+        engine.query_packed(requests)
+    packed_s = (time.perf_counter() - t0) / ITERS
+
+    t0 = time.perf_counter()
+    for _ in range(ITERS):
+        for tenant, x in xs.items():
+            engine.query_batch(x, tenant=tenant, path="pallas")
+    serial_s = (time.perf_counter() - t0) / ITERS
+
+    packed_qps = total_q / packed_s
+    serial_qps = total_q / serial_s
+    speedup = packed_qps / serial_qps
+    emit(f"runtime/serve_serial/q={total_q}", serial_s / total_q * 1e6, f"qps={serial_qps:.0f}")
+    emit(f"runtime/serve_packed/q={total_q}", packed_s / total_q * 1e6, f"qps={packed_qps:.0f}")
+    emit("runtime/speedup_packed_vs_serial", 0.0, f"x{speedup:.2f}")
+
+    out = {
+        "tenants": TENANTS,
+        "queries_per_tenant": QUERIES_PER_TENANT,
+        "sketch": {"d": D, "eps": EPS, "rows_streamed_per_tenant": n},
+        "publishes": publishes,
+        "publish_latency_s_mean": publish_mean_s,
+        "queries_per_sec": {"packed": packed_qps, "per_tenant_serial": serial_qps},
+        "speedup_packed_vs_serial": speedup,
+    }
+    path = os.path.join(os.getcwd(), "BENCH_runtime_pipeline.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)

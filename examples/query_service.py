@@ -10,7 +10,6 @@ paper's error envelope reported.
     PYTHONPATH=src python examples/query_service.py [--queries 2048]
 """
 import argparse
-import time
 
 import jax.numpy as jnp
 import numpy as np

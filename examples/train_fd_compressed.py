@@ -15,7 +15,6 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data import TokenStream
 from repro.models.config import ModelConfig

@@ -1,1 +1,1 @@
-from repro.ckpt.checkpoint import AsyncCheckpointer, latest_step, restore, save
+from repro.ckpt.checkpoint import AsyncCheckpointer, latest_step, read_extra, restore, save

@@ -35,7 +35,7 @@ try:  # optional: fall back to stdlib zlib on minimal installs
 except ModuleNotFoundError:
     zstandard = None
 
-__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+__all__ = ["save", "restore", "latest_step", "read_extra", "AsyncCheckpointer"]
 
 _MANIFEST = "manifest.json"
 
@@ -119,6 +119,18 @@ def latest_step(directory: str) -> int | None:
         if (m := re.fullmatch(r"step_(\d+)", d))
     ]
     return max(steps) if steps else None
+
+
+def read_extra(directory: str, step: int) -> dict:
+    """Read only the ``extra`` metadata of a checkpoint (no leaf I/O).
+
+    Lets callers whose tree *structure* is described by ``extra`` (e.g. the
+    sketch store, whose tenants/versions/shapes vary) build the restore
+    template before calling ``restore``.
+    """
+    path = os.path.join(directory, f"step_{step:09d}", _MANIFEST)
+    with open(path) as f:
+        return json.load(f)["extra"]
 
 
 def restore(directory: str, step: int, template, *, shardings=None):

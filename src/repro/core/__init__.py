@@ -19,6 +19,7 @@ from repro.core.fd import (
     fd_update,
     fd_update_stream,
 )
+from repro.core.comm import CommReport
 from repro.core.hh import MGSketch, MGState, SpaceSaving, mg_init, mg_merge, mg_update
 from repro.core.protocols import (
     CommLog,

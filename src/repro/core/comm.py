@@ -1,0 +1,51 @@
+"""Uniform protocol-level message accounting (the paper's units).
+
+Both protocol engines keep engine-specific counters while running — the
+event-driven engine distinguishes element/row messages from rows shipped
+inside sketch sends, the shard_map engine keeps jit-able i32 scalars — but
+everything downstream (tracker snapshots, the runtime registry, benchmarks)
+consumes one shape: ``CommReport``.  A message is one d-dimensional row or
+one scalar pair; a sketch of r rows costs r messages; a coordinator
+broadcast costs m messages.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["CommReport"]
+
+
+@dataclass(frozen=True)
+class CommReport:
+    """Engine-agnostic communication report with uniform field names.
+
+    scalar_msgs:      (total, W_i)-style scalar messages, site -> C.
+    row_msgs:         d-dimensional row messages, site -> C — element/
+                      direction sends *and* rows shipped inside sketches.
+    broadcast_events: coordinator -> all-sites broadcasts (each costs m).
+    m:                number of sites, so ``total`` is self-contained.
+    """
+
+    scalar_msgs: int
+    row_msgs: int
+    broadcast_events: int
+    m: int
+
+    @property
+    def total(self) -> int:
+        return self.scalar_msgs + self.row_msgs + self.broadcast_events * self.m
+
+    def as_dict(self) -> dict[str, int]:
+        return {
+            "scalar_msgs": self.scalar_msgs,
+            "row_msgs": self.row_msgs,
+            "broadcast_events": self.broadcast_events,
+            "m": self.m,
+            "total": self.total,
+        }
+
+    def __getitem__(self, key: str) -> int:
+        # Dict-style access; "scalar"/"rows" kept as aliases of the old
+        # TrackerSnapshot.messages dict keys.
+        aliases = {"scalar": "scalar_msgs", "rows": "row_msgs"}
+        return self.as_dict()[aliases.get(key, key)]

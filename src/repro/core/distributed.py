@@ -30,7 +30,6 @@ All three matrix protocols are provided with fixed-shape jit-able states:
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -38,6 +37,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import fd as fdlib
+from repro.core.comm import CommReport
 
 __all__ = [
     "ProtocolConfig",
@@ -52,6 +52,8 @@ __all__ = [
     "p3_step",
     "p2_query",
     "p3_matrix",
+    "protocol_matrix",
+    "protocol_frob",
     "make_protocol_runner",
 ]
 
@@ -87,6 +89,15 @@ class CommCounters(NamedTuple):
     def zero() -> "CommCounters":
         z = jnp.zeros((), jnp.int32)
         return CommCounters(z, z, z)
+
+    def report(self, m: int) -> CommReport:
+        """Collapse the jit-able counters to the engine-agnostic report."""
+        return CommReport(
+            scalar_msgs=int(self.scalar_msgs),
+            row_msgs=int(self.row_msgs),
+            broadcast_events=int(self.broadcast_events),
+            m=int(m),
+        )
 
 
 def _row_sq(x: jax.Array) -> jax.Array:
@@ -312,6 +323,30 @@ def p3_matrix(st: P3State) -> jax.Array:
 
 _INITS = {"P1": p1_init, "P2": p2_init, "P3": p3_init}
 _STEPS = {"P1": p1_step, "P2": p2_step, "P3": p3_step}
+_MATRICES = {
+    "P1": lambda st: fdlib.fd_matrix(st.coord_fd),
+    "P2": lambda st: fdlib.fd_matrix(st.coord_fd),
+    "P3": p3_matrix,
+}
+
+
+def protocol_matrix(protocol: str, state) -> jax.Array:
+    """The coordinator's sketch matrix B for any protocol state (uniform)."""
+    return _MATRICES[protocol](state)
+
+
+def protocol_frob(protocol: str, state, matrix=None) -> float:
+    """Coordinator estimate of the stream mass ``||A||_F^2`` (uniform).
+
+    P1/P2 carry the coordinator's running broadcast estimate ``f_hat``
+    (within (1+eps) of ``||A||_F^2``); P3's priority-sample estimator matrix
+    preserves the stream mass by construction, so its own Frobenius norm
+    stands in (pass ``matrix`` to reuse an already-materialized sketch).
+    """
+    if protocol in ("P1", "P2"):
+        return float(state.f_hat)
+    b = protocol_matrix(protocol, state) if matrix is None else matrix
+    return float(jnp.sum(b * b))
 
 
 def make_protocol_runner(protocol: str, cfg: ProtocolConfig, mesh: jax.sharding.Mesh):

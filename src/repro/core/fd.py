@@ -24,7 +24,6 @@ callers get the *instance-specific* bound, usually far tighter).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

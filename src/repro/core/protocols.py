@@ -24,10 +24,11 @@ broadcast costs m messages.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.comm import CommReport
 from repro.core.fd import FDSketch
 from repro.core.hh import MGSketch
 
@@ -39,6 +40,7 @@ __all__ = [
     "run_matrix_protocol",
     "HH_PROTOCOLS",
     "MATRIX_PROTOCOLS",
+    "MATRIX_STREAMS",
 ]
 
 
@@ -57,6 +59,15 @@ class CommLog:
             + self.item_msgs
             + self.sketch_rows
             + self.broadcast_events * m
+        )
+
+    def report(self, m: int) -> CommReport:
+        """Collapse to the engine-agnostic report (item + sketch rows unify)."""
+        return CommReport(
+            scalar_msgs=int(self.scalar_msgs),
+            row_msgs=int(self.item_msgs + self.sketch_rows),
+            broadcast_events=int(self.broadcast_events),
+            m=int(m),
         )
 
 
@@ -301,40 +312,61 @@ def run_hh_protocol(
 
 
 # ---------------------------------------------------------------------------
-# Matrix tracking
+# Matrix tracking — resumable stream engines + one-shot wrappers
+#
+# Each protocol is a small class with ``step(rows, sites)`` (absorb a batch,
+# continuing the event-at-a-time semantics exactly where the last batch left
+# off) and ``result()`` (the coordinator's current MatrixResult, callable at
+# any time — this is the paper's "continuous" query surface).  The module
+# level ``_mpX`` functions are one-shot wrappers kept for the benchmarks and
+# figure scripts; ``repro.runtime.registry`` builds its event-engine entries
+# from the stream classes.
 # ---------------------------------------------------------------------------
 
 
-def _mp1(rows, sites, m, eps, rng, l=None) -> MatrixResult:
+class MP1Stream:
     """Matrix P1: per-site FD_{eps/2}, batched sketch shipping + FD merge."""
-    d = rows.shape[1]
-    if l is None:
-        l = max(2, math.ceil(4.0 / eps))  # FD err 2/l <= eps/2
-    comm = CommLog()
-    site_fd = [FDSketch(l, d) for _ in range(m)]
-    site_f = [0.0] * m
-    coord = FDSketch(l, d)
-    f_c = 0.0
-    f_hat = 1.0
 
-    row_sq = np.einsum("nd,nd->n", rows, rows)
-    for i, j in enumerate(sites.tolist()):
-        fd = site_fd[j]
-        fd.append(rows[i])
-        site_f[j] += float(row_sq[i])
-        if site_f[j] >= (eps / (2 * m)) * f_hat:
-            mat = fd.matrix()
-            nz = mat[np.einsum("rd,rd->r", mat, mat) > 0]
-            comm.sketch_rows += int(nz.shape[0])
-            comm.scalar_msgs += 1
-            coord.merge(fd)
-            f_c += site_f[j]
-            site_fd[j] = FDSketch(l, d)
-            site_f[j] = 0.0
-            if f_c / f_hat > 1.0 + eps / 2.0:
-                f_hat = f_c
-                comm.broadcast_events += 1
-    return MatrixResult(coord.matrix(), f_hat, comm, m, eps)
+    def __init__(self, m, eps, d, rng, l=None):
+        if l is None:
+            l = max(2, math.ceil(4.0 / eps))  # FD err 2/l <= eps/2
+        self.m, self.eps, self.d = m, eps, d
+        self.comm = CommLog()
+        self.site_fd = [FDSketch(l, d) for _ in range(m)]
+        self.site_f = [0.0] * m
+        self.l = l
+        self.coord = FDSketch(l, d)
+        self.f_c = 0.0
+        self.f_hat = 1.0
+
+    def step(self, rows, sites) -> None:
+        m, eps = self.m, self.eps
+        row_sq = np.einsum("nd,nd->n", rows, rows)
+        for i, j in enumerate(sites.tolist()):
+            fd = self.site_fd[j]
+            fd.append(rows[i])
+            self.site_f[j] += float(row_sq[i])
+            if self.site_f[j] >= (eps / (2 * m)) * self.f_hat:
+                mat = fd.matrix()
+                nz = mat[np.einsum("rd,rd->r", mat, mat) > 0]
+                self.comm.sketch_rows += int(nz.shape[0])
+                self.comm.scalar_msgs += 1
+                self.coord.merge(fd)
+                self.f_c += self.site_f[j]
+                self.site_fd[j] = FDSketch(self.l, self.d)
+                self.site_f[j] = 0.0
+                if self.f_c / self.f_hat > 1.0 + eps / 2.0:
+                    self.f_hat = self.f_c
+                    self.comm.broadcast_events += 1
+
+    def result(self) -> MatrixResult:
+        return MatrixResult(self.coord.matrix(), self.f_hat, self.comm, self.m, self.eps)
+
+
+def _mp1(rows, sites, m, eps, rng, l=None) -> MatrixResult:
+    eng = MP1Stream(m, eps, rows.shape[1], rng, l=l)
+    eng.step(rows, sites)
+    return eng.result()
 
 
 class _MP2Site:
@@ -355,7 +387,8 @@ class _MP2Site:
         self.pending_sq = 0.0
 
     def append(self, row: np.ndarray) -> None:
-        self.pending.append(row)
+        # Copy: pending rows outlive the caller's batch buffer (stream use).
+        self.pending.append(np.array(row, dtype=np.float64))
         self.pending_sq += float(row @ row)
 
     def maybe_send(self, thresh: float) -> list[np.ndarray]:
@@ -379,131 +412,173 @@ class _MP2Site:
         return out
 
 
-def _mp2(rows, sites, m, eps, rng) -> MatrixResult:
+class MP2Stream:
     """Matrix P2: the paper's best protocol — per-direction thresholds."""
-    d = rows.shape[1]
-    comm = CommLog()
-    site = [_MP2Site(d) for _ in range(m)]
-    site_f = [0.0] * m
-    f_hat = 1.0
-    n_msg = 0
-    coord_rows: list[np.ndarray] = []
 
-    row_sq = np.einsum("nd,nd->n", rows, rows)
-    thresh = (eps / m) * f_hat
-    for i, j in enumerate(sites.tolist()):
-        site_f[j] += float(row_sq[i])
-        if site_f[j] >= thresh:
-            comm.scalar_msgs += 1
-            f_hat += site_f[j]
-            site_f[j] = 0.0
-            n_msg += 1
-            if n_msg >= m:
-                n_msg = 0
-                comm.broadcast_events += 1
-                thresh = (eps / m) * f_hat
-        st = site[j]
-        st.append(rows[i])
-        sent = st.maybe_send(thresh)
-        if sent:
-            comm.item_msgs += len(sent)
-            coord_rows.extend(sent)
+    def __init__(self, m, eps, d, rng):
+        self.m, self.eps, self.d = m, eps, d
+        self.comm = CommLog()
+        self.site = [_MP2Site(d) for _ in range(m)]
+        self.site_f = [0.0] * m
+        self.f_hat = 1.0
+        self.n_msg = 0
+        self.thresh = (eps / m) * self.f_hat
+        self.coord_rows: list[np.ndarray] = []
 
-    b = np.stack(coord_rows) if coord_rows else np.zeros((0, d))
-    return MatrixResult(b, f_hat, comm, m, eps)
+    def step(self, rows, sites) -> None:
+        m, eps = self.m, self.eps
+        row_sq = np.einsum("nd,nd->n", rows, rows)
+        for i, j in enumerate(sites.tolist()):
+            self.site_f[j] += float(row_sq[i])
+            if self.site_f[j] >= self.thresh:
+                self.comm.scalar_msgs += 1
+                self.f_hat += self.site_f[j]
+                self.site_f[j] = 0.0
+                self.n_msg += 1
+                if self.n_msg >= m:
+                    self.n_msg = 0
+                    self.comm.broadcast_events += 1
+                    self.thresh = (eps / m) * self.f_hat
+            st = self.site[j]
+            st.append(rows[i])
+            sent = st.maybe_send(self.thresh)
+            if sent:
+                self.comm.item_msgs += len(sent)
+                self.coord_rows.extend(sent)
+
+    def result(self) -> MatrixResult:
+        b = np.stack(self.coord_rows) if self.coord_rows else np.zeros((0, self.d))
+        return MatrixResult(b, self.f_hat, self.comm, self.m, self.eps)
+
+
+def _mp2(rows, sites, m, eps, rng) -> MatrixResult:
+    eng = MP2Stream(m, eps, rows.shape[1], rng)
+    eng.step(rows, sites)
+    return eng.result()
+
+
+class MP3Stream:
+    """Matrix P3: priority row-sampling without replacement."""
+
+    def __init__(self, m, eps, d, rng, s=None):
+        if s is None:
+            s = max(8, math.ceil((1.0 / eps**2) * math.log(max(math.e, 1.0 / eps))))
+        self.m, self.eps, self.d, self.s = m, eps, d, s
+        self.rng = rng
+        self.comm = CommLog()
+        self.tau = 1.0
+        self.q_cur: list[tuple[np.ndarray, float, float]] = []  # (row, w, rho)
+        self.q_next: list[tuple[np.ndarray, float, float]] = []
+
+    def step(self, rows, sites) -> None:
+        w_all = np.einsum("nd,nd->n", rows, rows)
+        rho_all = w_all / np.maximum(self.rng.uniform(size=rows.shape[0]), 1e-300)
+        for i, (w, rho) in enumerate(zip(w_all.tolist(), rho_all.tolist())):
+            if rho >= self.tau:
+                self.comm.item_msgs += 1
+                # Copy: sampled rows outlive the caller's batch buffer.
+                if rho >= 2.0 * self.tau:
+                    self.q_next.append((rows[i].copy(), w, rho))
+                else:
+                    self.q_cur.append((rows[i].copy(), w, rho))
+                if len(self.q_next) >= self.s:
+                    self.tau *= 2.0
+                    self.comm.broadcast_events += 1
+                    self.q_cur = self.q_next
+                    self.q_next = [t for t in self.q_cur if t[2] >= 2.0 * self.tau]
+                    self.q_cur = [t for t in self.q_cur if t[2] < 2.0 * self.tau]
+
+    def result(self) -> MatrixResult:
+        sample = self.q_cur + self.q_next
+        if not sample:
+            return MatrixResult(np.zeros((0, self.d)), 0.0, self.comm, self.m, self.eps)
+        sample = sorted(sample, key=lambda t: t[2])
+        rho_hat = sample[0][2]
+        kept = sample[1:] if len(sample) > 1 else sample
+        out = []
+        f_hat = 0.0
+        for row, w, _rho in kept:
+            wbar = max(w, rho_hat)
+            f_hat += wbar
+            scale = math.sqrt(wbar / max(w, 1e-300))
+            out.append(row * scale)
+        return MatrixResult(np.stack(out), f_hat, self.comm, self.m, self.eps)
 
 
 def _mp3(rows, sites, m, eps, rng, s=None) -> MatrixResult:
-    """Matrix P3: priority row-sampling without replacement."""
-    d = rows.shape[1]
-    if s is None:
-        s = max(8, math.ceil((1.0 / eps**2) * math.log(max(math.e, 1.0 / eps))))
-    comm = CommLog()
-    tau = 1.0
-    q_cur: list[tuple[int, float, float]] = []  # (row index, w, rho)
-    q_next: list[tuple[int, float, float]] = []
+    eng = MP3Stream(m, eps, rows.shape[1], rng, s=s)
+    eng.step(rows, sites)
+    return eng.result()
 
-    w_all = np.einsum("nd,nd->n", rows, rows)
-    rho_all = w_all / np.maximum(rng.uniform(size=rows.shape[0]), 1e-300)
-    for i, (w, rho) in enumerate(zip(w_all.tolist(), rho_all.tolist())):
-        if rho >= tau:
-            comm.item_msgs += 1
-            if rho >= 2.0 * tau:
-                q_next.append((i, w, rho))
-            else:
-                q_cur.append((i, w, rho))
-            if len(q_next) >= s:
-                tau *= 2.0
-                comm.broadcast_events += 1
-                q_cur = q_next
-                q_next = [t for t in q_cur if t[2] >= 2.0 * tau]
-                q_cur = [t for t in q_cur if t[2] < 2.0 * tau]
 
-    sample = q_cur + q_next
-    if not sample:
-        return MatrixResult(np.zeros((0, d)), 0.0, comm, m, eps)
-    sample.sort(key=lambda t: t[2])
-    rho_hat = sample[0][2]
-    kept = sample[1:] if len(sample) > 1 else sample
-    out = []
-    f_hat = 0.0
-    for i, w, _rho in kept:
-        wbar = max(w, rho_hat)
-        f_hat += wbar
-        scale = math.sqrt(wbar / max(w, 1e-300))
-        out.append(rows[i] * scale)
-    return MatrixResult(np.stack(out), f_hat, comm, m, eps)
+class MP3wrStream:
+    """Matrix P3 with replacement: s independent row samplers.
+
+    Uniform draws are blocked by ``min(n, 1 << 22) // s`` within each
+    ``step`` call, so a single whole-stream step reproduces the historical
+    one-shot draw sequence exactly.
+    """
+
+    def __init__(self, m, eps, d, rng, s=None):
+        if s is None:
+            s = max(8, math.ceil(1.0 / eps**2))
+        self.m, self.eps, self.d, self.s = m, eps, d, s
+        self.rng = rng
+        self.comm = CommLog()
+        self.tau = 1.0
+        self.top1_rho = np.zeros(s)
+        self.top2_rho = np.zeros(s)
+        self.top1_row = [None] * s
+        self.top1_w = np.zeros(s)
+
+    def step(self, rows, sites) -> None:
+        s = self.s
+        w_all = np.einsum("nd,nd->n", rows, rows)
+        n = rows.shape[0]
+        block = max(1, min(n, 1 << 22) // max(s, 1) or 1)
+        i = 0
+        while i < n:
+            hi = min(n, i + block)
+            u = self.rng.uniform(size=(hi - i, s))
+            rho = w_all[i:hi, None] / np.maximum(u, 1e-300)
+            send_any = rho >= self.tau
+            for r in range(hi - i):
+                hit = np.nonzero(send_any[r])[0]
+                if hit.size == 0:
+                    continue
+                self.comm.item_msgs += int(hit.size)
+                rr = rho[r, hit]
+                for t, p in zip(hit.tolist(), rr.tolist()):
+                    if p > self.top1_rho[t]:
+                        self.top2_rho[t] = self.top1_rho[t]
+                        self.top1_rho[t] = p
+                        self.top1_row[t] = rows[i + r].copy()  # outlives the batch
+                        self.top1_w[t] = w_all[i + r]
+                    elif p > self.top2_rho[t]:
+                        self.top2_rho[t] = p
+                if np.all(self.top2_rho > 2.0 * self.tau):
+                    self.tau *= 2.0
+                    self.comm.broadcast_events += 1
+            i = hi
+
+    def result(self) -> MatrixResult:
+        w_hat = float(np.mean(self.top2_rho))
+        out = []
+        for t in range(self.s):
+            row = self.top1_row[t]
+            if row is None:
+                continue
+            w = float(self.top1_w[t])
+            scale = math.sqrt((w_hat / self.s) / max(w, 1e-300))
+            out.append(row * scale)
+        b = np.stack(out) if out else np.zeros((0, self.d))
+        return MatrixResult(b, w_hat, self.comm, self.m, self.eps)
 
 
 def _mp3wr(rows, sites, m, eps, rng, s=None) -> MatrixResult:
-    """Matrix P3 with replacement: s independent row samplers."""
-    d = rows.shape[1]
-    if s is None:
-        s = max(8, math.ceil(1.0 / eps**2))
-    comm = CommLog()
-    tau = 1.0
-    top1_rho = np.zeros(s)
-    top2_rho = np.zeros(s)
-    top1_idx = np.full(s, -1, np.int64)
-
-    w_all = np.einsum("nd,nd->n", rows, rows)
-    n = rows.shape[0]
-    block = max(1, min(n, 1 << 22) // max(s, 1) or 1)
-    i = 0
-    while i < n:
-        hi = min(n, i + block)
-        u = rng.uniform(size=(hi - i, s))
-        rho = w_all[i:hi, None] / np.maximum(u, 1e-300)
-        send_any = rho >= tau
-        for r in range(hi - i):
-            hit = np.nonzero(send_any[r])[0]
-            if hit.size == 0:
-                continue
-            comm.item_msgs += int(hit.size)
-            rr = rho[r, hit]
-            for t, p in zip(hit.tolist(), rr.tolist()):
-                if p > top1_rho[t]:
-                    top2_rho[t] = top1_rho[t]
-                    top1_rho[t] = p
-                    top1_idx[t] = i + r
-                elif p > top2_rho[t]:
-                    top2_rho[t] = p
-            if np.all(top2_rho > 2.0 * tau):
-                tau *= 2.0
-                comm.broadcast_events += 1
-        i = hi
-
-    w_hat = float(np.mean(top2_rho))
-    out = []
-    for t in range(s):
-        idx = int(top1_idx[t])
-        if idx < 0:
-            continue
-        w = float(w_all[idx])
-        scale = math.sqrt((w_hat / s) / max(w, 1e-300))
-        out.append(rows[idx] * scale)
-    b = np.stack(out) if out else np.zeros((0, d))
-    return MatrixResult(b, w_hat, comm, m, eps)
+    eng = MP3wrStream(m, eps, rows.shape[1], rng, s=s)
+    eng.step(rows, sites)
+    return eng.result()
 
 
 def _mp4(rows, sites, m, eps, rng, variant="fixed") -> MatrixResult:
@@ -556,6 +631,16 @@ MATRIX_PROTOCOLS = {
     "P3": _mp3,
     "P3wr": _mp3wr,
     "P4": _mp4,
+}
+
+# Resumable stream engines (init/step/result) — the registry's event entries.
+# P4 is deliberately absent: it is the paper's negative result and must not
+# be offered behind an interface whose contract is the eps guarantee.
+MATRIX_STREAMS = {
+    "P1": MP1Stream,
+    "P2": MP2Stream,
+    "P3": MP3Stream,
+    "P3wr": MP3wrStream,
 }
 
 

@@ -12,17 +12,21 @@ step, streaming answers to:
 at the paper's O((m/eps) log beta N) communication cost instead of shipping
 activations anywhere.  This is the paper's motivating use ("real-time
 approximation of the distributed streaming matrix") transplanted to training.
+
+The tracker is a thin facade over the runtime protocol registry
+(``repro.runtime.registry``): protocol dispatch, sketch extraction, the
+Frobenius estimate, message accounting, and the quadform query path all
+come from the registered ``SketchProtocol`` — there are no per-protocol
+branches here.
 """
 from __future__ import annotations
 
 from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distributed as dist
-from repro.core import fd as fdlib
+from repro.core.comm import CommReport
 
 __all__ = ["DistributedMatrixTracker", "TrackerSnapshot"]
 
@@ -32,11 +36,11 @@ class TrackerSnapshot(NamedTuple):
     singular_values: np.ndarray  # (k,)
     frob_estimate: float
     stable_rank: float
-    messages: dict[str, int]
+    messages: CommReport
 
 
 class DistributedMatrixTracker:
-    """Facade over the shard_map protocol engine (default: protocol P2)."""
+    """Facade over the registry's shard_map engine (default: protocol P2)."""
 
     def __init__(
         self,
@@ -48,27 +52,45 @@ class DistributedMatrixTracker:
         protocol: str = "P2",
         rows_per_step: int = 0,
     ):
-        m = mesh.shape[axis]
-        self.cfg = dist.ProtocolConfig(eps=eps, m=m, d=d, axis=axis).resolved()
+        # Lazy: runtime sits above core in the layering; importing it at
+        # module scope would cycle through repro.runtime.pipeline.
+        from repro.runtime.registry import create_protocol
+
+        self._proto = create_protocol(
+            protocol, engine="shard", mesh=mesh, d=d, eps=eps, axis=axis
+        )
+        self.cfg = self._proto.cfg
         self.protocol = protocol
         self.rows_per_step = rows_per_step
-        self.rows_fed = 0
-        self.state, self._step = dist.make_protocol_runner(protocol, self.cfg, mesh)
+
+    @property
+    def state(self):
+        return self._proto.state
+
+    @property
+    def rows_fed(self) -> int:
+        return self._proto.rows_seen
 
     def update(self, rows: jax.Array) -> None:
         """Absorb a global (n, d) batch of rows (sharded over the axis)."""
-        self.state = self._step(self.state, rows)
-        self.rows_fed += int(rows.shape[0])
+        self._proto.step(rows)
 
     def sketch_matrix(self) -> np.ndarray:
-        if self.protocol == "P3":
-            return np.asarray(dist.p3_matrix(self.state))
-        return np.asarray(fdlib.fd_matrix(self.state.coord_fd))
+        return self._proto.matrix()
+
+    def frob_estimate(self) -> float:
+        """Coordinator estimate of ``||A||_F^2`` (uniform across protocols)."""
+        return self._proto.frob_estimate()
 
     def query(self, x: jax.Array) -> float:
-        b = self.sketch_matrix()
-        v = b @ np.asarray(x)
-        return float(v @ v)
+        """``||B x||^2`` via the shared ``kernels.ops.quadform`` path — the
+        same kernel the serving engine launches, so tracker-side and
+        serving-side answers are one code path."""
+        return self._proto.query(np.asarray(x))
+
+    def query_batch(self, x: jax.Array) -> np.ndarray:
+        """Batched ``||B x_j||^2`` over the same quadform path."""
+        return self._proto.query_batch(np.asarray(x))
 
     def publish(self, store, tenant: str = "default", *, meta: dict | None = None):
         """Publish the coordinator sketch into a ``repro.query.SketchStore``.
@@ -78,23 +100,20 @@ class DistributedMatrixTracker:
         while training keeps streaming rows into this tracker.  Returns the
         ``SketchSnapshot``.
         """
-        b = self.sketch_matrix()
-        # P1/P2 carry the coordinator's running mass estimate f_hat
-        # (within (1+eps) of ||A||_F^2); P3's estimator matrix preserves the
-        # stream mass by construction, so its own Frobenius norm stands in.
-        f_hat = getattr(self.state, "f_hat", None)
-        frob = float(f_hat) if f_hat is not None else float(np.sum(b * b))
         md = {"protocol": self.protocol, "m": self.cfg.m}
         if meta:
             md.update(meta)
         return store.publish(
             tenant,
-            b,
-            frob=frob,
+            self.sketch_matrix(),
+            frob=self.frob_estimate(),
             eps=self.cfg.eps,
             n_seen=self.rows_fed,
             meta=md,
         )
+
+    def comm_report(self) -> CommReport:
+        return self._proto.comm_report()
 
     def snapshot(self, k: int = 8) -> TrackerSnapshot:
         b = self.sketch_matrix()
@@ -102,16 +121,10 @@ class DistributedMatrixTracker:
         k = min(k, s.shape[0])
         frob = float(np.sum(s**2))
         sr = frob / max(float(s[0] ** 2), 1e-30) if s.size else 0.0
-        c = self.state.comm
         return TrackerSnapshot(
             basis=vt[:k],
             singular_values=s[:k],
             frob_estimate=frob,
             stable_rank=sr,
-            messages={
-                "scalar": int(c.scalar_msgs),
-                "rows": int(c.row_msgs),
-                "broadcast_events": int(c.broadcast_events),
-                "total": int(c.scalar_msgs + c.row_msgs + c.broadcast_events * self.cfg.m),
-            },
+            messages=self.comm_report(),
         )

@@ -1,2 +1,9 @@
 from repro.data.pipeline import Prefetcher, TokenStream
-from repro.data.synthetic import lm_token_batch, msd_like, pamap_like, site_assignment, zipfian_stream
+from repro.data.synthetic import (
+    lm_token_batch,
+    lowrank_stream,
+    msd_like,
+    pamap_like,
+    site_assignment,
+    zipfian_stream,
+)

@@ -15,6 +15,7 @@ __all__ = [
     "zipfian_stream",
     "pamap_like",
     "msd_like",
+    "lowrank_stream",
     "lm_token_batch",
     "site_assignment",
 ]
@@ -54,6 +55,21 @@ def msd_like(n: int = 100_000, d: int = 90, *, beta: float = 100.0, seed: int = 
     v, _ = np.linalg.qr(rng.normal(size=(d, d)))
     a = u @ v.T
     return _scaled_rows(a, rng, beta)
+
+
+def lowrank_stream(
+    n: int, d: int, *, rank: int = 5, noise: float = 0.05, seed: int = 0
+) -> np.ndarray:
+    """Small low-rank-plus-noise tenant stream with a steep spectrum.
+
+    The runtime demos, benchmarks, and tests all want the same thing: a
+    stream whose sketch is meaningful at tiny `l` (so eps-envelope checks
+    bite) with per-tenant variation via ``seed``/``rank``.
+    """
+    rng = np.random.default_rng(seed)
+    u = rng.normal(size=(n, rank)) * (np.arange(rank, 0, -1) ** 2)
+    a = u @ rng.normal(size=(rank, d)) + noise * rng.normal(size=(n, d))
+    return a.astype(np.float32)
 
 
 def site_assignment(n: int, m: int, *, seed: int = 0) -> np.ndarray:

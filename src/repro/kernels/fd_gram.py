@@ -15,7 +15,6 @@ aligned to the 128-lane requirement.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -18,9 +18,14 @@ from repro.kernels.flash_attention import (
     DEFAULT_BLOCK_Q,
     flash_attention_pallas,
 )
-from repro.kernels.quadform import DEFAULT_BLOCK_D, DEFAULT_BLOCK_N, quadform_pallas
+from repro.kernels.quadform import (
+    DEFAULT_BLOCK_D,
+    DEFAULT_BLOCK_N,
+    quadform_pallas,
+    quadform_packed_pallas,
+)
 
-__all__ = ["fd_gram", "fd_project", "flash_attention", "quadform"]
+__all__ = ["fd_gram", "fd_project", "flash_attention", "quadform", "quadform_packed"]
 
 
 def _on_tpu() -> bool:
@@ -64,6 +69,43 @@ def quadform(
     xp = jnp.pad(x, ((0, np_ - n), (0, dp - d)))
     out = _quadform_padded(bp, xp, block_n=block_n, block_d=block_d, interpret=interpret)
     return out[0, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d", "interpret"))
+def _quadform_packed_padded(b, x, *, block_n, block_d, interpret):
+    return quadform_packed_pallas(b, x, block_n=block_n, block_d=block_d, interpret=interpret)
+
+
+def quadform_packed(
+    b: jax.Array,
+    x: jax.Array,
+    *,
+    block_n: int = 0,
+    block_d: int = 0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Cross-tenant packed ``||B_t x_tj||^2``: (T, L, d) x (T, N, d) -> (T, N).
+
+    One Pallas launch serves every tenant in the pack (vs T separate
+    ``quadform`` dispatches).  Padding rules match ``quadform``; zero pad
+    rows/cols are exact no-ops, so ragged per-tenant query counts can be
+    zero-padded up to a shared N.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    t, l, d = b.shape
+    n = x.shape[1]
+    if block_n <= 0:
+        block_n = min(DEFAULT_BLOCK_N, _pad_to(n, 128))
+    if block_d <= 0:
+        block_d = min(DEFAULT_BLOCK_D, _pad_to(d, 128))
+    lp = _pad_to(max(l, 8), 8)
+    dp = _pad_to(d, block_d)
+    np_ = _pad_to(max(n, block_n), block_n)
+    bp = jnp.pad(b, ((0, 0), (0, lp - l), (0, dp - d)))
+    xp = jnp.pad(x, ((0, 0), (0, np_ - n), (0, dp - d)))
+    out = _quadform_packed_padded(bp, xp, block_n=block_n, block_d=block_d, interpret=interpret)
+    return out[:, 0, :n]
 
 
 @functools.partial(

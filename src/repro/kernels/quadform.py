@@ -44,6 +44,65 @@ def _quadform_kernel(b_ref, x_ref, o_ref, acc_ref):
         o_ref[...] = jnp.sum(acc * acc, axis=0, keepdims=True)
 
 
+def _quadform_packed_kernel(b_ref, x_ref, o_ref, acc_ref):
+    # Same contraction as _quadform_kernel with a leading tenant grid axis:
+    # each (tenant, query-block) owns its own accumulator lifetime because
+    # the d axis stays innermost.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        b_ref[0].astype(jnp.float32),
+        x_ref[0].astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),  # B_t_blk @ X_t_blk.T
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _reduce():
+        acc = acc_ref[...]
+        o_ref[...] = jnp.sum(acc * acc, axis=0)[None, None, :]
+
+
+def quadform_packed_pallas(
+    b: jax.Array,
+    x: jax.Array,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+) -> jax.Array:
+    """Cross-tenant packed quadratic forms: one launch for T sketches.
+
+    b: (T, L, d) stacked sketches, x: (T, N, d) per-tenant direction blocks
+    -> (T, 1, N) f32 with out[t, 0, j] = ||B_t x_tj||^2.  Shape rules match
+    ``quadform_pallas`` per tenant (pad upstream; zero rows are exact
+    no-ops).  This is the serving layer's batch-packing primitive: queued
+    queries for different tenants whose sketches share (L, d) ride a single
+    kernel launch instead of T dispatches.
+    """
+    t, l, d = b.shape
+    tx, n, dx = x.shape
+    if (tx, dx) != (t, d):
+        raise ValueError(f"packed directions {x.shape} incompatible with sketches {b.shape}")
+    if n % block_n != 0 or d % block_d != 0:
+        raise ValueError(f"(N={n}, d={d}) must tile into ({block_n}, {block_d}) blocks")
+    grid = (t, n // block_n, d // block_d)  # d innermost, tenant outermost
+    return pl.pallas_call(
+        _quadform_packed_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, l, block_d), lambda t, j, i: (t, 0, i)),  # B_t
+            pl.BlockSpec((1, block_n, block_d), lambda t, j, i: (t, j, i)),  # X_t
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_n), lambda t, j, i: (t, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((t, 1, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((l, block_n), jnp.float32)],
+        interpret=interpret,
+    )(b, x)
+
+
 def quadform_pallas(
     b: jax.Array,
     x: jax.Array,

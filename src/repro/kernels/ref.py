@@ -29,6 +29,11 @@ def ref_quadform(b: jax.Array, x: jax.Array) -> jax.Array:
     return jnp.sum(bx * bx, axis=0)
 
 
+def ref_quadform_packed(b: jax.Array, x: jax.Array) -> jax.Array:
+    """Packed form: b (T, L, d), x (T, N, d) -> (T, N); row t uses sketch t."""
+    return jax.vmap(ref_quadform)(b, x)
+
+
 def ref_attention(
     q: jax.Array,
     k: jax.Array,

@@ -9,8 +9,6 @@ import json  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
 
-import jax  # noqa: E402
-
 from repro.configs.registry import (  # noqa: E402
     ARCH_NAMES,
     SHAPE_NAMES,

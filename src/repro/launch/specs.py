@@ -6,7 +6,6 @@ lowers + compiles against these (deliverable e).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax

@@ -13,7 +13,6 @@ A model is a stack of *blocks*; each block is described by a layer kind:
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 
 

@@ -12,16 +12,12 @@ Block shapes:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
 from repro.models import attention, moe, rglru, sharding, ssd
 from repro.models.config import ModelConfig, group_pattern
 from repro.models.layers import (
-    dtype_of,
     embed_apply,
     embed_init,
     mlp_apply,

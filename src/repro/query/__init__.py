@@ -7,16 +7,29 @@ direction at any time.  This package is the second half at serving scale:
   * store.py   — versioned, per-tenant registry of immutable published
                  sketches (trackers publish; readers pin a version).
   * engine.py  — batched quadratic-form serving with an LRU-cached
-                 eigendecomposition per (tenant, version) and a fused
-                 Pallas kernel path (``repro.kernels.quadform``).
-  * service.py — admission front-end coalescing single queries into
-                 kernel-sized batches, with throughput accounting.
+                 eigendecomposition per (tenant, version), a fused Pallas
+                 kernel path (``repro.kernels.quadform``), and cross-tenant
+                 batch packing (``query_packed`` — tenants whose sketches
+                 share (l, d) ride one ``quadform_packed`` launch).
+  * service.py — admission front-ends: ``QueryService`` coalesces single
+                 directions for one tenant; ``PackedQueryService`` queues
+                 (tenant, direction, deadline) triples and flushes packed
+                 cross-tenant sweeps when full or when a deadline expires.
 """
-from repro.query.engine import QueryEngine, QueryResult, Spectrum
-from repro.query.service import QueryService, QueryTicket, ServiceStats
+from repro.query.engine import PackedRequest, QueryEngine, QueryResult, Spectrum
+from repro.query.service import (
+    PackedQueryService,
+    PackedServiceStats,
+    QueryService,
+    QueryTicket,
+    ServiceStats,
+)
 from repro.query.store import SketchSnapshot, SketchStore
 
 __all__ = [
+    "PackedQueryService",
+    "PackedRequest",
+    "PackedServiceStats",
     "QueryEngine",
     "QueryResult",
     "QueryService",

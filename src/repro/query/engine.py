@@ -26,9 +26,17 @@ import numpy as np
 
 from repro.query.store import SketchSnapshot, SketchStore
 
-__all__ = ["QueryEngine", "QueryResult", "Spectrum"]
+__all__ = ["PackedRequest", "QueryEngine", "QueryResult", "Spectrum"]
 
 PATHS = ("pallas", "cached", "naive")
+
+
+class PackedRequest(NamedTuple):
+    """One tenant's slice of a cross-tenant packed batch."""
+
+    tenant: str
+    x: np.ndarray  # (n_i, d) directions for this tenant
+    version: int | None = None
 
 
 class Spectrum(NamedTuple):
@@ -67,6 +75,8 @@ class QueryEngine:
         self._cache: OrderedDict[tuple[str, int], Spectrum] = OrderedDict()
         self.cache_hits = 0
         self.cache_misses = 0
+        self.packed_launches = 0  # kernel launches spent by query_packed
+        self.packed_pad_slots = 0  # zero-filled query slots added while packing
 
     # -- spectrum cache ------------------------------------------------------
 
@@ -135,6 +145,63 @@ class QueryEngine:
     def query(self, x: np.ndarray, **kw) -> float:
         """Single-direction convenience wrapper over ``query_batch``."""
         return float(self.query_batch(np.asarray(x)[None, :], **kw).estimates[0])
+
+    def query_packed(self, requests: list[PackedRequest]) -> list[QueryResult]:
+        """Serve many tenants' query batches, packing kernel launches.
+
+        Requests whose pinned sketches share an (l, d) shape are stacked —
+        sketches into (T, l, d), directions zero-padded to a common N into
+        (T, N, d) — and served by ONE ``quadform_packed`` Pallas launch.
+        Shapes that appear only once fall back to the per-tenant kernel.
+        Results come back in request order, one ``QueryResult`` each,
+        identical (to fp tolerance) to serial per-tenant ``query_batch``.
+        """
+        from repro.kernels.ops import quadform_packed
+
+        snaps: list[SketchSnapshot] = []
+        xs: list[np.ndarray] = []
+        for req in requests:
+            snap = self.store.get(req.tenant, req.version)
+            x = np.asarray(req.x, np.float32)
+            if x.ndim != 2 or x.shape[1] != snap.matrix.shape[1]:
+                raise ValueError(
+                    f"tenant {req.tenant!r}: directions must be "
+                    f"(n, {snap.matrix.shape[1]}), got {x.shape}"
+                )
+            snaps.append(snap)
+            xs.append(x)
+
+        estimates: list[np.ndarray | None] = [None] * len(requests)
+        by_shape: dict[tuple[int, int], list[int]] = {}
+        for i, snap in enumerate(snaps):
+            by_shape.setdefault(snap.matrix.shape, []).append(i)
+
+        for shape, idxs in by_shape.items():
+            self.packed_launches += 1
+            if len(idxs) == 1:
+                i = idxs[0]
+                estimates[i] = self._pallas_batch(snaps[i], xs[i])
+                continue
+            n_max = max(xs[i].shape[0] for i in idxs)
+            b_stack = np.stack([np.asarray(snaps[i].matrix) for i in idxs])
+            x_stack = np.zeros((len(idxs), n_max, shape[1]), np.float32)
+            for t, i in enumerate(idxs):
+                x_stack[t, : xs[i].shape[0]] = xs[i]
+                self.packed_pad_slots += n_max - xs[i].shape[0]
+            out = np.asarray(quadform_packed(b_stack, x_stack, interpret=self.interpret))
+            for t, i in enumerate(idxs):
+                estimates[i] = out[t, : xs[i].shape[0]]
+
+        return [
+            QueryResult(
+                estimates=est,
+                error_bound=snap.error_bound,
+                tenant=snap.tenant,
+                version=snap.version,
+                path="pallas",
+            )
+            for est, snap in zip(estimates, snaps)
+        ]
 
     def _pallas_batch(self, snap: SketchSnapshot, x: np.ndarray) -> np.ndarray:
         from repro.kernels.ops import quadform

@@ -19,13 +19,19 @@ measured queries/sec of the engine-facing hot path.
 from __future__ import annotations
 
 import time
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import numpy as np
 
-from repro.query.engine import QueryEngine
+from repro.query.engine import PackedRequest, QueryEngine
 
-__all__ = ["QueryService", "QueryTicket", "ServiceStats"]
+__all__ = [
+    "PackedQueryService",
+    "PackedServiceStats",
+    "QueryService",
+    "QueryTicket",
+    "ServiceStats",
+]
 
 
 class ServiceStats(NamedTuple):
@@ -140,6 +146,145 @@ class QueryService:
             queries=self._queries,
             batches=self._batches,
             padded=self._padded,
+            busy_s=self._busy_s,
+            queries_per_sec=qps,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Cross-tenant packed admission with deadlines
+# ---------------------------------------------------------------------------
+
+
+class PackedServiceStats(NamedTuple):
+    queries: int
+    flushes: int  # engine round-trips (each = one packed dispatch sweep)
+    packed_tenants: int  # tenant batches packed across all flushes
+    padded: int  # zero-filled query slots added while packing
+    deadline_flushes: int  # flushes forced by an expired deadline
+    busy_s: float
+    queries_per_sec: float
+
+
+class PackedQueryService:
+    """Multi-tenant admission: pack queued queries across tenants.
+
+    The single-tenant ``QueryService`` coalesces directions for one sketch;
+    under many-tenant traffic that still costs one kernel dispatch per
+    tenant per flush.  This front-end queues (tenant, direction, deadline)
+    triples and, at flush time, hands the engine one ``query_packed`` call:
+    tenants whose pinned sketches share (l, d) ride a single Pallas launch.
+
+    Flush triggers:
+      * ``max_batch`` total queued directions (admission pressure), or
+      * the earliest submitted deadline expiring — ``poll()`` is the
+        deadline pump; call it from the ingest loop (the pipeline does).
+
+    ``clock`` is injectable so deadline behaviour is testable without
+    sleeping.
+    """
+
+    def __init__(
+        self,
+        engine: QueryEngine,
+        *,
+        max_batch: int = 1024,
+        default_deadline_s: float = 0.02,
+        auto_flush: bool = True,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if default_deadline_s < 0:
+            raise ValueError(f"default_deadline_s must be >= 0, got {default_deadline_s}")
+        self.engine = engine
+        self.max_batch = max_batch
+        self.default_deadline_s = default_deadline_s
+        self.auto_flush = auto_flush
+        self.clock = clock
+        # tenant -> [(x, ticket), ...]; deadlines tracked globally.
+        self._pending: dict[str, list[tuple[np.ndarray, QueryTicket]]] = {}
+        self._n_pending = 0
+        self._earliest_deadline = float("inf")
+        self._queries = 0
+        self._flushes = 0
+        self._packed_tenants = 0
+        self._padded = 0
+        self._deadline_flushes = 0
+        self._busy_s = 0.0
+
+    def submit(
+        self,
+        x: np.ndarray,
+        *,
+        tenant: str,
+        deadline_s: float | None = None,
+    ) -> QueryTicket:
+        """Enqueue one (d,) direction for ``tenant``; returns its ticket."""
+        x = np.asarray(x, np.float32)
+        if x.ndim != 1:
+            raise ValueError(f"submit takes a single (d,) direction, got shape {x.shape}")
+        ticket = QueryTicket(self)
+        self._pending.setdefault(tenant, []).append((x, ticket))
+        self._n_pending += 1
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        self._earliest_deadline = min(self._earliest_deadline, self.clock() + deadline_s)
+        if self.auto_flush and self._n_pending >= self.max_batch:
+            self.flush()
+        return ticket
+
+    def pending(self) -> int:
+        return self._n_pending
+
+    def poll(self) -> int:
+        """Deadline pump: flush iff the earliest queued deadline has passed."""
+        if self._n_pending and self.clock() >= self._earliest_deadline:
+            self._deadline_flushes += 1
+            return self.flush()
+        return 0
+
+    def flush(self) -> int:
+        """Pack everything pending into one engine call; resolve tickets."""
+        if not self._pending:
+            return 0
+        tenants = sorted(self._pending)
+        requests = []
+        batches = []
+        for tenant in tenants:
+            take = self._pending[tenant]
+            rows = np.stack([x for x, _ in take])
+            requests.append(PackedRequest(tenant=tenant, x=rows))
+            batches.append(take)
+        t0 = time.perf_counter()
+        # Pending state is only consumed after the engine succeeds: a raising
+        # pack (e.g. an unpublished tenant) leaves every ticket pending.
+        pad0 = self.engine.packed_pad_slots
+        results = self.engine.query_packed(requests)
+        self._busy_s += time.perf_counter() - t0
+        # The engine pads per (l, d) shape group; read its exact count.
+        self._padded += self.engine.packed_pad_slots - pad0
+        served = 0
+        for take, res in zip(batches, results):
+            for (_, ticket), est in zip(take, res.estimates):
+                ticket._resolve(float(est), res.error_bound, res.version)
+            served += len(take)
+        self._queries += served
+        self._flushes += 1
+        self._packed_tenants += len(tenants)
+        self._pending.clear()
+        self._n_pending = 0
+        self._earliest_deadline = float("inf")
+        return served
+
+    def stats(self) -> PackedServiceStats:
+        qps = self._queries / self._busy_s if self._busy_s > 0 else 0.0
+        return PackedServiceStats(
+            queries=self._queries,
+            flushes=self._flushes,
+            packed_tenants=self._packed_tenants,
+            padded=self._padded,
+            deadline_flushes=self._deadline_flushes,
             busy_s=self._busy_s,
             queries_per_sec=qps,
         )

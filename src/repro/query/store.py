@@ -14,6 +14,11 @@ queries against a pinned version are trivially cacheable.
 
 ``retain`` bounds memory: only the newest ``retain`` versions per tenant
 are kept (0 = unbounded).  All operations are thread-safe.
+
+``save``/``load`` persist the whole store through ``repro.ckpt`` (atomic
+rename, per-leaf sha256, zstd/zlib), so a coordinator restart recovers
+every tenant's versioned snapshots — including historical versions a
+reader may still have pinned.
 """
 from __future__ import annotations
 
@@ -132,3 +137,77 @@ class SketchStore:
     def __len__(self) -> int:
         with self._lock:
             return sum(len(s) for s in self._snaps.values())
+
+    # -- persistence (repro.ckpt) -------------------------------------------
+
+    def save(self, directory: str, *, step: int = 0) -> str:
+        """Persist every tenant's versions atomically; returns the path.
+
+        Matrices become checkpoint leaves (hashed, compressed); everything
+        else — tenant names, version numbers, certificates, metadata — rides
+        the manifest's ``extra`` so ``load`` can rebuild the exact store.
+        """
+        from repro import ckpt
+
+        with self._lock:
+            snaps = [s for shelf in self._snaps.values() for s in shelf.values()]
+            next_version = dict(self._next_version)
+        snaps.sort(key=lambda s: (s.tenant, s.version))
+        tree = {f"snap_{i:05d}": snap.matrix for i, snap in enumerate(snaps)}
+        extra = {
+            "kind": "sketch_store",
+            "retain": self.retain,
+            "next_version": next_version,
+            "snapshots": [
+                {
+                    "key": f"snap_{i:05d}",
+                    "tenant": snap.tenant,
+                    "version": snap.version,
+                    "shape": list(snap.matrix.shape),
+                    "frob": snap.frob,
+                    "eps": snap.eps,
+                    "delta_sum": snap.delta_sum,
+                    "n_seen": snap.n_seen,
+                    "meta": dict(snap.meta),
+                }
+                for i, snap in enumerate(snaps)
+            ],
+        }
+        return ckpt.save(directory, step, tree, extra=extra)
+
+    @classmethod
+    def load(cls, directory: str, *, step: int | None = None) -> "SketchStore":
+        """Rebuild a store from ``save`` output (latest step by default)."""
+        from repro import ckpt
+
+        if step is None:
+            step = ckpt.latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(f"no sketch-store checkpoint under {directory!r}")
+        extra = ckpt.read_extra(directory, step)
+        if extra.get("kind") != "sketch_store":
+            raise ValueError(f"checkpoint at {directory!r} step {step} is not a sketch store")
+        # restore() validates leaf shapes against a template; the store's
+        # tree structure varies per save, so the template comes from extra.
+        template = {
+            e["key"]: np.zeros(e["shape"], np.float32) for e in extra["snapshots"]
+        }
+        tree, _ = ckpt.restore(directory, step, template)
+        store = cls(retain=int(extra.get("retain", 0)))
+        with store._lock:
+            for e in extra["snapshots"]:
+                b = np.asarray(tree[e["key"]], np.float32)
+                b.setflags(write=False)
+                snap = SketchSnapshot(
+                    tenant=e["tenant"],
+                    version=int(e["version"]),
+                    matrix=b,
+                    frob=float(e["frob"]),
+                    eps=float(e["eps"]),
+                    delta_sum=None if e["delta_sum"] is None else float(e["delta_sum"]),
+                    n_seen=int(e["n_seen"]),
+                    meta=dict(e["meta"]),
+                )
+                store._snaps.setdefault(snap.tenant, {})[snap.version] = snap
+            store._next_version = {t: int(v) for t, v in extra["next_version"].items()}
+        return store

@@ -1,0 +1,44 @@
+"""Streaming runtime: the paper's continuous loop as one coherent layer.
+
+The paper's model is m sites streaming rows while a coordinator maintains a
+sketch that answers ``||A x||^2`` at any time.  This package is that loop's
+runtime substrate:
+
+  * registry.py — typed ``SketchProtocol`` interface + one registration
+                  point for both engines (event-driven paper simulator,
+                  shard_map TPU super-steps); consumers dispatch through
+                  the registry instead of string/getattr probing.
+  * policies.py — ``PublishPolicy``: when a tenant's live sketch becomes an
+                  immutable served snapshot (every-k-steps, Frobenius
+                  drift, on-demand).
+  * pipeline.py — ``StreamingPipeline``: many tenants' ingest → publish →
+                  serve lifecycle in one object, with cross-tenant packed
+                  query admission and ``repro.ckpt`` persistence.
+"""
+from repro.runtime.pipeline import StreamingPipeline, TenantStats
+from repro.runtime.policies import EveryKSteps, FrobDrift, OnDemand, PublishPolicy
+from repro.runtime.registry import (
+    ProtocolSpec,
+    SketchProtocol,
+    create_protocol,
+    get_spec,
+    protocol_names,
+    register_protocol,
+    specs,
+)
+
+__all__ = [
+    "EveryKSteps",
+    "FrobDrift",
+    "OnDemand",
+    "ProtocolSpec",
+    "PublishPolicy",
+    "SketchProtocol",
+    "StreamingPipeline",
+    "TenantStats",
+    "create_protocol",
+    "get_spec",
+    "protocol_names",
+    "register_protocol",
+    "specs",
+]

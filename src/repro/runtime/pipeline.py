@@ -1,0 +1,229 @@
+"""StreamingPipeline: many tenants' ingest→publish→serve as one object.
+
+The paper's model is a single continuous loop — sites stream rows, the
+coordinator maintains a sketch, queries are answered at any time.  The repo
+previously split that loop across three layers the caller had to glue by
+hand (tracker updates, store publishes, service flushes).  The pipeline
+owns the whole lifecycle for a fleet of tenants:
+
+    pipeline = StreamingPipeline(mesh, policy=EveryKSteps(4))
+    pipeline.add_tenant("run-a", d=64)
+    pipeline.add_tenant("run-b", d=64, eps=0.2)
+
+    pipeline.ingest("run-a", rows)         # super-step + policy-driven publish
+    t = pipeline.submit("run-b", x, deadline_s=0.005)
+    pipeline.poll()                        # deadline pump (packed flush)
+    estimate, bound, version = t.result()
+
+Ingest drives the tenant's ``DistributedMatrixTracker`` one super-step and
+asks its ``PublishPolicy`` whether the live sketch drifted enough to become
+a new immutable ``SketchStore`` version.  Queries are admitted through a
+``PackedQueryService``: queued directions for *different* tenants whose
+sketches share (l, d) ride one packed quadform launch, flushed when full or
+when the earliest deadline expires.  ``save``/``load`` persist the store
+through ``repro.ckpt`` so a coordinator restart serves identical answers.
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterable, NamedTuple
+
+import jax
+import numpy as np
+
+from repro.query import QueryEngine, SketchStore
+from repro.query.service import PackedQueryService, QueryTicket
+from repro.runtime.policies import EveryKSteps, PublishPolicy
+
+__all__ = ["StreamingPipeline", "TenantStats"]
+
+
+class TenantStats(NamedTuple):
+    tenant: str
+    steps: int  # ingest super-steps absorbed
+    rows: int  # stream rows absorbed
+    publishes: int  # snapshots auto- or force-published
+    latest_version: int | None
+    live_frob: float
+    comm_total: int  # protocol messages spent (paper units)
+
+
+class _Tenant:
+    __slots__ = ("tracker", "policy", "steps", "steps_since_publish",
+                 "publishes", "published_frob", "latest_version")
+
+    def __init__(self, tracker, policy: PublishPolicy):
+        self.tracker = tracker
+        self.policy = policy
+        self.steps = 0
+        self.steps_since_publish = 0
+        self.publishes = 0
+        self.published_frob: float | None = None
+        self.latest_version: int | None = None
+
+
+class StreamingPipeline:
+    """Owns trackers, store, engine, and packed service for many tenants."""
+
+    def __init__(
+        self,
+        mesh: jax.sharding.Mesh,
+        *,
+        eps: float = 0.1,
+        axis: str = "data",
+        protocol: str = "P2",
+        policy: PublishPolicy | None = None,
+        store: SketchStore | None = None,
+        retain: int = 0,
+        interpret: bool | None = None,
+        max_batch: int = 1024,
+        default_deadline_s: float = 0.02,
+    ):
+        self.mesh = mesh
+        self.axis = axis
+        self.default_eps = eps
+        self.default_protocol = protocol
+        self.default_policy = policy if policy is not None else EveryKSteps(1)
+        self.store = store if store is not None else SketchStore(retain=retain)
+        self.engine = QueryEngine(self.store, interpret=interpret)
+        self.service = PackedQueryService(
+            self.engine, max_batch=max_batch, default_deadline_s=default_deadline_s
+        )
+        self._tenants: dict[str, _Tenant] = {}
+        self._publish_s = 0.0
+
+    # -- tenant lifecycle ----------------------------------------------------
+
+    def add_tenant(
+        self,
+        tenant: str,
+        d: int,
+        *,
+        eps: float | None = None,
+        protocol: str | None = None,
+        policy: PublishPolicy | None = None,
+    ):
+        """Register a tenant stream; returns its tracker."""
+        from repro.core.tracker import DistributedMatrixTracker
+
+        if tenant in self._tenants:
+            raise ValueError(f"tenant {tenant!r} already registered")
+        tracker = DistributedMatrixTracker(
+            self.mesh,
+            d,
+            eps=self.default_eps if eps is None else eps,
+            axis=self.axis,
+            protocol=self.default_protocol if protocol is None else protocol,
+        )
+        self._tenants[tenant] = _Tenant(tracker, policy or self.default_policy)
+        return tracker
+
+    def tenants(self) -> list[str]:
+        return sorted(self._tenants)
+
+    def tracker(self, tenant: str):
+        return self._tenant(tenant).tracker
+
+    def _tenant(self, tenant: str) -> _Tenant:
+        try:
+            return self._tenants[tenant]
+        except KeyError:
+            raise KeyError(
+                f"unknown tenant {tenant!r} (registered: {self.tenants()})"
+            ) from None
+
+    # -- ingest → publish ----------------------------------------------------
+
+    def ingest(self, tenant: str, rows) -> "object | None":
+        """Absorb one super-step batch; auto-publish per the tenant's policy.
+
+        Returns the new ``SketchSnapshot`` if the policy fired, else None.
+        Also pumps the packed service's deadlines, so a pure ingest loop
+        still serves queries on time.
+        """
+        t = self._tenant(tenant)
+        t.tracker.update(rows)
+        t.steps += 1
+        t.steps_since_publish += 1
+        snap = None
+        # Only pay for the Frobenius estimate when the policy reads it (for
+        # P3 it materializes the whole estimator matrix).
+        live = t.tracker.frob_estimate() if t.policy.needs_live_frob else 0.0
+        if t.policy.should_publish(
+            steps_since_publish=t.steps_since_publish,
+            live_frob=live,
+            published_frob=t.published_frob,
+        ):
+            snap = self._publish(tenant, t)
+        self.service.poll()
+        return snap
+
+    def ingest_many(self, batches: Iterable[tuple[str, "np.ndarray"]]) -> int:
+        """Drive interleaved tenants: ``[(tenant, rows), ...]``; returns
+        the number of snapshots published."""
+        published = 0
+        for tenant, rows in batches:
+            published += self.ingest(tenant, rows) is not None
+        return published
+
+    def publish(self, tenant: str):
+        """Force-publish a tenant's live sketch now (OnDemand's trigger)."""
+        return self._publish(tenant, self._tenant(tenant))
+
+    def _publish(self, tenant: str, t: _Tenant):
+        t0 = time.perf_counter()
+        snap = t.tracker.publish(self.store, tenant, meta={"step": t.steps})
+        self._publish_s += time.perf_counter() - t0
+        t.steps_since_publish = 0
+        t.publishes += 1
+        t.published_frob = snap.frob
+        t.latest_version = snap.version
+        return snap
+
+    # -- serve ---------------------------------------------------------------
+
+    def submit(self, tenant: str, x, *, deadline_s: float | None = None) -> QueryTicket:
+        """Admit one (d,) direction for a tenant into the packed service.
+
+        The tenant must have at least one published snapshot: admitting a
+        query nothing can answer would poison every later packed flush
+        (the service keeps failing batches pending by design), wedging
+        other tenants' deadline pumps.  Fail at the submitter instead.
+        """
+        t = self._tenant(tenant)
+        if t.latest_version is None and tenant not in self.store.tenants():
+            raise KeyError(
+                f"tenant {tenant!r} has no published snapshot yet — ingest "
+                "until its policy fires, or call publish()"
+            )
+        return self.service.submit(np.asarray(x), tenant=tenant, deadline_s=deadline_s)
+
+    def poll(self) -> int:
+        """Deadline pump; returns queries served by a deadline-forced flush."""
+        return self.service.poll()
+
+    def flush(self) -> int:
+        """Serve everything pending in one packed sweep."""
+        return self.service.flush()
+
+    # -- persistence / accounting -------------------------------------------
+
+    def save(self, directory: str, *, step: int = 0) -> str:
+        """Persist every tenant's published versions (``SketchStore.save``)."""
+        return self.store.save(directory, step=step)
+
+    def publish_latency_s(self) -> float:
+        """Total wall time spent publishing (store copies + host sync)."""
+        return self._publish_s
+
+    def stats(self, tenant: str) -> TenantStats:
+        t = self._tenant(tenant)
+        return TenantStats(
+            tenant=tenant,
+            steps=t.steps,
+            rows=t.tracker.rows_fed,
+            publishes=t.publishes,
+            latest_version=t.latest_version,
+            live_frob=t.tracker.frob_estimate(),
+            comm_total=t.tracker.comm_report().total,
+        )

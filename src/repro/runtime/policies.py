@@ -1,0 +1,91 @@
+"""Publish policies: when does a tenant's live sketch become a snapshot?
+
+The tracker side of the runtime ingests continuously; the serving side
+reads immutable versioned snapshots from the ``SketchStore``.  A
+``PublishPolicy`` decides, after every ingest super-step, whether the gap
+between the live sketch and the last published version justifies a new
+version.  Publishing is cheap (one host copy of an (l, d) matrix) but not
+free: every version is a spectrum-cache miss for the serving engine, so
+policies trade snapshot freshness against cache churn.
+"""
+from __future__ import annotations
+
+import abc
+
+__all__ = ["PublishPolicy", "EveryKSteps", "FrobDrift", "OnDemand"]
+
+
+class PublishPolicy(abc.ABC):
+    #: Whether the policy reads ``live_frob``.  When False the pipeline
+    #: skips computing the tracker's Frobenius estimate each ingest step
+    #: (for P3 that materializes the whole estimator matrix).
+    needs_live_frob: bool = True
+
+    @abc.abstractmethod
+    def should_publish(
+        self,
+        *,
+        steps_since_publish: int,
+        live_frob: float,
+        published_frob: float | None,
+    ) -> bool:
+        """Decide right after an ingest step.
+
+        steps_since_publish: ingest steps since the last publish (>= 1).
+        live_frob:           the tracker's current ``||A||_F^2`` estimate.
+        published_frob:      the last published snapshot's estimate, or
+                             None if this tenant has never published.
+        """
+
+
+class EveryKSteps(PublishPolicy):
+    """Publish after every k ingest steps (k=1: a snapshot per super-step)."""
+
+    needs_live_frob = False
+
+    def __init__(self, k: int = 1):
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        self.k = k
+
+    def should_publish(self, *, steps_since_publish, live_frob, published_frob):
+        return steps_since_publish >= self.k
+
+    def __repr__(self):
+        return f"EveryKSteps(k={self.k})"
+
+
+class FrobDrift(PublishPolicy):
+    """Publish when the stream mass grew by a relative factor.
+
+    The paper's protocols themselves only react when ``||A||_F^2`` drifts by
+    (1 + eps); serving snapshots on the same geometric schedule keeps the
+    store's version count logarithmic in the stream mass while bounding the
+    staleness of any served answer to one ``rel`` factor.  A tenant that has
+    never published always publishes.
+    """
+
+    def __init__(self, rel: float = 0.1):
+        if rel <= 0:
+            raise ValueError(f"rel must be > 0, got {rel}")
+        self.rel = rel
+
+    def should_publish(self, *, steps_since_publish, live_frob, published_frob):
+        if published_frob is None:
+            return True
+        return live_frob > (1.0 + self.rel) * published_frob
+
+    def __repr__(self):
+        return f"FrobDrift(rel={self.rel})"
+
+
+class OnDemand(PublishPolicy):
+    """Never auto-publish; snapshots appear only via ``pipeline.publish()``."""
+
+    needs_live_frob = False
+
+    def should_publish(self, *, steps_since_publish, live_frob, published_frob):
+        return False
+
+    def __repr__(self):
+        return "OnDemand()"

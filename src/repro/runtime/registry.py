@@ -1,0 +1,279 @@
+"""Typed protocol registry — one dispatch point for both sketch engines.
+
+The paper describes one object: a continuously-maintained coordinator
+sketch that ingests rows and answers ``||A x||^2``.  The repo grows two
+engines for it — the paper-exact event-driven simulator
+(``core/protocols.py``) and the TPU shard_map super-step engine
+(``core/distributed.py``) — and this module gives them one typed surface,
+``SketchProtocol``:
+
+    step(rows, sites=None)   absorb a batch of stream rows
+    matrix()                 the coordinator sketch B, (l, d) numpy
+    frob_estimate()          coordinator estimate of ||A||_F^2
+    comm_report()            uniform CommReport (paper message units)
+    query(x) / query_batch() ||B x||^2 via the shared quadform kernel path
+
+Every implementation is registered here as a ``ProtocolSpec`` keyed by
+``(engine, name)``; consumers (``DistributedMatrixTracker``, the streaming
+pipeline, benchmarks, the registry round-trip test harness) enumerate and
+construct protocols through the registry instead of hard-coding
+per-protocol branches.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core import distributed as dist
+from repro.core import protocols as event
+from repro.core.comm import CommReport
+
+__all__ = [
+    "SketchProtocol",
+    "ProtocolSpec",
+    "register_protocol",
+    "get_spec",
+    "protocol_names",
+    "specs",
+    "create_protocol",
+]
+
+
+class SketchProtocol(abc.ABC):
+    """Uniform streaming-sketch interface over every engine/protocol pair."""
+
+    name: str
+    engine: str
+    m: int
+    eps: float
+    d: int
+
+    def __init__(self, name: str, engine: str, m: int, eps: float, d: int):
+        self.name = name
+        self.engine = engine
+        self.m = m
+        self.eps = eps
+        self.d = d
+        self.rows_seen = 0
+
+    @abc.abstractmethod
+    def step(self, rows: np.ndarray, sites: np.ndarray | None = None) -> None:
+        """Absorb an (n, d) batch of stream rows (continuing prior state)."""
+
+    @abc.abstractmethod
+    def matrix(self) -> np.ndarray:
+        """The coordinator's current sketch matrix B, shape (l, d)."""
+
+    @abc.abstractmethod
+    def frob_estimate(self) -> float:
+        """Coordinator estimate of the stream mass ``||A||_F^2``."""
+
+    @abc.abstractmethod
+    def comm_report(self) -> CommReport:
+        """Messages spent so far, in the paper's units."""
+
+    # -- queries: one code path for every engine (and the serving layer) ----
+
+    def query_batch(self, x: np.ndarray) -> np.ndarray:
+        """``||B x_j||^2`` for each row of ``x`` via ``kernels.ops.quadform``
+        — the same kernel the serving engine's pallas path launches, so
+        tracker-side and serving-side answers can never diverge."""
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import quadform
+
+        b = self.matrix()
+        x = np.asarray(x, np.float32)
+        if b.shape[0] == 0:  # empty sketch: every quadratic form is 0
+            return np.zeros(x.shape[0], np.float32)
+        return np.asarray(quadform(jnp.asarray(b, jnp.float32), jnp.asarray(x)))
+
+    def query(self, x: np.ndarray) -> float:
+        return float(self.query_batch(np.asarray(x)[None, :])[0])
+
+
+@dataclass(frozen=True)
+class ProtocolSpec:
+    """One registered (engine, protocol) implementation.
+
+    err_factor: multiple of eps the covariance error is certified to stay
+    under (1.0 for the deterministic protocols; sampling protocols carry
+    the paper's looser constants).  The registry round-trip test drives
+    every spec through one harness using this field — no per-protocol
+    special cases.
+    """
+
+    name: str
+    engine: str  # "event" | "shard"
+    factory: Callable[..., SketchProtocol]
+    err_factor: float = 1.0
+    description: str = ""
+
+
+_REGISTRY: dict[tuple[str, str], ProtocolSpec] = {}
+
+
+def register_protocol(spec: ProtocolSpec) -> ProtocolSpec:
+    key = (spec.engine, spec.name)
+    if key in _REGISTRY:
+        raise ValueError(f"protocol {spec.name!r} already registered for engine {spec.engine!r}")
+    _REGISTRY[key] = spec
+    return spec
+
+
+def get_spec(name: str, engine: str = "event") -> ProtocolSpec:
+    try:
+        return _REGISTRY[(engine, name)]
+    except KeyError:
+        raise KeyError(
+            f"no protocol {name!r} for engine {engine!r} "
+            f"(registered: {sorted(_REGISTRY)})"
+        ) from None
+
+
+def protocol_names(engine: str | None = None) -> list[str]:
+    return sorted({n for (e, n) in _REGISTRY if engine is None or e == engine})
+
+
+def specs(engine: str | None = None) -> list[ProtocolSpec]:
+    return [s for (e, _), s in sorted(_REGISTRY.items()) if engine is None or e == engine]
+
+
+def create_protocol(name: str, *, engine: str = "event", **kw: Any) -> SketchProtocol:
+    """Instantiate a registered protocol.
+
+    Event engine:  ``create_protocol("P2", m=8, eps=0.1, d=64, seed=0)``
+    Shard engine:  ``create_protocol("P2", engine="shard", mesh=mesh, d=64,
+    eps=0.1, axis="data")`` — m is the mesh axis size.
+    """
+    return get_spec(name, engine).factory(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Event-driven engine adapter (core/protocols.py stream classes)
+# ---------------------------------------------------------------------------
+
+
+class EventProtocol(SketchProtocol):
+    """Paper-exact event-at-a-time engine behind the uniform interface."""
+
+    def __init__(self, name: str, stream_cls, *, m: int, eps: float, d: int,
+                 seed: int = 0, **kw: Any):
+        super().__init__(name, "event", m, eps, d)
+        self._rng = np.random.default_rng(seed)
+        self._stream = stream_cls(m, eps, d, self._rng, **kw)
+        self._rr = 0  # round-robin cursor for site-less feeds
+        self._cached_result: event.MatrixResult | None = None
+
+    def step(self, rows: np.ndarray, sites: np.ndarray | None = None) -> None:
+        rows = np.asarray(rows)
+        if sites is None:
+            sites = (np.arange(rows.shape[0]) + self._rr) % self.m
+            self._rr = int((self._rr + rows.shape[0]) % self.m)
+        self._stream.step(rows, np.asarray(sites))
+        self.rows_seen += int(rows.shape[0])
+        self._cached_result = None
+
+    def _result(self) -> event.MatrixResult:
+        # result() is pure in the stream state; cache until the next step.
+        if self._cached_result is None:
+            self._cached_result = self._stream.result()
+        return self._cached_result
+
+    def matrix(self) -> np.ndarray:
+        return np.asarray(self._result().b)
+
+    def frob_estimate(self) -> float:
+        return float(self._result().f_hat)
+
+    def comm_report(self) -> CommReport:
+        return self._stream.comm.report(self.m)
+
+
+# ---------------------------------------------------------------------------
+# shard_map super-step engine adapter (core/distributed.py)
+# ---------------------------------------------------------------------------
+
+
+class ShardProtocol(SketchProtocol):
+    """TPU super-step engine behind the uniform interface.
+
+    ``sites`` is ignored: row placement *is* the sharding of the input batch
+    over the mesh axis (each shard is one paper site).
+    """
+
+    def __init__(self, name: str, *, mesh, d: int, eps: float = 0.1,
+                 axis: str = "data", l_site: int = 0, l_coord: int = 0,
+                 s: int = 0, use_pallas: bool = False):
+        m = mesh.shape[axis]
+        super().__init__(name, "shard", m, eps, d)
+        self.cfg = dist.ProtocolConfig(
+            eps=eps, m=m, d=d, axis=axis, l_site=l_site, l_coord=l_coord,
+            s=s, use_pallas=use_pallas,
+        ).resolved()
+        self.state, self._step = dist.make_protocol_runner(name, self.cfg, mesh)
+        self._cached_matrix: np.ndarray | None = None
+
+    def step(self, rows, sites: np.ndarray | None = None) -> None:
+        self.state = self._step(self.state, rows)
+        self.rows_seen += int(rows.shape[0])
+        self._cached_matrix = None
+
+    def matrix(self) -> np.ndarray:
+        # The sketch is a pure function of the state: one device->host
+        # materialization per super-step serves matrix/frob/query alike.
+        if self._cached_matrix is None:
+            self._cached_matrix = np.asarray(dist.protocol_matrix(self.name, self.state))
+        return self._cached_matrix
+
+    def frob_estimate(self) -> float:
+        # Reuse the host matrix if this super-step already materialized it;
+        # otherwise protocol_frob reads f_hat (P1/P2) or reduces on device
+        # (P3) without forcing a full host transfer.
+        return dist.protocol_frob(self.name, self.state, matrix=self._cached_matrix)
+
+    def comm_report(self) -> CommReport:
+        return self.state.comm.report(self.cfg.m)
+
+
+# ---------------------------------------------------------------------------
+# Registrations — the one place protocol names are bound to engines.
+# ---------------------------------------------------------------------------
+
+
+def _event_factory(name: str, stream_cls):
+    def make(**kw: Any) -> EventProtocol:
+        return EventProtocol(name, stream_cls, **kw)
+
+    return make
+
+
+def _shard_factory(name: str):
+    def make(**kw: Any) -> ShardProtocol:
+        return ShardProtocol(name, **kw)
+
+    return make
+
+
+_EVENT_ERR = {"P1": 1.0, "P2": 1.0, "P3": 1.5, "P3wr": 3.0}
+
+for _name, _cls in event.MATRIX_STREAMS.items():
+    register_protocol(ProtocolSpec(
+        name=_name,
+        engine="event",
+        factory=_event_factory(_name, _cls),
+        err_factor=_EVENT_ERR[_name],
+        description=f"event-driven matrix {_name} (paper Section 5)",
+    ))
+
+for _name in ("P1", "P2", "P3"):
+    register_protocol(ProtocolSpec(
+        name=_name,
+        engine="shard",
+        factory=_shard_factory(_name),
+        err_factor=1.5 if _name == "P3" else 1.0,
+        description=f"shard_map super-step matrix {_name}",
+    ))

@@ -1,7 +1,6 @@
 """shard_map super-step engine: correctness vs the event-driven oracle,
 communication accounting, super-step skew bound.  Multi-device tests run in
 subprocesses (this process must keep exactly 1 visible device)."""
-import numpy as np
 
 from conftest import run_multidevice
 

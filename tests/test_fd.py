@@ -1,5 +1,4 @@
 """Frequent Directions: paper guarantees, mergeability, JAX-vs-numpy parity."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """Paper Section 4: weighted heavy-hitter protocols — error + communication."""
 import math
 
-import numpy as np
 import pytest
 
 from repro.core.hh import exact_heavy_hitters

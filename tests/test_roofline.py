@@ -1,5 +1,4 @@
 """Roofline accounting: HLO collective parser + three-term report."""
-import numpy as np
 
 from repro.configs.registry import SHAPES, get_config
 from repro.roofline.analysis import (

@@ -1,0 +1,459 @@
+"""Streaming runtime layer: protocol registry round-trip, publish policies,
+cross-tenant packed serving, and store persistence.
+
+The registry test is deliberately ONE harness driven over every registered
+``ProtocolSpec`` — engine- and protocol-specific knowledge lives in the
+specs (err_factor), not in the test.
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # property-based tests skip gracefully on minimal installs
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:
+    hypothesis = None
+
+from repro.core.comm import CommReport
+from repro.data.synthetic import lowrank_stream
+from repro.kernels.ops import quadform, quadform_packed
+from repro.kernels.ref import ref_quadform_packed
+from repro.query import PackedQueryService, PackedRequest, QueryEngine, SketchStore
+from repro.runtime import (
+    EveryKSteps,
+    FrobDrift,
+    OnDemand,
+    StreamingPipeline,
+    create_protocol,
+    specs,
+)
+
+N, D, M, EPS = 6000, 24, 4, 0.2
+
+
+@pytest.fixture(scope="module")
+def stream():
+    a = lowrank_stream(N, D, seed=0)
+    sites = np.random.default_rng(1).integers(0, M, N)
+    return a, sites, a.T @ a, float(np.sum(a * a))
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+# ---------------------------------------------------------------------------
+# registry: one eps-guarantee harness for every registered spec
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", specs(), ids=lambda s: f"{s.engine}-{s.name}")
+def test_registry_round_trip_eps_harness(spec, stream, mesh):
+    """Every (engine, protocol) pair: stream in batches through the uniform
+    interface, then check the covariance guarantee, message accounting,
+    frob estimate, and the shared quadform query path."""
+    a, sites, ata, frob = stream
+    if spec.engine == "event":
+        proto = create_protocol(spec.name, engine="event", m=M, eps=EPS, d=D, seed=1)
+    else:
+        proto = create_protocol(spec.name, engine="shard", mesh=mesh, d=D, eps=EPS, axis="data")
+    for i in range(0, N, 1000):
+        batch = a[i : i + 1000]
+        if spec.engine == "event":
+            proto.step(batch, sites[i : i + 1000])
+        else:
+            proto.step(jnp.asarray(batch))
+    assert proto.rows_seen == N
+
+    b = proto.matrix()
+    assert b.ndim == 2 and b.shape[1] == D
+    err = np.linalg.norm(ata - b.T @ b, 2) / frob
+    assert err <= spec.err_factor * EPS + 1e-3, (spec.name, err)
+
+    rep = proto.comm_report()
+    assert isinstance(rep, CommReport)
+    assert rep.m in (M, 1)
+    assert 0 < rep.total < N  # beats shipping the stream
+
+    # frob estimate is a constant-factor tracker of the true stream mass
+    assert 0.5 * frob <= proto.frob_estimate() <= 2.0 * frob
+
+    # query() answers through the same quadform kernel path as serving
+    x = np.random.default_rng(2).normal(size=D).astype(np.float32)
+    x /= np.linalg.norm(x)
+    want = float(np.asarray(quadform(jnp.asarray(b, jnp.float32), jnp.asarray(x)[None]))[0])
+    assert proto.query(x) == pytest.approx(want, rel=1e-6)
+
+
+def test_registry_unknown_protocol_raises():
+    with pytest.raises(KeyError):
+        create_protocol("P9", engine="event", m=2, eps=0.5, d=4)
+    with pytest.raises(KeyError):
+        create_protocol("P4", engine="event", m=2, eps=0.5, d=4)  # negative result: unregistered
+
+
+def test_event_protocol_round_robin_sites():
+    """Site-less feeds get a deterministic round-robin assignment."""
+    proto = create_protocol("P2", engine="event", m=3, eps=0.5, d=8, seed=0)
+    proto.step(lowrank_stream(300, 8, seed=3))
+    assert proto.rows_seen == 300
+    assert proto.comm_report().total > 0
+
+
+def test_event_streams_do_not_alias_caller_buffer():
+    """Feeding through a reused ingest buffer must equal fresh-array feeds:
+    retained rows (samples, pending directions) are copies, not views."""
+    a = lowrank_stream(1200, 8, rank=2, seed=5)
+    for name in ("P2", "P3", "P3wr"):
+        fresh = create_protocol(name, engine="event", m=2, eps=0.5, d=8, seed=3)
+        reused = create_protocol(name, engine="event", m=2, eps=0.5, d=8, seed=3)
+        buf = np.empty((300, 8), np.float32)
+        for i in range(0, 1200, 300):
+            chunk = a[i : i + 300]
+            fresh.step(chunk.copy())
+            buf[:] = chunk  # same storage every step
+            reused.step(buf)
+        np.testing.assert_array_equal(fresh.matrix(), reused.matrix())
+
+
+def test_comm_report_is_uniform_across_engines(stream, mesh):
+    """The satellite contract: both engines emit the same report shape, and
+    dict-style access (old TrackerSnapshot.messages keys) still works."""
+    a, sites, _, _ = stream
+    ev = create_protocol("P2", engine="event", m=M, eps=EPS, d=D, seed=0)
+    ev.step(a[:2000], sites[:2000])
+    sh = create_protocol("P2", engine="shard", mesh=mesh, d=D, eps=EPS, axis="data")
+    sh.step(jnp.asarray(a[:2000]))
+    for rep in (ev.comm_report(), sh.comm_report()):
+        assert isinstance(rep, CommReport)
+        assert rep.total == rep["total"]
+        assert rep["rows"] == rep.row_msgs and rep["scalar"] == rep.scalar_msgs
+        assert rep.total == rep.scalar_msgs + rep.row_msgs + rep.broadcast_events * rep.m
+
+
+def test_tracker_snapshot_messages_need_no_renaming(mesh):
+    from repro.core.tracker import DistributedMatrixTracker
+
+    tracker = DistributedMatrixTracker(mesh, 16, eps=0.25)
+    tracker.update(jnp.asarray(lowrank_stream(512, 16, rank=3, seed=4)))
+    snap = tracker.snapshot(k=4)
+    assert isinstance(snap.messages, CommReport)
+    assert snap.messages["total"] == snap.messages.total
+    # tracker queries ride the serving kernel path
+    x = np.zeros(16, np.float32)
+    x[0] = 1.0
+    b = tracker.sketch_matrix()
+    want = float(np.asarray(quadform(jnp.asarray(b), jnp.asarray(x)[None]))[0])
+    assert tracker.query(jnp.asarray(x)) == pytest.approx(want, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# publish policies
+# ---------------------------------------------------------------------------
+
+
+def _simulate(policy, frobs):
+    """Feed a frob trajectory; returns the publish step indices."""
+    published = []
+    since, pub_frob = 0, None
+    for i, f in enumerate(frobs):
+        since += 1
+        if policy.should_publish(
+            steps_since_publish=since, live_frob=f, published_frob=pub_frob
+        ):
+            published.append(i)
+            since, pub_frob = 0, f
+    return published
+
+
+def test_every_k_steps_publishes_on_schedule():
+    pubs = _simulate(EveryKSteps(3), np.arange(1.0, 13.0))
+    assert pubs == [2, 5, 8, 11]
+    assert _simulate(EveryKSteps(1), np.ones(4)) == [0, 1, 2, 3]
+
+
+def test_frob_drift_publishes_geometrically():
+    frobs = [1.0, 1.05, 1.2, 2.0, 2.1, 5.0]
+    pubs = _simulate(FrobDrift(rel=0.5), frobs)
+    assert pubs == [0, 3, 5]  # first ever, then only on >1.5x growth
+
+
+def test_on_demand_never_auto_publishes():
+    assert _simulate(OnDemand(), np.arange(1.0, 100.0)) == []
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        EveryKSteps(0)
+    with pytest.raises(ValueError):
+        FrobDrift(rel=0.0)
+
+
+def test_policy_properties():
+    """Property harness: publish counts are bounded for any trajectory."""
+    pytest.importorskip("hypothesis")
+
+    @hypothesis.given(
+        k=st.integers(min_value=1, max_value=7),
+        n=st.integers(min_value=0, max_value=60),
+        rel=st.floats(min_value=0.05, max_value=2.0),
+        growth=st.lists(
+            st.floats(min_value=0.0, max_value=3.0), min_size=1, max_size=60
+        ),
+    )
+    @hypothesis.settings(max_examples=100, deadline=None)
+    def check(k, n, rel, growth):
+        # EveryKSteps: exactly floor(n / k) publishes over n steps.
+        assert len(_simulate(EveryKSteps(k), np.ones(n))) == n // k
+        # FrobDrift on a non-decreasing mass curve: version count is
+        # logarithmic — at most 1 + log_{1+rel}(final/first).
+        frobs = 1.0 + np.cumsum(growth)
+        pubs = _simulate(FrobDrift(rel=rel), frobs)
+        bound = 1 + np.log(frobs[-1] / frobs[0]) / np.log1p(rel)
+        assert 1 <= len(pubs) <= bound + 1
+        # staleness invariant: between publishes the live mass never exceeds
+        # (1+rel) x the published mass except on the step that republishes.
+        pub_frob = None
+        for i, f in enumerate(frobs):
+            if i in pubs:
+                pub_frob = f
+            else:
+                assert pub_frob is not None and f <= (1.0 + rel) * pub_frob
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# cross-tenant packing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t,l,d,ns", [(3, 17, 200, (5, 9, 3)), (2, 8, 64, (1, 16))])
+def test_quadform_packed_matches_ref_and_serial(t, l, d, ns):
+    rng = np.random.default_rng(t + l)
+    b = rng.normal(size=(t, l, d)).astype(np.float32)
+    n_max = max(ns)
+    x = np.zeros((t, n_max, d), np.float32)
+    for i, n in enumerate(ns):
+        x[i, :n] = rng.normal(size=(n, d))
+    got = np.asarray(quadform_packed(jnp.asarray(b), jnp.asarray(x)))
+    want = np.asarray(ref_quadform_packed(jnp.asarray(b), jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4 * d)
+    # per-tenant single launches agree bit-for-bit in interpret mode
+    for i in range(t):
+        single = np.asarray(quadform(jnp.asarray(b[i]), jnp.asarray(x[i])))
+        np.testing.assert_array_equal(got[i], single)
+
+
+@pytest.fixture()
+def multi_store():
+    rng = np.random.default_rng(7)
+    store = SketchStore()
+    for i, tenant in enumerate(["a", "b", "c", "d"]):
+        store.publish(
+            tenant,
+            rng.normal(size=(12, 32)).astype(np.float32),
+            frob=float(10 + i),
+            eps=0.1,
+        )
+    # one tenant with a different sketch shape: must not pack with the rest
+    store.publish("odd", rng.normal(size=(20, 32)).astype(np.float32), frob=1.0, eps=0.1)
+    return store
+
+
+def test_engine_query_packed_equals_serial(multi_store):
+    engine = QueryEngine(multi_store)
+    rng = np.random.default_rng(8)
+    reqs = [
+        PackedRequest(tenant, rng.normal(size=(n, 32)).astype(np.float32))
+        for tenant, n in [("a", 7), ("b", 3), ("c", 12), ("d", 1), ("odd", 5)]
+    ]
+    results = engine.query_packed(reqs)
+    assert [r.tenant for r in results] == ["a", "b", "c", "d", "odd"]
+    # padding is per shape group: a/b/c/d pad to 12 (5+9+0+11), the odd
+    # shape is a singleton launch with no padding
+    assert engine.packed_launches == 2
+    assert engine.packed_pad_slots == 25
+    for req, res in zip(reqs, results):
+        serial = engine.query_batch(req.x, tenant=req.tenant, path="pallas")
+        np.testing.assert_allclose(res.estimates, serial.estimates, rtol=1e-5)
+        assert res.version == serial.version
+        assert res.error_bound == serial.error_bound
+        assert res.estimates.shape == (req.x.shape[0],)
+
+
+def test_engine_query_packed_validates_shapes(multi_store):
+    engine = QueryEngine(multi_store)
+    with pytest.raises(ValueError):
+        engine.query_packed([PackedRequest("a", np.zeros((3, 5), np.float32))])
+    with pytest.raises(KeyError):
+        engine.query_packed([PackedRequest("nobody", np.zeros((3, 32), np.float32))])
+
+
+def test_packed_service_deadline_flush(multi_store):
+    """Deadline pump with an injected clock: no flush before the earliest
+    deadline, one packed flush after it."""
+    now = [0.0]
+    svc = PackedQueryService(
+        QueryEngine(multi_store), default_deadline_s=1.0, clock=lambda: now[0]
+    )
+    rng = np.random.default_rng(9)
+    tickets = [
+        svc.submit(rng.normal(size=32).astype(np.float32), tenant=t, deadline_s=dl)
+        for t, dl in [("a", 5.0), ("b", 2.0), ("c", 9.0)]
+    ]
+    assert svc.poll() == 0 and svc.pending() == 3
+    now[0] = 1.9  # earliest deadline (2.0) not yet expired
+    assert svc.poll() == 0
+    now[0] = 2.1
+    assert svc.poll() == 3  # ONE deadline expiry flushes the whole pack
+    assert all(t.done for t in tickets)
+    stats = svc.stats()
+    assert stats.flushes == 1 and stats.deadline_flushes == 1
+    assert stats.packed_tenants == 3 and stats.queries == 3
+
+
+def test_packed_service_max_batch_auto_flush(multi_store):
+    svc = PackedQueryService(QueryEngine(multi_store), max_batch=4)
+    rng = np.random.default_rng(10)
+    tickets = []
+    for i in range(6):
+        tickets.append(
+            svc.submit(rng.normal(size=32).astype(np.float32), tenant="ab"[i % 2])
+        )
+    assert tickets[3].done and not tickets[4].done  # flushed at 4 pending
+    assert svc.pending() == 2
+    est, bound, version = tickets[5].result()  # ticket-triggered flush
+    assert svc.pending() == 0 and bound > 0 and version == 1
+
+
+def test_packed_service_failed_flush_keeps_tickets(multi_store):
+    svc = PackedQueryService(QueryEngine(multi_store))
+    ok = svc.submit(np.ones(32, np.float32), tenant="a")
+    bad = svc.submit(np.ones(32, np.float32), tenant="unpublished")
+    with pytest.raises(KeyError):
+        svc.flush()
+    assert svc.pending() == 2 and not ok.done and not bad.done
+
+
+# ---------------------------------------------------------------------------
+# store persistence
+# ---------------------------------------------------------------------------
+
+
+def test_store_save_load_round_trip(multi_store):
+    engine = QueryEngine(multi_store)
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(6, 32)).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        multi_store.save(d)
+        loaded = SketchStore.load(d)
+        assert loaded.tenants() == multi_store.tenants()
+        restored = QueryEngine(loaded)
+        for tenant in multi_store.tenants():
+            assert loaded.versions(tenant) == multi_store.versions(tenant)
+            before = engine.query_batch(x, tenant=tenant, path="pallas")
+            after = restored.query_batch(x, tenant=tenant, path="pallas")
+            np.testing.assert_array_equal(before.estimates, after.estimates)
+            assert (before.version, before.error_bound) == (after.version, after.error_bound)
+            old, new = multi_store.get(tenant), loaded.get(tenant)
+            assert (old.frob, old.eps, old.n_seen) == (new.frob, new.eps, new.n_seen)
+        # restored matrices are frozen like published ones
+        with pytest.raises(ValueError):
+            loaded.get("a").matrix[0, 0] = 1.0
+        # version numbering continues, never reuses
+        v = loaded.publish("a", np.ones((2, 32), np.float32), frob=1.0, eps=0.5)
+        assert v.version == multi_store.latest_version("a") + 1
+
+
+def test_store_save_preserves_history_and_retention():
+    rng = np.random.default_rng(12)
+    store = SketchStore(retain=2)
+    for i in range(4):
+        store.publish("t", rng.normal(size=(4, 8)).astype(np.float32), frob=1.0 + i, eps=0.5)
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d)
+        loaded = SketchStore.load(d)
+        assert loaded.retain == 2
+        assert loaded.versions("t") == [3, 4]  # pruned history stays pruned
+        np.testing.assert_array_equal(loaded.get("t", 3).matrix, store.get("t", 3).matrix)
+
+
+def test_store_load_error_cases():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(FileNotFoundError):
+            SketchStore.load(d)
+        from repro import ckpt
+
+        ckpt.save(d, 0, {"x": np.zeros(3)}, extra={"kind": "something_else"})
+        with pytest.raises(ValueError):
+            SketchStore.load(d)
+
+
+# ---------------------------------------------------------------------------
+# pipeline: ingest -> policy publish -> packed serve (the tentpole loop)
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_end_to_end(mesh):
+    pipe = StreamingPipeline(mesh, eps=0.25, policy=EveryKSteps(2), default_deadline_s=0.0)
+    d = 16
+    streams = {f"t{i}": lowrank_stream(1024, d, rank=3, seed=20 + i) for i in range(4)}
+    for tenant in streams:
+        pipe.add_tenant(tenant, d)
+    with pytest.raises(ValueError):
+        pipe.add_tenant("t0", d)  # duplicate tenant
+
+    for step in range(4):
+        for tenant, a in streams.items():
+            snap = pipe.ingest(tenant, jnp.asarray(a[step * 256 : (step + 1) * 256]))
+            assert (snap is not None) == (step % 2 == 1)  # EveryKSteps(2)
+
+    rng = np.random.default_rng(13)
+    xs = {t: rng.normal(size=(5, d)).astype(np.float32) for t in streams}
+    tickets = {t: [pipe.submit(t, x) for x in xs[t]] for t in streams}
+    assert pipe.flush() == 20
+    for tenant in streams:
+        serial = pipe.engine.query_batch(xs[tenant], tenant=tenant, path="pallas").estimates
+        got = np.array([tk.result()[0] for tk in tickets[tenant]], np.float32)
+        np.testing.assert_allclose(got, serial, rtol=1e-5)
+
+    s = pipe.stats("t0")
+    assert s.steps == 4 and s.rows == 1024 and s.publishes == 2 and s.latest_version == 2
+    assert s.comm_total > 0
+
+    with pytest.raises(KeyError):
+        pipe.submit("ghost", np.zeros(d, np.float32))
+
+    # restart recovery through the pipeline's own save
+    with tempfile.TemporaryDirectory() as ckdir:
+        pipe.save(ckdir)
+        restored = QueryEngine(SketchStore.load(ckdir))
+        for tenant in streams:
+            before = pipe.engine.query_batch(xs[tenant], tenant=tenant, path="pallas")
+            after = restored.query_batch(xs[tenant], tenant=tenant, path="pallas")
+            np.testing.assert_array_equal(before.estimates, after.estimates)
+
+
+def test_pipeline_on_demand_and_drift_policies(mesh):
+    d = 8
+    pipe = StreamingPipeline(mesh, eps=0.5, policy=OnDemand())
+    pipe.add_tenant("manual", d)
+    pipe.add_tenant("drift", d, policy=FrobDrift(rel=0.25))
+    a = lowrank_stream(512, d, rank=2, seed=30)
+    assert pipe.ingest("manual", jnp.asarray(a[:256])) is None
+    # queries for a tenant with no published snapshot are rejected at
+    # submit time (they could never resolve and would poison the pack)
+    with pytest.raises(KeyError):
+        pipe.submit("manual", np.zeros(d, np.float32))
+    assert pipe.ingest("drift", jnp.asarray(a[:256])) is not None  # first publish
+    # same mass again: > 1.25x growth, so the drift tenant republishes
+    assert pipe.ingest("drift", jnp.asarray(a[256:])) is not None
+    assert pipe.stats("manual").publishes == 0
+    snap = pipe.publish("manual")
+    assert snap.version == 1 and pipe.stats("manual").publishes == 1
