@@ -3,8 +3,18 @@
 Reports recall / precision / relative err of true HHs / messages for
 P1-P4 across eps, m, and beta — the paper's exact measurement grid
 (reduced stream by default; BENCH_SCALE=10 reproduces 1e7+ elements).
+
+The second half drives HH tenants through the multi-tenant
+``StreamingPipeline`` — mixed engines and eps under per-tenant admission
+quotas — and writes ``BENCH_hh_pipeline.json``: protocol communication vs
+estimate accuracy vs per-tenant serve latency, plus the shed counts the
+quota pressure produced.
 """
 from __future__ import annotations
+
+import json
+import os
+import time
 
 import numpy as np
 
@@ -63,3 +73,128 @@ def run() -> None:
         for proto in ["P2", "P3"]:
             res, us = timed(run_hh_protocol, proto, keys_b, w_b, sites_b, m, eps, seed=3)
             emit(f"hh/fig1f/{proto}/beta={beta_i:g}", us, f"msg={res.comm.total(m)}")
+
+    run_pipeline()
+
+
+def run_pipeline() -> None:
+    """HH tenants as first-class pipeline workloads, under quota pressure.
+
+    Four HH tenants (event P1/P2 at two eps + the shard MG-merge engine)
+    stream through one ``StreamingPipeline``; a query storm larger than the
+    tenants' admission quotas measures shed behaviour and per-tenant packed
+    serve latency.  Writes ``BENCH_hh_pipeline.json``.
+    """
+    import jax
+
+    from repro.query import QueryShedError
+    from repro.runtime import EveryKSteps, StreamingPipeline, TenantQuota
+
+    n = max(20_000, int(200_000 * scale()))
+    rounds, queries_per_round = 8, 32
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    # max_batch below the round's total admitted load, so each deadline-pump
+    # sweep is capped and tenant priority visibly orders resolution times.
+    pipe = StreamingPipeline(
+        mesh, policy=EveryKSteps(2), max_batch=2 * queries_per_round,
+        default_deadline_s=0.0,
+    )
+    tenants = {
+        "hh-p1-tight": dict(protocol="P1", engine="event", eps=0.01, m=10),
+        "hh-p1-loose": dict(protocol="P1", engine="event", eps=0.05, m=10),
+        "hh-p2": dict(protocol="P2", engine="event", eps=0.01, m=10),
+        "hh-shard": dict(protocol="P1", engine="shard", eps=0.01),
+    }
+    # Quota pressure: every tenant may hold at most one round's queries;
+    # priorities stagger so capped sweeps have an observable order.
+    for i, (name, kw) in enumerate(tenants.items()):
+        pipe.add_hh_tenant(
+            name, quota=TenantQuota(max_pending=queries_per_round, priority=i), **kw
+        )
+
+    streams = {
+        name: zipfian_stream(n, beta=1000.0, universe=20_000, seed=50 + i)
+        for i, name in enumerate(tenants)
+    }
+    batch = n // 8
+    t0 = time.perf_counter()
+    for name, (keys, w) in streams.items():
+        pairs = np.stack([keys.astype(np.float32), w.astype(np.float32)], axis=1)
+        for i in range(0, n, batch):
+            pipe.ingest(name, pairs[i : i + batch])
+    ingest_s = time.perf_counter() - t0
+
+    # Query storm: 2x oversubmission against each tenant's quota; serve via
+    # the deadline pump so each sweep is capped and priority-ordered (no
+    # auto-flush, or the submit loop would drain the backlog early and
+    # neither the quotas nor the priorities would ever bind).
+    pipe.service.auto_flush = False
+    rng = np.random.default_rng(99)
+    shed = 0
+    serve_s = {name: 0.0 for name in tenants}
+    served = {name: 0 for name in tenants}
+    for _ in range(rounds):
+        tickets = {name: [] for name in tenants}
+        for name, (keys, _) in streams.items():
+            probes = rng.choice(keys[: n // 10], size=2 * queries_per_round)
+            for e in probes:
+                try:
+                    tickets[name].append(
+                        pipe.submit(name, np.array([float(e)], np.float32))
+                    )
+                except QueryShedError:
+                    shed += 1
+        t0 = time.perf_counter()
+        resolved = set()
+        while pipe.service.pending():
+            pipe.poll()  # one capped priority-ordered sweep per pump
+            now = time.perf_counter() - t0
+            for name, ts in tickets.items():
+                if name not in resolved and all(t.done for t in ts):
+                    resolved.add(name)
+                    serve_s[name] += now
+        for name, ts in tickets.items():
+            served[name] += len(ts)
+
+    out: dict = {
+        "stream": {"n_per_tenant": n, "rounds": rounds,
+                   "queries_per_round": 2 * queries_per_round},
+        "ingest_s": ingest_s,
+        "service": {
+            # stats() carries the authoritative shed count; only add the
+            # per-tenant breakdown here.
+            "shed_by_tenant": pipe.service.shed_counts(),
+            **pipe.service.stats()._asdict(),
+        },
+        "tenants": {},
+    }
+    for name, (keys, w) in streams.items():
+        hh, totals, W = exact_heavy_hitters(keys, w, PHI)
+        proto = pipe.tracker(name)
+        est = proto.estimates()
+        errs = [abs(totals[e] - est.get(e, 0.0)) / W for e in hh] or [0.0]
+        returned = set(pipe.heavy_hitters(name, PHI))
+        tp = len(returned & set(hh))
+        stats = pipe.stats(name)
+        lat_us = serve_s[name] / rounds * 1e6  # mean time-to-resolution
+        out["tenants"][name] = {
+            **tenants[name],
+            "priority": pipe.service.quota(name)[1],
+            "comm_total": stats.comm_total,
+            "recall": tp / max(len(hh), 1),
+            "precision": tp / max(len(returned), 1),
+            "mean_hh_err": float(np.mean(errs)),
+            "queries_served": served[name],
+            "serve_latency_us_per_round": lat_us,
+            "publishes": stats.publishes,
+        }
+        emit(
+            f"hh/pipeline/{name}",
+            lat_us,
+            f"recall={tp / max(len(hh), 1):.3f};msg={stats.comm_total};"
+            f"shed={pipe.service.shed_counts().get(name, 0)}",
+        )
+
+    path = os.path.join(os.getcwd(), "BENCH_hh_pipeline.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)

@@ -64,7 +64,7 @@ def run() -> None:
         _, us = timed(fd.extend, a)
         emit(f"matrix/table1/{ds}/FD", us, f"err={fd.covariance_error(a):.3e};msg={n}")
 
-        for proto in protocol_names("event"):
+        for proto in protocol_names("event", kind="matrix"):
             eng, us = timed(_run_event, proto, a, sites, m, eps, 1)
             emit(
                 f"matrix/table1/{ds}/{proto}",

@@ -7,8 +7,9 @@ launches.  The demo then verifies the three runtime guarantees:
 
   1. packed cross-tenant answers == per-tenant serial answers (1e-5),
   2. every answer respects the paper's eps ||A||_F^2 envelope,
-  3. a store saved via ``repro.ckpt`` and reloaded answers identically
-     (coordinator restart recovery).
+  3. a pipeline saved via ``repro.ckpt`` and reloaded answers identically
+     (coordinator restart recovery; see examples/mixed_tenants.py for the
+     mid-stream ingest-resume variant with heavy-hitter tenants).
 
     PYTHONPATH=src python examples/serve_batched.py [--tenants 4]
 """
@@ -21,7 +22,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import lowrank_stream
-from repro.query import QueryEngine, SketchStore
 from repro.runtime import EveryKSteps, FrobDrift, StreamingPipeline
 
 ap = argparse.ArgumentParser()
@@ -94,13 +94,13 @@ for tenant, a in streams.items():
     assert gap <= args.eps + 1e-3, (tenant, gap)
     print(f"  {tenant}: max |truth - est| = {gap:.3e} ||A||_F^2  (eps={args.eps})")
 
-# 3. restart recovery: saved store answers identically
+# 3. restart recovery: the reloaded pipeline answers identically
 with tempfile.TemporaryDirectory() as d:
     pipe.save(d)
-    restored = QueryEngine(SketchStore.load(d))
+    restored = StreamingPipeline.load(d, mesh)
     for tenant in streams:
         before = pipe.engine.query_batch(xs[tenant], tenant=tenant, path="pallas")
-        after = restored.query_batch(xs[tenant], tenant=tenant, path="pallas")
+        after = restored.engine.query_batch(xs[tenant], tenant=tenant, path="pallas")
         np.testing.assert_array_equal(before.estimates, after.estimates)
         assert before.version == after.version
-print("restored store answers identically: OK")
+print("restored pipeline answers identically: OK")

@@ -1,1 +1,8 @@
-from repro.ckpt.checkpoint import AsyncCheckpointer, latest_step, read_extra, restore, save
+from repro.ckpt.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    read_extra,
+    read_manifest,
+    restore,
+    save,
+)

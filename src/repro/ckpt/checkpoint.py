@@ -35,7 +35,14 @@ try:  # optional: fall back to stdlib zlib on minimal installs
 except ModuleNotFoundError:
     zstandard = None
 
-__all__ = ["save", "restore", "latest_step", "read_extra", "AsyncCheckpointer"]
+__all__ = [
+    "save",
+    "restore",
+    "latest_step",
+    "read_extra",
+    "read_manifest",
+    "AsyncCheckpointer",
+]
 
 _MANIFEST = "manifest.json"
 
@@ -121,6 +128,20 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
+def read_manifest(directory: str, step: int) -> dict:
+    """Read a checkpoint's full manifest (no leaf I/O).
+
+    The manifest records every leaf's flattened name, shape, dtype, and
+    sha256 — the introspection hook for callers that need to validate a
+    checkpoint's leaf set against an expected template (the streaming
+    pipeline does this before restoring per-tenant protocol state) or to
+    inspect a checkpoint without loading it.
+    """
+    path = os.path.join(directory, f"step_{step:09d}", _MANIFEST)
+    with open(path) as f:
+        return json.load(f)
+
+
 def read_extra(directory: str, step: int) -> dict:
     """Read only the ``extra`` metadata of a checkpoint (no leaf I/O).
 
@@ -128,9 +149,7 @@ def read_extra(directory: str, step: int) -> dict:
     sketch store, whose tenants/versions/shapes vary) build the restore
     template before calling ``restore``.
     """
-    path = os.path.join(directory, f"step_{step:09d}", _MANIFEST)
-    with open(path) as f:
-        return json.load(f)["extra"]
+    return read_manifest(directory, step)["extra"]
 
 
 def restore(directory: str, step: int, template, *, shardings=None):

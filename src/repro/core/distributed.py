@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import fd as fdlib
+from repro.core import hh as hhlib
 from repro.core.comm import CommReport
 
 __all__ = [
@@ -44,12 +45,17 @@ __all__ = [
     "P1State",
     "P2State",
     "P3State",
+    "HHP1State",
     "p1_init",
     "p1_step",
     "p2_init",
     "p2_step",
     "p3_init",
     "p3_step",
+    "hh_p1_init",
+    "hh_p1_step",
+    "hh_estimates",
+    "hh_w_hat",
     "p2_query",
     "p3_matrix",
     "protocol_matrix",
@@ -66,6 +72,7 @@ class ProtocolConfig(NamedTuple):
     l_site: int = 0  # site sketch rows (0 -> ceil(4/eps), paper default)
     l_coord: int = 0  # coordinator sketch rows (0 -> ceil(4/eps))
     s: int = 0  # P3 sample size (0 -> ceil(1/eps^2 * log(1/eps)))
+    k: int = 0  # HH MG counters (0 -> ceil(2/eps), the MG_{eps/2} default)
     use_pallas: bool = False
 
     def resolved(self) -> "ProtocolConfig":
@@ -77,6 +84,7 @@ class ProtocolConfig(NamedTuple):
             l_site=self.l_site or l_default,
             l_coord=self.l_coord or l_default,
             s=self.s or s_default,
+            k=self.k or max(2, math.ceil(2.0 / self.eps)),
         )
 
 
@@ -318,11 +326,98 @@ def p3_matrix(st: P3State) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Weighted heavy hitters, protocol 1 — batched Misra--Gries merge.
+#
+# The HH twin of matrix P1: every shard (= site) runs a weighted MG_{eps/2}
+# summary over its local (element, weight) stream; when a site's weight
+# since its last ship crosses ``(eps/2m) * w_hat`` it ships the whole
+# summary, and the coordinator folds shipped summaries in with ``mg_merge``
+# (the mergeable-summaries merge, so the coordinator error stays one
+# ``W/(k+1)`` term per merge depth).  Message units follow the paper: a
+# shipped summary of ``r`` live counters costs ``r`` item messages plus one
+# scalar, and a ``w_hat`` rebroadcast costs ``m``.
+# ---------------------------------------------------------------------------
+
+
+class HHP1State(NamedTuple):
+    site_mg: hhlib.MGState  # per-shard
+    w_i: jax.Array  # per-shard () f32 — weight since last ship
+    coord_mg: hhlib.MGState  # replicated
+    w_c: jax.Array  # replicated — weight received at C
+    w_hat: jax.Array  # replicated — broadcast estimate
+    comm: CommCounters
+
+
+def hh_p1_init(cfg: ProtocolConfig) -> HHP1State:
+    cfg = cfg.resolved()
+    return HHP1State(
+        site_mg=hhlib.mg_init(cfg.k),
+        w_i=jnp.zeros((), jnp.float32),
+        coord_mg=hhlib.mg_init(cfg.k),
+        w_c=jnp.zeros((), jnp.float32),
+        w_hat=jnp.ones((), jnp.float32),
+        comm=CommCounters.zero(),
+    )
+
+
+def hh_p1_step(cfg: ProtocolConfig, st: HHP1State, pairs) -> HHP1State:
+    """One super-step; ``pairs`` = local ``(keys i32 (b,), weights f32 (b,))``."""
+    cfg = cfg.resolved()
+    keys, weights = pairs
+    site_mg = hhlib.mg_update_stream(st.site_mg, keys, weights)
+    w_i = st.w_i + jnp.sum(weights.astype(jnp.float32))
+
+    send = w_i >= (cfg.eps / (2 * cfg.m)) * st.w_hat
+    # Masked ship: a non-sender contributes the empty summary, which is the
+    # identity element of mg_merge, so the gather-then-fold below is exactly
+    # "the coordinator merges what was shipped".
+    pay = hhlib.MGState(
+        keys=jnp.where(send, site_mg.keys, hhlib.EMPTY),
+        counts=jnp.where(send, site_mg.counts, 0.0),
+        weight=jnp.where(send, site_mg.weight, 0.0),
+        shrink=jnp.where(send, site_mg.shrink, 0.0),
+    )
+    gathered = jax.tree.map(lambda a: lax.all_gather(a, cfg.axis), pay)  # (m, ...)
+    coord = st.coord_mg
+    for j in range(cfg.m):  # static unroll: m is the mesh axis size
+        coord = hhlib.mg_merge(coord, jax.tree.map(lambda a: a[j], gathered))
+
+    live = jnp.sum((site_mg.keys != hhlib.EMPTY).astype(jnp.int32))
+    shipped = lax.psum(jnp.where(send, live, 0), cfg.axis)
+    n_scalar = lax.psum(send.astype(jnp.int32), cfg.axis)
+
+    w_c = st.w_c + lax.psum(jnp.where(send, w_i, 0.0), cfg.axis)
+    w_i = jnp.where(send, 0.0, w_i)
+    # Reset shipped site summaries.
+    empty = hhlib.mg_init(cfg.k)
+    site_mg = jax.tree.map(lambda a, b: jnp.where(send, b, a), site_mg, empty)
+
+    rebroadcast = w_c / st.w_hat > 1.0 + cfg.eps / 2.0
+    w_hat = jnp.where(rebroadcast, w_c, st.w_hat)
+    comm = CommCounters(
+        scalar_msgs=st.comm.scalar_msgs + n_scalar,
+        row_msgs=st.comm.row_msgs + shipped.astype(jnp.int32),
+        broadcast_events=st.comm.broadcast_events + rebroadcast.astype(jnp.int32),
+    )
+    return HHP1State(site_mg, w_i, coord, w_c, w_hat, comm)
+
+
+def hh_estimates(st: HHP1State) -> dict[int, float]:
+    """The coordinator's current ``{element: weight-estimate}`` map."""
+    return hhlib.mg_items(st.coord_mg)
+
+
+def hh_w_hat(st: HHP1State) -> float:
+    """Coordinator estimate of the total stream weight ``W`` (HH frob analog)."""
+    return float(st.w_hat)
+
+
+# ---------------------------------------------------------------------------
 # Runner: wraps a protocol step in shard_map over a mesh axis.
 # ---------------------------------------------------------------------------
 
-_INITS = {"P1": p1_init, "P2": p2_init, "P3": p3_init}
-_STEPS = {"P1": p1_step, "P2": p2_step, "P3": p3_step}
+_INITS = {"P1": p1_init, "P2": p2_init, "P3": p3_init, "HHP1": hh_p1_init}
+_STEPS = {"P1": p1_step, "P2": p2_step, "P3": p3_step, "HHP1": hh_p1_step}
 _MATRICES = {
     "P1": lambda st: fdlib.fd_matrix(st.coord_fd),
     "P2": lambda st: fdlib.fd_matrix(st.coord_fd),
@@ -350,10 +445,13 @@ def protocol_frob(protocol: str, state, matrix=None) -> float:
 
 
 def make_protocol_runner(protocol: str, cfg: ProtocolConfig, mesh: jax.sharding.Mesh):
-    """Return ``(init_state, step)``: ``step(state, rows)`` consumes a global
-    ``(m * b, d)`` array sharded over ``cfg.axis`` and advances the protocol
-    by one super-step.  ``state`` leaves that are per-site carry a leading
-    ``m`` axis sharded over ``cfg.axis``; replicated leaves are replicated.
+    """Return ``(init_state, step)``: one jitted shard_map super-step.
+
+    For the matrix protocols ``step(state, rows)`` consumes a global
+    ``(m * b, d)`` array sharded over ``cfg.axis``; for ``HHP1`` it consumes
+    a ``(keys, weights)`` pair of global ``(m * b,)`` arrays sharded the
+    same way.  ``state`` leaves that are per-site carry a leading ``m`` axis
+    sharded over ``cfg.axis``; replicated leaves are replicated.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
@@ -366,7 +464,11 @@ def make_protocol_runner(protocol: str, cfg: ProtocolConfig, mesh: jax.sharding.
         "P1": ("site_fd", "f_i"),
         "P2": ("site_fd", "f_j"),
         "P3": ("rng",),
+        "HHP1": ("site_mg", "w_i"),
     }[protocol]
+    # HH streams arrive as a (keys, weights) pair of 1-D arrays; matrix
+    # streams as one (n, d) row block.
+    data_spec = (P(cfg.axis), P(cfg.axis)) if protocol == "HHP1" else P(cfg.axis, None)
 
     def _state_specs(state) -> object:
         specs = {}
@@ -419,7 +521,7 @@ def make_protocol_runner(protocol: str, cfg: ProtocolConfig, mesh: jax.sharding.
         shard_map(
             _inner,
             mesh=mesh,
-            in_specs=(specs, P(cfg.axis, None)),
+            in_specs=(specs, data_spec),
             out_specs=specs,
             check_rep=False,
         )

@@ -30,8 +30,13 @@ __all__ = [
     "mg_update_stream",
     "mg_merge",
     "mg_estimate",
+    "mg_items",
     "MGSketch",
     "SpaceSaving",
+    "encode_hh_snapshot",
+    "decode_hh_snapshot",
+    "exact_heavy_hitters",
+    "threshold_heavy_hitters",
 ]
 
 EMPTY = jnp.int32(-1)
@@ -99,6 +104,15 @@ def mg_update_stream(state: MGState, keys: jax.Array, weights: jax.Array) -> MGS
 def mg_estimate(state: MGState, key: jax.Array) -> jax.Array:
     hit = state.keys == key.astype(jnp.int32)
     return jnp.sum(jnp.where(hit, state.counts, 0.0))
+
+
+def mg_items(state: MGState) -> dict[int, float]:
+    """Materialize a jit-side MG summary as a plain ``{element: count}`` dict."""
+    keys = np.asarray(state.keys)
+    counts = np.asarray(state.counts)
+    return {
+        int(e): float(c) for e, c in zip(keys.tolist(), counts.tolist()) if e != int(EMPTY)
+    }
 
 
 def mg_merge(a: MGState, b: MGState) -> MGState:
@@ -186,6 +200,24 @@ class MGSketch:
     def items(self):
         return dict(self.counters)
 
+    def state_dict(self) -> dict:
+        """JSON-able snapshot of the sketch (counter keys become strings)."""
+        return {
+            "k": self.k,
+            "counters": {str(e): w for e, w in self.counters.items()},
+            "weight": self.weight,
+            "shrink": self.shrink,
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "MGSketch":
+        """Rebuild a sketch from ``state_dict`` output (exact state identity)."""
+        mg = cls(int(state["k"]))
+        mg.counters = {int(e): float(w) for e, w in state["counters"].items()}
+        mg.weight = float(state["weight"])
+        mg.shrink = float(state["shrink"])
+        return mg
+
 
 class SpaceSaving:
     """Weighted SpaceSaving; overestimates, error <= W/k."""
@@ -212,6 +244,67 @@ class SpaceSaving:
 
     def items(self):
         return dict(self.counters)
+
+    def state_dict(self) -> dict:
+        """JSON-able snapshot of the sketch (counter keys become strings)."""
+        return {
+            "k": self.k,
+            "counters": {str(e): w for e, w in self.counters.items()},
+            "weight": self.weight,
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "SpaceSaving":
+        """Rebuild a sketch from ``state_dict`` output (exact state identity)."""
+        ss = cls(int(state["k"]))
+        ss.counters = {int(e): float(w) for e, w in state["counters"].items()}
+        ss.weight = float(state["weight"])
+        return ss
+
+
+# ---------------------------------------------------------------------------
+# Published-snapshot codec: HH estimates as a SketchStore matrix.
+# ---------------------------------------------------------------------------
+
+
+def encode_hh_snapshot(estimates: dict[int, float]) -> np.ndarray:
+    """Pack coordinator HH estimates into a publishable ``(n, 2)`` f32 matrix.
+
+    Column 0 holds element ids, column 1 their weight estimates, sorted by
+    id so equal estimate sets encode bit-identically.  This is the matrix a
+    ``SketchStore`` snapshot carries for an HH tenant (the store's contract
+    is "one immutable 2-D array per version"); element ids must stay below
+    2**24 so they survive the f32 round-trip exactly.
+    """
+    if not estimates:
+        return np.zeros((0, 2), np.float32)
+    if max(estimates) >= 1 << 24 or min(estimates) < 0:
+        raise ValueError("HH element ids must be in [0, 2**24) to encode exactly as f32")
+    pairs = sorted(estimates.items())
+    return np.array(pairs, np.float32).reshape(len(pairs), 2)
+
+
+def decode_hh_snapshot(matrix: np.ndarray) -> dict[int, float]:
+    """Invert ``encode_hh_snapshot``: ``(n, 2)`` matrix back to an estimate dict."""
+    m = np.asarray(matrix)
+    if m.ndim != 2 or (m.size and m.shape[1] != 2):
+        raise ValueError(f"HH snapshot matrix must be (n, 2), got {m.shape}")
+    return {int(e): float(w) for e, w in m.tolist()}
+
+
+def threshold_heavy_hitters(
+    estimates: dict[int, float], w_hat: float, eps: float, phi: float
+) -> list[int]:
+    """The paper's Section 4 answer rule, shared by every query surface.
+
+    Returns (sorted) every element whose estimate crosses
+    ``(phi - eps/2) * w_hat`` — the threshold that guarantees no true
+    phi-heavy-hitter is missed when estimates carry eps/2 error.  Live
+    protocols, the registry interface, and published-snapshot queries must
+    all apply this one implementation so their answers cannot diverge.
+    """
+    thr = (phi - eps / 2.0) * w_hat
+    return sorted(e for e, v in estimates.items() if v >= thr)
 
 
 def exact_heavy_hitters(keys: np.ndarray, weights: np.ndarray, phi: float):

@@ -113,7 +113,16 @@ class DistributedMatrixTracker:
         )
 
     def comm_report(self) -> CommReport:
+        """Messages spent so far, in the paper's units."""
         return self._proto.comm_report()
+
+    def state_payload(self):
+        """Live protocol state as ``(arrays, meta)`` (pipeline checkpoints)."""
+        return self._proto.state_payload()
+
+    def restore_payload(self, arrays, meta) -> None:
+        """Restore state captured by ``state_payload`` bit-identically."""
+        self._proto.restore_payload(arrays, meta)
 
     def snapshot(self, k: int = 8) -> TrackerSnapshot:
         b = self.sketch_matrix()

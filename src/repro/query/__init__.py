@@ -21,6 +21,7 @@ from repro.query.service import (
     PackedQueryService,
     PackedServiceStats,
     QueryService,
+    QueryShedError,
     QueryTicket,
     ServiceStats,
 )
@@ -33,6 +34,7 @@ __all__ = [
     "QueryEngine",
     "QueryResult",
     "QueryService",
+    "QueryShedError",
     "QueryTicket",
     "ServiceStats",
     "SketchSnapshot",

@@ -1,6 +1,6 @@
-"""Batched ``||A x||^2`` query engine over the versioned sketch store.
+"""Batched query engine over the versioned sketch store.
 
-Serves the paper's query — ``||B x||^2`` as an eps-approximation of
+Serves the paper's matrix query — ``||B x||^2`` as an eps-approximation of
 ``||A x||^2`` — for whole batches of directions against a pinned snapshot,
 three ways:
 
@@ -16,6 +16,14 @@ three ways:
 
 All paths agree to fp tolerance; every result carries the snapshot's
 additive error bound (``delta_sum`` when known, else ``eps ||A||_F^2``).
+
+Snapshots whose ``meta["workload"]`` is ``"hh"`` hold weighted heavy-hitter
+estimates (an ``(n, 2)`` [element, estimate] matrix, see
+``core.hh.encode_hh_snapshot``) instead of a row sketch; queries against
+them are frequency point-lookups — each "direction" is a single element id
+— answered with the same ``QueryResult`` shape and the paper's
+``eps W`` additive bound, so mixed matrix + HH tenants share one admission
+path and one packed dispatch loop.
 """
 from __future__ import annotations
 
@@ -47,8 +55,10 @@ class Spectrum(NamedTuple):
 
 
 class QueryResult(NamedTuple):
-    estimates: np.ndarray  # (n,) f32 — ||B x_j||^2 per direction
-    error_bound: float  # additive bound vs ||A x||^2 for unit directions
+    """One tenant's served batch: estimates + the snapshot's certificate."""
+
+    estimates: np.ndarray  # (n,) f32 — ||B x_j||^2 (or HH weight) per query
+    error_bound: float  # additive bound vs the true answer
     tenant: str
     version: int
     path: str
@@ -59,7 +69,19 @@ def _svd_spectrum(matrix: np.ndarray) -> Spectrum:
     return Spectrum(s=s, vt=vt)
 
 
+def _workload(snap: SketchSnapshot) -> str:
+    """A snapshot's workload kind: ``"matrix"`` (default) or ``"hh"``."""
+    return snap.meta.get("workload", "matrix")
+
+
 class QueryEngine:
+    """Serves batched queries against pinned ``SketchStore`` snapshots.
+
+    Dispatches per snapshot workload: matrix snapshots ride the quadform
+    paths (pallas / cached / naive), HH snapshots ride a vectorized
+    point-lookup.  ``query_packed`` packs many tenants per engine call.
+    """
+
     def __init__(
         self,
         store: SketchStore,
@@ -103,6 +125,7 @@ class QueryEngine:
         return spec
 
     def cache_stats(self) -> dict[str, int]:
+        """Spectrum-cache hit/miss/entry counters."""
         return {
             "hits": self.cache_hits,
             "misses": self.cache_misses,
@@ -119,11 +142,24 @@ class QueryEngine:
         version: int | None = None,
         path: str = "pallas",
     ) -> QueryResult:
-        """Serve ``||B x_j||^2`` for every row of ``x`` (any batch size)."""
+        """Serve every row of ``x`` against the tenant's pinned snapshot.
+
+        Matrix tenants: ``||B x_j||^2`` per (d,)-direction row, on the
+        chosen ``path``.  HH tenants: estimated weight per (1,)-element-id
+        row (``path`` is ignored; the lookup has one implementation).
+        """
         if path not in PATHS:
             raise ValueError(f"unknown query path {path!r}; choose from {PATHS}")
         snap = self.store.get(tenant, version)
         x = np.asarray(x, np.float32)
+        if _workload(snap) == "hh":
+            return QueryResult(
+                estimates=self._hh_batch(snap, x),
+                error_bound=snap.error_bound,
+                tenant=snap.tenant,
+                version=snap.version,
+                path="hh",
+            )
         if x.ndim != 2 or x.shape[1] != snap.matrix.shape[1]:
             raise ValueError(
                 f"directions must be (n, {snap.matrix.shape[1]}), got {x.shape}"
@@ -149,21 +185,26 @@ class QueryEngine:
     def query_packed(self, requests: list[PackedRequest]) -> list[QueryResult]:
         """Serve many tenants' query batches, packing kernel launches.
 
-        Requests whose pinned sketches share an (l, d) shape are stacked —
-        sketches into (T, l, d), directions zero-padded to a common N into
-        (T, N, d) — and served by ONE ``quadform_packed`` Pallas launch.
-        Shapes that appear only once fall back to the per-tenant kernel.
-        Results come back in request order, one ``QueryResult`` each,
-        identical (to fp tolerance) to serial per-tenant ``query_batch``.
+        Matrix requests whose pinned sketches share an (l, d) shape are
+        stacked — sketches into (T, l, d), directions zero-padded to a
+        common N into (T, N, d) — and served by ONE ``quadform_packed``
+        Pallas launch.  Shapes that appear only once fall back to the
+        per-tenant kernel; HH requests are served by the point-lookup path
+        (no kernel launch) in the same call.  Results come back in request
+        order, one ``QueryResult`` each, identical (to fp tolerance) to
+        serial per-tenant ``query_batch``.
         """
         from repro.kernels.ops import quadform_packed
 
         snaps: list[SketchSnapshot] = []
         xs: list[np.ndarray] = []
-        for req in requests:
+        hh_idxs: list[int] = []
+        for i, req in enumerate(requests):
             snap = self.store.get(req.tenant, req.version)
             x = np.asarray(req.x, np.float32)
-            if x.ndim != 2 or x.shape[1] != snap.matrix.shape[1]:
+            if _workload(snap) == "hh":
+                hh_idxs.append(i)
+            elif x.ndim != 2 or x.shape[1] != snap.matrix.shape[1]:
                 raise ValueError(
                     f"tenant {req.tenant!r}: directions must be "
                     f"(n, {snap.matrix.shape[1]}), got {x.shape}"
@@ -171,10 +212,14 @@ class QueryEngine:
             snaps.append(snap)
             xs.append(x)
 
+        hh = set(hh_idxs)
         estimates: list[np.ndarray | None] = [None] * len(requests)
         by_shape: dict[tuple[int, int], list[int]] = {}
         for i, snap in enumerate(snaps):
-            by_shape.setdefault(snap.matrix.shape, []).append(i)
+            if i not in hh:
+                by_shape.setdefault(snap.matrix.shape, []).append(i)
+        for i in hh_idxs:
+            estimates[i] = self._hh_batch(snaps[i], xs[i])
 
         for shape, idxs in by_shape.items():
             self.packed_launches += 1
@@ -198,15 +243,39 @@ class QueryEngine:
                 error_bound=snap.error_bound,
                 tenant=snap.tenant,
                 version=snap.version,
-                path="pallas",
+                path="hh" if i in hh else "pallas",
             )
-            for est, snap in zip(estimates, snaps)
+            for i, (est, snap) in enumerate(zip(estimates, snaps))
         ]
 
     def _pallas_batch(self, snap: SketchSnapshot, x: np.ndarray) -> np.ndarray:
         from repro.kernels.ops import quadform
 
         return np.asarray(quadform(snap.matrix, x, interpret=self.interpret))
+
+    def _hh_batch(self, snap: SketchSnapshot, x: np.ndarray) -> np.ndarray:
+        """Vectorized HH point-lookup: estimated weight per queried element.
+
+        ``x`` is an ``(n, 1)`` (or ``(n,)``) batch of element ids; unknown
+        elements estimate 0 (the MG underestimate convention).  Ids compare
+        exactly: both sides ride the f32 encoding of ints < 2**24.
+        """
+        q = np.asarray(x, np.float32)
+        if q.ndim == 2 and q.shape[1] == 1:
+            q = q[:, 0]
+        if q.ndim != 1:
+            raise ValueError(
+                f"tenant {snap.tenant!r}: HH queries must be (n,) or (n, 1) "
+                f"element ids, got {np.asarray(x).shape}"
+            )
+        mat = np.asarray(snap.matrix)
+        if mat.shape[0] == 0:
+            return np.zeros(q.shape[0], np.float32)
+        # encode_hh_snapshot stores keys sorted and unique: binary search
+        # instead of a dense (queries x keys) equality matrix.
+        keys, counts = mat[:, 0], mat[:, 1]
+        idx = np.clip(np.searchsorted(keys, q), 0, keys.shape[0] - 1)
+        return np.where(keys[idx] == q, counts[idx], 0.0).astype(np.float32)
 
     def _cached_batch(self, snap: SketchSnapshot, x: np.ndarray) -> np.ndarray:
         spec = self._spectrum_for(snap)

@@ -1,4 +1,4 @@
-"""Admission + batching front-end over the query engine.
+"""Admission + batching front-ends over the query engine.
 
 Modeled on the ``ServeEngine`` host loop: callers submit single directions
 (the traffic pattern of the paper's coordinator under heavy query load) and
@@ -13,8 +13,12 @@ discarded), bounding the number of compiled batch shapes to
     svc.flush()                       # or wait for max_batch auto-flush
     tickets[0].result()               # (estimate, error_bound, version)
 
-``stats()`` reports served queries, batches, padding overhead and the
-measured queries/sec of the engine-facing hot path.
+``PackedQueryService`` is the multi-tenant variant: cross-tenant packing,
+per-query deadlines, and per-tenant admission control (bounded queue depth
+with shed-and-report via ``QueryShedError``, priority-ordered dispatch
+under overload).  ``stats()`` on either service reports served queries,
+batches/flushes, padding overhead, shed counts, and the measured
+queries/sec of the engine-facing hot path.
 """
 from __future__ import annotations
 
@@ -29,12 +33,35 @@ __all__ = [
     "PackedQueryService",
     "PackedServiceStats",
     "QueryService",
+    "QueryShedError",
     "QueryTicket",
     "ServiceStats",
 ]
 
 
+class QueryShedError(RuntimeError):
+    """A submit was rejected because the tenant's admission quota is full.
+
+    Shedding is *reported*, never silent: the submitter gets this error
+    synchronously (no ticket is created, nothing is queued) and the service
+    counts the event in ``stats().shed`` / ``shed_counts()``.  Carries
+    ``tenant``, ``pending`` (the tenant's queue depth at rejection), and
+    ``max_pending`` (the quota that was hit).
+    """
+
+    def __init__(self, tenant: str, pending: int, max_pending: int):
+        super().__init__(
+            f"tenant {tenant!r} admission quota full "
+            f"({pending}/{max_pending} queries pending); query shed"
+        )
+        self.tenant = tenant
+        self.pending = pending
+        self.max_pending = max_pending
+
+
 class ServiceStats(NamedTuple):
+    """Lifetime counters of a single-tenant ``QueryService``."""
+
     queries: int
     batches: int
     padded: int  # zero-filled slots added to round batches up
@@ -77,6 +104,8 @@ def _bucket(n: int, min_bucket: int, max_batch: int) -> int:
 
 
 class QueryService:
+    """Single-tenant admission: coalesce directions into kernel batches."""
+
     def __init__(
         self,
         engine: QueryEngine,
@@ -113,6 +142,7 @@ class QueryService:
         return ticket
 
     def pending(self) -> int:
+        """Queued-but-unserved query count."""
         return len(self._pending)
 
     def flush(self) -> int:
@@ -141,6 +171,7 @@ class QueryService:
         return served
 
     def stats(self) -> ServiceStats:
+        """Lifetime service counters (see ``ServiceStats``)."""
         qps = self._queries / self._busy_s if self._busy_s > 0 else 0.0
         return ServiceStats(
             queries=self._queries,
@@ -157,13 +188,16 @@ class QueryService:
 
 
 class PackedServiceStats(NamedTuple):
+    """Lifetime counters of a ``PackedQueryService``."""
+
     queries: int
     flushes: int  # engine round-trips (each = one packed dispatch sweep)
     packed_tenants: int  # tenant batches packed across all flushes
     padded: int  # zero-filled query slots added while packing
-    deadline_flushes: int  # flushes forced by an expired deadline
+    deadline_flushes: int  # sweeps forced by an expired deadline
     busy_s: float
     queries_per_sec: float
+    shed: int = 0  # submits rejected by a tenant quota (QueryShedError)
 
 
 class PackedQueryService:
@@ -172,13 +206,23 @@ class PackedQueryService:
     The single-tenant ``QueryService`` coalesces directions for one sketch;
     under many-tenant traffic that still costs one kernel dispatch per
     tenant per flush.  This front-end queues (tenant, direction, deadline)
-    triples and, at flush time, hands the engine one ``query_packed`` call:
+    triples and, at dispatch time, hands the engine ``query_packed`` calls:
     tenants whose pinned sketches share (l, d) ride a single Pallas launch.
 
-    Flush triggers:
+    Dispatch triggers:
       * ``max_batch`` total queued directions (admission pressure), or
-      * the earliest submitted deadline expiring — ``poll()`` is the
-        deadline pump; call it from the ingest loop (the pipeline does).
+      * the earliest queued deadline expiring — ``poll()`` is the deadline
+        pump; call it from the ingest loop (the pipeline does).
+
+    Each engine round-trip is one *sweep* of at most ``max_batch`` queries,
+    packed in descending tenant-priority order (``set_quota``), so under
+    overload high-priority tenants are served first and the deadline pump
+    does bounded work per call.  ``flush()`` loops sweeps until drained.
+
+    Admission control is per tenant: ``set_quota(tenant, max_pending=...)``
+    bounds the tenant's queued depth; a submit beyond it raises
+    ``QueryShedError`` (shed-and-report — the caller learns synchronously,
+    the service counts it, nothing is silently dropped).
 
     ``clock`` is injectable so deadline behaviour is testable without
     sleeping.
@@ -202,16 +246,44 @@ class PackedQueryService:
         self.default_deadline_s = default_deadline_s
         self.auto_flush = auto_flush
         self.clock = clock
-        # tenant -> [(x, ticket), ...]; deadlines tracked globally.
-        self._pending: dict[str, list[tuple[np.ndarray, QueryTicket]]] = {}
+        # tenant -> [(x, ticket, abs_deadline), ...] in FIFO order.
+        self._pending: dict[str, list[tuple[np.ndarray, QueryTicket, float]]] = {}
         self._n_pending = 0
         self._earliest_deadline = float("inf")
+        self._quotas: dict[str, tuple[int, int]] = {}  # tenant -> (max_pending, priority)
         self._queries = 0
         self._flushes = 0
         self._packed_tenants = 0
         self._padded = 0
         self._deadline_flushes = 0
         self._busy_s = 0.0
+        self._shed = 0
+        self._shed_by_tenant: dict[str, int] = {}
+
+    # -- admission control ---------------------------------------------------
+
+    def set_quota(self, tenant: str, *, max_pending: int = 0, priority: int = 0) -> None:
+        """Set a tenant's admission quota and dispatch priority.
+
+        max_pending: maximum queued-but-unserved queries for the tenant
+                     (0 = unbounded); overflow submits raise
+                     ``QueryShedError``.
+        priority:    higher values are packed earlier within each capped
+                     dispatch sweep (ties broken by tenant name).
+        """
+        if max_pending < 0:
+            raise ValueError(f"max_pending must be >= 0, got {max_pending}")
+        self._quotas[tenant] = (int(max_pending), int(priority))
+
+    def quota(self, tenant: str) -> tuple[int, int]:
+        """The tenant's ``(max_pending, priority)`` (defaults ``(0, 0)``)."""
+        return self._quotas.get(tenant, (0, 0))
+
+    def shed_counts(self) -> dict[str, int]:
+        """Per-tenant count of submits rejected by the quota."""
+        return dict(self._shed_by_tenant)
+
+    # -- submission ----------------------------------------------------------
 
     def submit(
         self,
@@ -220,42 +292,77 @@ class PackedQueryService:
         tenant: str,
         deadline_s: float | None = None,
     ) -> QueryTicket:
-        """Enqueue one (d,) direction for ``tenant``; returns its ticket."""
+        """Enqueue one (d,) direction for ``tenant``; returns its ticket.
+
+        Raises ``QueryShedError`` (before queuing anything) when the
+        tenant's ``max_pending`` quota is already full.
+        """
         x = np.asarray(x, np.float32)
         if x.ndim != 1:
             raise ValueError(f"submit takes a single (d,) direction, got shape {x.shape}")
+        max_pending, _ = self._quotas.get(tenant, (0, 0))
+        depth = len(self._pending.get(tenant, ()))
+        if max_pending and depth >= max_pending:
+            self._shed += 1
+            self._shed_by_tenant[tenant] = self._shed_by_tenant.get(tenant, 0) + 1
+            raise QueryShedError(tenant, depth, max_pending)
         ticket = QueryTicket(self)
-        self._pending.setdefault(tenant, []).append((x, ticket))
-        self._n_pending += 1
         if deadline_s is None:
             deadline_s = self.default_deadline_s
-        self._earliest_deadline = min(self._earliest_deadline, self.clock() + deadline_s)
+        deadline = self.clock() + deadline_s
+        self._pending.setdefault(tenant, []).append((x, ticket, deadline))
+        self._n_pending += 1
+        self._earliest_deadline = min(self._earliest_deadline, deadline)
         if self.auto_flush and self._n_pending >= self.max_batch:
             self.flush()
         return ticket
 
-    def pending(self) -> int:
+    def pending(self, tenant: str | None = None) -> int:
+        """Queued-but-unserved query count (for one tenant, or in total)."""
+        if tenant is not None:
+            return len(self._pending.get(tenant, ()))
         return self._n_pending
 
+    # -- dispatch ------------------------------------------------------------
+
     def poll(self) -> int:
-        """Deadline pump: flush iff the earliest queued deadline has passed."""
+        """Deadline pump: one priority-ordered sweep iff a deadline passed.
+
+        Bounded work per call (at most ``max_batch`` queries served), so an
+        ingest loop can pump it every step; if expired queries remain after
+        the sweep the next ``poll`` fires again.
+        """
         if self._n_pending and self.clock() >= self._earliest_deadline:
             self._deadline_flushes += 1
-            return self.flush()
+            return self._sweep()
         return 0
 
     def flush(self) -> int:
-        """Pack everything pending into one engine call; resolve tickets."""
+        """Drain everything pending in capped priority-ordered sweeps."""
+        served = 0
+        while self._n_pending:
+            served += self._sweep()
+        return served
+
+    def _sweep(self) -> int:
+        """One engine round-trip: up to ``max_batch`` queries, priority order."""
         if not self._pending:
             return 0
-        tenants = sorted(self._pending)
-        requests = []
-        batches = []
-        for tenant in tenants:
-            take = self._pending[tenant]
-            rows = np.stack([x for x, _ in take])
-            requests.append(PackedRequest(tenant=tenant, x=rows))
-            batches.append(take)
+        order = sorted(
+            self._pending, key=lambda t: (-self._quotas.get(t, (0, 0))[1], t)
+        )
+        take: list[tuple[str, list[tuple[np.ndarray, QueryTicket, float]]]] = []
+        budget = self.max_batch
+        for tenant in order:
+            if budget <= 0:
+                break
+            entries = self._pending[tenant][:budget]
+            take.append((tenant, entries))
+            budget -= len(entries)
+        requests = [
+            PackedRequest(tenant=tenant, x=np.stack([x for x, _, _ in entries]))
+            for tenant, entries in take
+        ]
         t0 = time.perf_counter()
         # Pending state is only consumed after the engine succeeds: a raising
         # pack (e.g. an unpublished tenant) leaves every ticket pending.
@@ -265,19 +372,27 @@ class PackedQueryService:
         # The engine pads per (l, d) shape group; read its exact count.
         self._padded += self.engine.packed_pad_slots - pad0
         served = 0
-        for take, res in zip(batches, results):
-            for (_, ticket), est in zip(take, res.estimates):
+        for (tenant, entries), res in zip(take, results):
+            rest = self._pending[tenant][len(entries):]
+            if rest:
+                self._pending[tenant] = rest
+            else:
+                del self._pending[tenant]
+            for (_, ticket, _), est in zip(entries, res.estimates):
                 ticket._resolve(float(est), res.error_bound, res.version)
-            served += len(take)
+            served += len(entries)
+        self._n_pending -= served
+        self._earliest_deadline = min(
+            (dl for entries in self._pending.values() for _, _, dl in entries),
+            default=float("inf"),
+        )
         self._queries += served
         self._flushes += 1
-        self._packed_tenants += len(tenants)
-        self._pending.clear()
-        self._n_pending = 0
-        self._earliest_deadline = float("inf")
+        self._packed_tenants += len(take)
         return served
 
     def stats(self) -> PackedServiceStats:
+        """Lifetime service counters (see ``PackedServiceStats``)."""
         qps = self._queries / self._busy_s if self._busy_s > 0 else 0.0
         return PackedServiceStats(
             queries=self._queries,
@@ -287,4 +402,5 @@ class PackedQueryService:
             deadline_flushes=self._deadline_flushes,
             busy_s=self._busy_s,
             queries_per_sec=qps,
+            shed=self._shed,
         )

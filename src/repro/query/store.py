@@ -124,13 +124,16 @@ class SketchStore:
             return snap
 
     def latest_version(self, tenant: str) -> int:
+        """The tenant's newest published version number."""
         return self.get(tenant).version
 
     def versions(self, tenant: str) -> list[int]:
+        """All retained version numbers for a tenant (ascending)."""
         with self._lock:
             return sorted(self._snaps.get(tenant, {}))
 
     def tenants(self) -> list[str]:
+        """All tenant namespaces with at least one published snapshot."""
         with self._lock:
             return sorted(self._snaps)
 
@@ -140,15 +143,16 @@ class SketchStore:
 
     # -- persistence (repro.ckpt) -------------------------------------------
 
-    def save(self, directory: str, *, step: int = 0) -> str:
-        """Persist every tenant's versions atomically; returns the path.
+    def state_tree(self) -> tuple[dict, dict]:
+        """The store as ``(tree, extra)`` checkpoint halves.
 
-        Matrices become checkpoint leaves (hashed, compressed); everything
-        else — tenant names, version numbers, certificates, metadata — rides
-        the manifest's ``extra`` so ``load`` can rebuild the exact store.
+        ``tree`` maps leaf keys to snapshot matrices (hashed, compressed
+        checkpoint leaves); ``extra`` is the JSON-able structure — tenant
+        names, version numbers, certificates, metadata — that
+        ``from_state_tree`` needs to rebuild the exact store.  ``save``
+        writes exactly this pair; the streaming pipeline embeds it inside
+        its own combined checkpoint.
         """
-        from repro import ckpt
-
         with self._lock:
             snaps = [s for shelf in self._snaps.values() for s in shelf.values()]
             next_version = dict(self._next_version)
@@ -173,26 +177,18 @@ class SketchStore:
                 for i, snap in enumerate(snaps)
             ],
         }
-        return ckpt.save(directory, step, tree, extra=extra)
+        return tree, extra
+
+    @staticmethod
+    def state_template(extra: dict) -> dict:
+        """Zero-filled restore template matching a ``state_tree`` extra."""
+        return {e["key"]: np.zeros(e["shape"], np.float32) for e in extra["snapshots"]}
 
     @classmethod
-    def load(cls, directory: str, *, step: int | None = None) -> "SketchStore":
-        """Rebuild a store from ``save`` output (latest step by default)."""
-        from repro import ckpt
-
-        if step is None:
-            step = ckpt.latest_step(directory)
-            if step is None:
-                raise FileNotFoundError(f"no sketch-store checkpoint under {directory!r}")
-        extra = ckpt.read_extra(directory, step)
+    def from_state_tree(cls, tree: dict, extra: dict) -> "SketchStore":
+        """Rebuild a store from ``state_tree`` halves (exact round-trip)."""
         if extra.get("kind") != "sketch_store":
-            raise ValueError(f"checkpoint at {directory!r} step {step} is not a sketch store")
-        # restore() validates leaf shapes against a template; the store's
-        # tree structure varies per save, so the template comes from extra.
-        template = {
-            e["key"]: np.zeros(e["shape"], np.float32) for e in extra["snapshots"]
-        }
-        tree, _ = ckpt.restore(directory, step, template)
+            raise ValueError(f"state extra is not a sketch store: {extra.get('kind')!r}")
         store = cls(retain=int(extra.get("retain", 0)))
         with store._lock:
             for e in extra["snapshots"]:
@@ -211,3 +207,32 @@ class SketchStore:
                 store._snaps.setdefault(snap.tenant, {})[snap.version] = snap
             store._next_version = {t: int(v) for t, v in extra["next_version"].items()}
         return store
+
+    def save(self, directory: str, *, step: int = 0) -> str:
+        """Persist every tenant's versions atomically; returns the path.
+
+        Matrices become checkpoint leaves (hashed, compressed); everything
+        else — tenant names, version numbers, certificates, metadata — rides
+        the manifest's ``extra`` so ``load`` can rebuild the exact store.
+        """
+        from repro import ckpt
+
+        tree, extra = self.state_tree()
+        return ckpt.save(directory, step, tree, extra=extra)
+
+    @classmethod
+    def load(cls, directory: str, *, step: int | None = None) -> "SketchStore":
+        """Rebuild a store from ``save`` output (latest step by default)."""
+        from repro import ckpt
+
+        if step is None:
+            step = ckpt.latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(f"no sketch-store checkpoint under {directory!r}")
+        extra = ckpt.read_extra(directory, step)
+        if extra.get("kind") != "sketch_store":
+            raise ValueError(f"checkpoint at {directory!r} step {step} is not a sketch store")
+        # restore() validates leaf shapes against a template; the store's
+        # tree structure varies per save, so the template comes from extra.
+        tree, _ = ckpt.restore(directory, step, cls.state_template(extra))
+        return cls.from_state_tree(tree, extra)

@@ -16,8 +16,17 @@ runtime substrate:
                   query admission and ``repro.ckpt`` persistence.
 """
 from repro.runtime.pipeline import StreamingPipeline, TenantStats
-from repro.runtime.policies import EveryKSteps, FrobDrift, OnDemand, PublishPolicy
+from repro.runtime.policies import (
+    EveryKSteps,
+    FrobDrift,
+    OnDemand,
+    PublishPolicy,
+    TenantQuota,
+    policy_from_config,
+    policy_to_config,
+)
 from repro.runtime.registry import (
+    HHProtocol,
     ProtocolSpec,
     SketchProtocol,
     create_protocol,
@@ -30,14 +39,18 @@ from repro.runtime.registry import (
 __all__ = [
     "EveryKSteps",
     "FrobDrift",
+    "HHProtocol",
     "OnDemand",
     "ProtocolSpec",
     "PublishPolicy",
     "SketchProtocol",
     "StreamingPipeline",
+    "TenantQuota",
     "TenantStats",
     "create_protocol",
     "get_spec",
+    "policy_from_config",
+    "policy_to_config",
     "protocol_names",
     "register_protocol",
     "specs",

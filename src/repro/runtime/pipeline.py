@@ -4,24 +4,33 @@ The paper's model is a single continuous loop — sites stream rows, the
 coordinator maintains a sketch, queries are answered at any time.  The repo
 previously split that loop across three layers the caller had to glue by
 hand (tracker updates, store publishes, service flushes).  The pipeline
-owns the whole lifecycle for a fleet of tenants:
+owns the whole lifecycle for a fleet of tenants, and a tenant may be either
+workload the paper covers: matrix tracking (Section 5) or weighted heavy
+hitters (Section 4)::
 
     pipeline = StreamingPipeline(mesh, policy=EveryKSteps(4))
-    pipeline.add_tenant("run-a", d=64)
-    pipeline.add_tenant("run-b", d=64, eps=0.2)
+    pipeline.add_tenant("run-a", d=64)                       # matrix
+    pipeline.add_hh_tenant("clicks", eps=0.05,
+                           quota=TenantQuota(max_pending=64, priority=5))
 
-    pipeline.ingest("run-a", rows)         # super-step + policy-driven publish
-    t = pipeline.submit("run-b", x, deadline_s=0.005)
-    pipeline.poll()                        # deadline pump (packed flush)
+    pipeline.ingest("run-a", rows)         # super-step + policy publish
+    pipeline.ingest("clicks", pairs)       # (n, 2) [element, weight] rows
+    t = pipeline.submit("run-a", x, deadline_s=0.005)
+    e = pipeline.submit("clicks", np.array([element_id], np.float32))
+    pipeline.poll()                        # deadline pump (packed sweep)
     estimate, bound, version = t.result()
 
-Ingest drives the tenant's ``DistributedMatrixTracker`` one super-step and
-asks its ``PublishPolicy`` whether the live sketch drifted enough to become
-a new immutable ``SketchStore`` version.  Queries are admitted through a
-``PackedQueryService``: queued directions for *different* tenants whose
-sketches share (l, d) ride one packed quadform launch, flushed when full or
-when the earliest deadline expires.  ``save``/``load`` persist the store
-through ``repro.ckpt`` so a coordinator restart serves identical answers.
+Ingest drives the tenant's protocol one super-step and asks its
+``PublishPolicy`` whether the live state drifted enough to become a new
+immutable ``SketchStore`` version (matrix tenants publish their sketch B,
+HH tenants their encoded estimate table).  Queries are admitted through a
+``PackedQueryService`` under per-tenant ``TenantQuota``s: overflow is shed
+with a typed error, and each dispatch sweep packs tenants in priority
+order — matrix batches that share (l, d) ride one packed quadform launch,
+HH lookups ride the same sweep without a kernel.  ``save``/``load`` persist
+the *whole* pipeline — published store versions and every tenant's live
+protocol state — through ``repro.ckpt``, so a restarted coordinator resumes
+ingest mid-stream and answers identically.
 """
 from __future__ import annotations
 
@@ -33,28 +42,166 @@ import numpy as np
 
 from repro.query import QueryEngine, SketchStore
 from repro.query.service import PackedQueryService, QueryTicket
-from repro.runtime.policies import EveryKSteps, PublishPolicy
+from repro.runtime.policies import (
+    EveryKSteps,
+    PublishPolicy,
+    TenantQuota,
+    policy_from_config,
+    policy_to_config,
+)
 
 __all__ = ["StreamingPipeline", "TenantStats"]
 
 
 class TenantStats(NamedTuple):
+    """One tenant's lifetime pipeline counters."""
+
     tenant: str
     steps: int  # ingest super-steps absorbed
-    rows: int  # stream rows absorbed
+    rows: int  # stream rows / weighted elements absorbed
     publishes: int  # snapshots auto- or force-published
     latest_version: int | None
-    live_frob: float
+    live_frob: float  # live stream-mass estimate (||A||_F^2, or W for HH)
     comm_total: int  # protocol messages spent (paper units)
+    workload: str = "matrix"  # "matrix" | "hh"
+
+
+class _MatrixAdapter:
+    """Uniform ingest/publish face over a ``DistributedMatrixTracker``."""
+
+    workload = "matrix"
+
+    def __init__(self, tracker):
+        self.tracker = tracker
+
+    def ingest(self, rows) -> None:
+        """Advance the tracker one super-step on an (n, d) row batch."""
+        self.tracker.update(rows)
+
+    def live_mass(self) -> float:
+        """Live ``||A||_F^2`` estimate (what publish policies read)."""
+        return self.tracker.frob_estimate()
+
+    def publish(self, store, tenant: str, meta: dict):
+        """Publish the coordinator sketch B as the tenant's next version."""
+        return self.tracker.publish(store, tenant, meta=meta)
+
+    def check_query(self, x: np.ndarray) -> None:
+        """Reject wrong-shape queries at the submitter (see pipeline.submit)."""
+        d = self.tracker.cfg.d
+        if x.shape != (d,):
+            raise ValueError(
+                f"matrix tenants take a ({d},) direction, got shape {x.shape}"
+            )
+
+    def rows(self) -> int:
+        """Stream rows absorbed so far."""
+        return self.tracker.rows_fed
+
+    def comm_report(self):
+        """Protocol messages spent, in the paper's units."""
+        return self.tracker.comm_report()
+
+    def state_payload(self):
+        """Live protocol state as ``(arrays, meta)`` checkpoint halves."""
+        return self.tracker.state_payload()
+
+    def restore_payload(self, arrays, meta) -> None:
+        """Restore a ``state_payload`` capture bit-identically."""
+        self.tracker.restore_payload(arrays, meta)
+
+    def ctor_meta(self) -> dict:
+        """Construction parameters ``load`` needs to rebuild the tenant."""
+        cfg = self.tracker.cfg
+        return {"protocol": self.tracker.protocol, "d": cfg.d, "eps": cfg.eps}
+
+    @property
+    def target(self):
+        """The wrapped tracker (what ``pipeline.tracker()`` returns)."""
+        return self.tracker
+
+
+class _HHAdapter:
+    """Uniform ingest/publish face over a registry ``HHProtocol``."""
+
+    workload = "hh"
+
+    def __init__(self, proto, ctor_kw: dict):
+        self.proto = proto
+        self._ctor_kw = ctor_kw
+
+    def ingest(self, pairs) -> None:
+        """Advance the protocol one step on an (n, 2) [element, weight] batch."""
+        self.proto.step(pairs)
+
+    def live_mass(self) -> float:
+        """Live total-weight estimate ``hat{W}`` (what publish policies read)."""
+        return self.proto.total_weight()
+
+    def check_query(self, x: np.ndarray) -> None:
+        """Reject wrong-shape queries at the submitter (see pipeline.submit)."""
+        if x.shape != (1,):
+            raise ValueError(
+                f"HH tenants take a (1,) element id, got shape {x.shape}"
+            )
+
+    def publish(self, store, tenant: str, meta: dict):
+        """Publish the encoded estimate table as the tenant's next version."""
+        md = {
+            "workload": "hh",
+            "protocol": self.proto.name,
+            "engine": self.proto.engine,
+            "m": self.proto.m,
+        }
+        md.update(meta)
+        return store.publish(
+            tenant,
+            self.proto.snapshot_matrix(),
+            frob=self.proto.total_weight(),
+            eps=self.proto.eps,
+            n_seen=self.proto.rows_seen,
+            meta=md,
+        )
+
+    def rows(self) -> int:
+        """Weighted elements absorbed so far."""
+        return self.proto.rows_seen
+
+    def comm_report(self):
+        """Protocol messages spent, in the paper's units."""
+        return self.proto.comm_report()
+
+    def state_payload(self):
+        """Live protocol state as ``(arrays, meta)`` checkpoint halves."""
+        return self.proto.state_payload()
+
+    def restore_payload(self, arrays, meta) -> None:
+        """Restore a ``state_payload`` capture bit-identically."""
+        self.proto.restore_payload(arrays, meta)
+
+    def ctor_meta(self) -> dict:
+        """Construction parameters ``load`` needs to rebuild the tenant."""
+        return {
+            "protocol": self.proto.name,
+            "engine": self.proto.engine,
+            "eps": self.proto.eps,
+            "kw": dict(self._ctor_kw),
+        }
+
+    @property
+    def target(self):
+        """The wrapped HHProtocol (what ``pipeline.tracker()`` returns)."""
+        return self.proto
 
 
 class _Tenant:
-    __slots__ = ("tracker", "policy", "steps", "steps_since_publish",
+    __slots__ = ("adapter", "policy", "quota", "steps", "steps_since_publish",
                  "publishes", "published_frob", "latest_version")
 
-    def __init__(self, tracker, policy: PublishPolicy):
-        self.tracker = tracker
+    def __init__(self, adapter, policy: PublishPolicy, quota: TenantQuota | None):
+        self.adapter = adapter
         self.policy = policy
+        self.quota = quota
         self.steps = 0
         self.steps_since_publish = 0
         self.publishes = 0
@@ -94,6 +241,13 @@ class StreamingPipeline:
 
     # -- tenant lifecycle ----------------------------------------------------
 
+    def _register(self, tenant: str, adapter, policy, quota) -> None:
+        self._tenants[tenant] = _Tenant(adapter, policy or self.default_policy, quota)
+        if quota is not None:
+            self.service.set_quota(
+                tenant, max_pending=quota.max_pending, priority=quota.priority
+            )
+
     def add_tenant(
         self,
         tenant: str,
@@ -102,8 +256,9 @@ class StreamingPipeline:
         eps: float | None = None,
         protocol: str | None = None,
         policy: PublishPolicy | None = None,
+        quota: TenantQuota | None = None,
     ):
-        """Register a tenant stream; returns its tracker."""
+        """Register a matrix-tracking tenant stream; returns its tracker."""
         from repro.core.tracker import DistributedMatrixTracker
 
         if tenant in self._tenants:
@@ -115,14 +270,69 @@ class StreamingPipeline:
             axis=self.axis,
             protocol=self.default_protocol if protocol is None else protocol,
         )
-        self._tenants[tenant] = _Tenant(tracker, policy or self.default_policy)
+        self._register(tenant, _MatrixAdapter(tracker), policy, quota)
         return tracker
 
+    def add_hh_tenant(
+        self,
+        tenant: str,
+        *,
+        eps: float | None = None,
+        protocol: str = "P1",
+        engine: str = "event",
+        policy: PublishPolicy | None = None,
+        quota: TenantQuota | None = None,
+        **kw,
+    ):
+        """Register a weighted heavy-hitter tenant; returns its protocol.
+
+        ``engine="event"`` runs the paper-exact simulator in-process
+        (``m`` defaults to the mesh axis size; pass ``m=...`` to override);
+        ``engine="shard"`` runs the shard_map MG-merge super-step engine on
+        the pipeline's mesh.  Extra ``kw`` (``k``, ``s``, ``seed``) pass
+        through to the registered protocol factory and are recorded so
+        ``load`` rebuilds the tenant identically.
+        """
+        from repro.runtime.registry import create_protocol
+
+        if tenant in self._tenants:
+            raise ValueError(f"tenant {tenant!r} already registered")
+        if engine not in ("event", "shard"):
+            raise ValueError(f"unknown HH engine {engine!r}; choose 'event' or 'shard'")
+        eps = self.default_eps if eps is None else eps
+        kw = dict(kw)
+        if engine == "shard":
+            proto = create_protocol(
+                protocol, engine="shard", kind="hh",
+                mesh=self.mesh, eps=eps, axis=self.axis, **kw,
+            )
+        else:
+            kw.setdefault("m", self.mesh.shape[self.axis])
+            proto = create_protocol(
+                protocol, engine="event", kind="hh", eps=eps, **kw,
+            )
+        self._register(tenant, _HHAdapter(proto, kw), policy, quota)
+        return proto
+
     def tenants(self) -> list[str]:
+        """Registered tenant names (sorted)."""
         return sorted(self._tenants)
 
+    def workload(self, tenant: str) -> str:
+        """The tenant's workload kind: ``"matrix"`` or ``"hh"``."""
+        return self._tenant(tenant).adapter.workload
+
     def tracker(self, tenant: str):
-        return self._tenant(tenant).tracker
+        """The tenant's underlying protocol object (tracker or HHProtocol)."""
+        return self._tenant(tenant).adapter.target
+
+    def set_quota(self, tenant: str, quota: TenantQuota) -> None:
+        """Set or replace a tenant's admission quota / dispatch priority."""
+        t = self._tenant(tenant)
+        t.quota = quota
+        self.service.set_quota(
+            tenant, max_pending=quota.max_pending, priority=quota.priority
+        )
 
     def _tenant(self, tenant: str) -> _Tenant:
         try:
@@ -137,18 +347,19 @@ class StreamingPipeline:
     def ingest(self, tenant: str, rows) -> "object | None":
         """Absorb one super-step batch; auto-publish per the tenant's policy.
 
-        Returns the new ``SketchSnapshot`` if the policy fired, else None.
-        Also pumps the packed service's deadlines, so a pure ingest loop
-        still serves queries on time.
+        Matrix tenants take an (n, d) row batch, HH tenants an (n, 2)
+        [element, weight] batch.  Returns the new ``SketchSnapshot`` if the
+        policy fired, else None.  Also pumps the packed service's deadlines,
+        so a pure ingest loop still serves queries on time.
         """
         t = self._tenant(tenant)
-        t.tracker.update(rows)
+        t.adapter.ingest(rows)
         t.steps += 1
         t.steps_since_publish += 1
         snap = None
-        # Only pay for the Frobenius estimate when the policy reads it (for
-        # P3 it materializes the whole estimator matrix).
-        live = t.tracker.frob_estimate() if t.policy.needs_live_frob else 0.0
+        # Only pay for the mass estimate when the policy reads it (for
+        # matrix P3 it materializes the whole estimator matrix).
+        live = t.adapter.live_mass() if t.policy.needs_live_frob else 0.0
         if t.policy.should_publish(
             steps_since_publish=t.steps_since_publish,
             live_frob=live,
@@ -167,12 +378,12 @@ class StreamingPipeline:
         return published
 
     def publish(self, tenant: str):
-        """Force-publish a tenant's live sketch now (OnDemand's trigger)."""
+        """Force-publish a tenant's live state now (OnDemand's trigger)."""
         return self._publish(tenant, self._tenant(tenant))
 
     def _publish(self, tenant: str, t: _Tenant):
         t0 = time.perf_counter()
-        snap = t.tracker.publish(self.store, tenant, meta={"step": t.steps})
+        snap = t.adapter.publish(self.store, tenant, meta={"step": t.steps})
         self._publish_s += time.perf_counter() - t0
         t.steps_since_publish = 0
         t.publishes += 1
@@ -183,12 +394,15 @@ class StreamingPipeline:
     # -- serve ---------------------------------------------------------------
 
     def submit(self, tenant: str, x, *, deadline_s: float | None = None) -> QueryTicket:
-        """Admit one (d,) direction for a tenant into the packed service.
+        """Admit one query for a tenant into the packed service.
 
-        The tenant must have at least one published snapshot: admitting a
-        query nothing can answer would poison every later packed flush
-        (the service keeps failing batches pending by design), wedging
-        other tenants' deadline pumps.  Fail at the submitter instead.
+        Matrix tenants take a (d,) direction; HH tenants a (1,) element id.
+        The tenant must have at least one published snapshot, and ``x``
+        must match the tenant's workload shape: admitting a query nothing
+        can answer would poison every later packed flush (the service
+        keeps failing batches pending by design), wedging other tenants'
+        deadline pumps.  Fail at the submitter instead.  Raises
+        ``QueryShedError`` when the tenant's quota is full.
         """
         t = self._tenant(tenant)
         if t.latest_version is None and tenant not in self.store.tenants():
@@ -196,34 +410,194 @@ class StreamingPipeline:
                 f"tenant {tenant!r} has no published snapshot yet — ingest "
                 "until its policy fires, or call publish()"
             )
-        return self.service.submit(np.asarray(x), tenant=tenant, deadline_s=deadline_s)
+        x = np.asarray(x, np.float32)
+        t.adapter.check_query(x)
+        return self.service.submit(x, tenant=tenant, deadline_s=deadline_s)
 
     def poll(self) -> int:
-        """Deadline pump; returns queries served by a deadline-forced flush."""
+        """Deadline pump; returns queries served by a deadline-forced sweep."""
         return self.service.poll()
 
     def flush(self) -> int:
-        """Serve everything pending in one packed sweep."""
+        """Serve everything pending in capped priority-ordered sweeps."""
         return self.service.flush()
+
+    def heavy_hitters(
+        self, tenant: str, phi: float, *, version: int | None = None
+    ) -> list[int]:
+        """The paper's phi-heavy-hitter set from a published HH snapshot.
+
+        Returns every element whose published estimate crosses the
+        ``(phi - eps/2) hat{W}`` threshold (Section 4's no-false-negative
+        rule), read from the pinned store version — the same data packed
+        queries are answered from, so restart recovery covers it too.
+        """
+        from repro.core.hh import decode_hh_snapshot, threshold_heavy_hitters
+
+        snap = self.store.get(tenant, version)
+        if snap.meta.get("workload") != "hh":
+            raise ValueError(f"tenant {tenant!r} is not a heavy-hitter tenant")
+        return threshold_heavy_hitters(
+            decode_hh_snapshot(snap.matrix), snap.frob, snap.eps, phi
+        )
 
     # -- persistence / accounting -------------------------------------------
 
     def save(self, directory: str, *, step: int = 0) -> str:
-        """Persist every tenant's published versions (``SketchStore.save``)."""
-        return self.store.save(directory, step=step)
+        """Checkpoint the whole pipeline atomically; returns the path.
+
+        One ``repro.ckpt`` step holds both halves of the coordinator: the
+        published ``SketchStore`` versions *and* every tenant's live
+        protocol state (``state_payload``), plus policies, quotas, and
+        publish counters in the manifest.  ``load`` rebuilds a pipeline
+        that answers queries bit-identically and resumes ingest mid-stream.
+        """
+        from repro import ckpt
+
+        store_tree, store_extra = self.store.state_tree()
+        tree: dict = {"store": store_tree}
+        tenants_meta: dict[str, dict] = {}
+        # Tenant names are free-form; leaves get synthetic keys (the store
+        # does the same with snap_NNNNN) so a name with '/' or '__' can
+        # neither break checkpoint file paths nor alias the leaf namespace.
+        for i, (name, t) in enumerate(sorted(self._tenants.items())):
+            arrays, proto_meta = t.adapter.state_payload()
+            key = f"tenant_{i:04d}"
+            tree[key] = dict(arrays)
+            tenants_meta[name] = {
+                "key": key,
+                "workload": t.adapter.workload,
+                "ctor": t.adapter.ctor_meta(),
+                "policy": policy_to_config(t.policy),
+                "quota": None if t.quota is None else list(t.quota),
+                "steps": t.steps,
+                "steps_since_publish": t.steps_since_publish,
+                "publishes": t.publishes,
+                "published_frob": t.published_frob,
+                "latest_version": t.latest_version,
+                "proto_meta": proto_meta,
+            }
+        extra = {
+            "kind": "streaming_pipeline",
+            "store": store_extra,
+            "tenants": tenants_meta,
+            "defaults": {
+                "eps": self.default_eps,
+                "protocol": self.default_protocol,
+                "axis": self.axis,
+                "policy": policy_to_config(self.default_policy),
+            },
+        }
+        return ckpt.save(directory, step, tree, extra=extra)
+
+    @classmethod
+    def load(
+        cls,
+        directory: str,
+        mesh: jax.sharding.Mesh,
+        *,
+        step: int | None = None,
+        axis: str | None = None,
+        **pipeline_kw,
+    ) -> "StreamingPipeline":
+        """Rebuild a pipeline from ``save`` output (latest step by default).
+
+        ``mesh`` must expose the checkpoint's mesh axis at the same size
+        (protocol state is per-site); the axis name itself is recorded in
+        the checkpoint, so pass ``axis`` only to override it.  Remaining
+        keyword arguments (``interpret``, ``max_batch``, ...) configure the
+        fresh serving stack — queue contents are deliberately not
+        checkpointed; unresolved tickets don't survive a coordinator crash.
+        """
+        from repro import ckpt
+
+        if step is None:
+            step = ckpt.latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(f"no pipeline checkpoint under {directory!r}")
+        manifest = ckpt.read_manifest(directory, step)
+        extra = manifest["extra"]
+        if extra.get("kind") != "streaming_pipeline":
+            raise ValueError(
+                f"checkpoint at {directory!r} step {step} is not a streaming pipeline"
+            )
+        # The manifest is the single source of truth for leaf shapes/dtypes:
+        # build each tenant's restore template from its synthetic key prefix
+        # ('tenant_NNNN__...', as written by save).  restore() then verifies
+        # per-leaf sha256, and restore_payload rejects config mismatches.
+        template: dict = {"store": SketchStore.state_template(extra["store"])}
+        for name, meta in extra["tenants"].items():
+            prefix = meta["key"] + "__"
+            template[meta["key"]] = {
+                leaf[len(prefix):]: np.zeros(info["shape"], info["dtype"])
+                for leaf, info in manifest["leaves"].items()
+                if leaf.startswith(prefix)
+            }
+        tree, _ = ckpt.restore(directory, step, template)
+
+        defaults = extra.get("defaults", {})
+        pipe = cls(
+            mesh,
+            axis=str(defaults.get("axis", "data")) if axis is None else axis,
+            eps=float(defaults.get("eps", 0.1)),
+            protocol=str(defaults.get("protocol", "P2")),
+            policy=policy_from_config(defaults["policy"]) if "policy" in defaults else None,
+            store=SketchStore.from_state_tree(tree["store"], extra["store"]),
+            **pipeline_kw,
+        )
+        for name, meta in sorted(extra["tenants"].items()):
+            ctor = meta["ctor"]
+            policy = policy_from_config(meta["policy"])
+            quota = None if meta["quota"] is None else TenantQuota(*meta["quota"])
+            if meta["workload"] == "hh":
+                pipe.add_hh_tenant(
+                    name,
+                    eps=float(ctor["eps"]),
+                    protocol=str(ctor["protocol"]),
+                    engine=str(ctor["engine"]),
+                    policy=policy,
+                    quota=quota,
+                    **ctor["kw"],
+                )
+            else:
+                pipe.add_tenant(
+                    name,
+                    int(ctor["d"]),
+                    eps=float(ctor["eps"]),
+                    protocol=str(ctor["protocol"]),
+                    policy=policy,
+                    quota=quota,
+                )
+            t = pipe._tenants[name]
+            t.adapter.restore_payload(
+                {k: np.asarray(v) for k, v in tree[meta["key"]].items()},
+                meta["proto_meta"],
+            )
+            t.steps = int(meta["steps"])
+            t.steps_since_publish = int(meta["steps_since_publish"])
+            t.publishes = int(meta["publishes"])
+            t.published_frob = (
+                None if meta["published_frob"] is None else float(meta["published_frob"])
+            )
+            t.latest_version = (
+                None if meta["latest_version"] is None else int(meta["latest_version"])
+            )
+        return pipe
 
     def publish_latency_s(self) -> float:
         """Total wall time spent publishing (store copies + host sync)."""
         return self._publish_s
 
     def stats(self, tenant: str) -> TenantStats:
+        """The tenant's lifetime counters (see ``TenantStats``)."""
         t = self._tenant(tenant)
         return TenantStats(
             tenant=tenant,
             steps=t.steps,
-            rows=t.tracker.rows_fed,
+            rows=t.adapter.rows(),
             publishes=t.publishes,
             latest_version=t.latest_version,
-            live_frob=t.tracker.frob_estimate(),
-            comm_total=t.tracker.comm_report().total,
+            live_frob=t.adapter.live_mass(),
+            comm_total=t.adapter.comm_report().total,
+            workload=t.adapter.workload,
         )

@@ -1,4 +1,4 @@
-"""Publish policies: when does a tenant's live sketch become a snapshot?
+"""Tenant policies: when to publish, and how much serving a tenant may queue.
 
 The tracker side of the runtime ingests continuously; the serving side
 reads immutable versioned snapshots from the ``SketchStore``.  A
@@ -7,15 +7,35 @@ between the live sketch and the last published version justifies a new
 version.  Publishing is cheap (one host copy of an (l, d) matrix) but not
 free: every version is a spectrum-cache miss for the serving engine, so
 policies trade snapshot freshness against cache churn.
+
+``TenantQuota`` is the admission-side policy: a bound on how many queries a
+tenant may hold queued in the ``PackedQueryService`` at once (overflow is
+shed at submit time with a typed error — never silently dropped) and a
+priority that orders tenants inside each capped packed dispatch sweep.
+
+Policies are plain-config objects; ``policy_to_config``/``policy_from_config``
+round-trip them through JSON so a ``StreamingPipeline`` checkpoint can
+restore each tenant's publish cadence exactly.
 """
 from __future__ import annotations
 
 import abc
+from typing import NamedTuple
 
-__all__ = ["PublishPolicy", "EveryKSteps", "FrobDrift", "OnDemand"]
+__all__ = [
+    "PublishPolicy",
+    "EveryKSteps",
+    "FrobDrift",
+    "OnDemand",
+    "TenantQuota",
+    "policy_to_config",
+    "policy_from_config",
+]
 
 
 class PublishPolicy(abc.ABC):
+    """Decides when a tenant's live sketch becomes a served store version."""
+
     #: Whether the policy reads ``live_frob``.  When False the pipeline
     #: skips computing the tracker's Frobenius estimate each ingest step
     #: (for P3 that materializes the whole estimator matrix).
@@ -49,6 +69,7 @@ class EveryKSteps(PublishPolicy):
         self.k = k
 
     def should_publish(self, *, steps_since_publish, live_frob, published_frob):
+        """Publish iff k ingest steps have accumulated since the last one."""
         return steps_since_publish >= self.k
 
     def __repr__(self):
@@ -71,6 +92,7 @@ class FrobDrift(PublishPolicy):
         self.rel = rel
 
     def should_publish(self, *, steps_since_publish, live_frob, published_frob):
+        """Publish on first call, then only on > (1+rel) relative mass growth."""
         if published_frob is None:
             return True
         return live_frob > (1.0 + self.rel) * published_frob
@@ -85,7 +107,60 @@ class OnDemand(PublishPolicy):
     needs_live_frob = False
 
     def should_publish(self, *, steps_since_publish, live_frob, published_frob):
+        """Never auto-publish."""
         return False
 
     def __repr__(self):
         return "OnDemand()"
+
+
+# ---------------------------------------------------------------------------
+# Admission quotas / priorities (enforced by query.service.PackedQueryService)
+# ---------------------------------------------------------------------------
+
+
+class TenantQuota(NamedTuple):
+    """Per-tenant admission policy for the packed query service.
+
+    max_pending: bound on queued-but-unserved queries for the tenant; a
+                 submit beyond it is *shed* — rejected with a typed
+                 ``QueryShedError`` and counted in service stats, never
+                 silently dropped (0 = unbounded).
+    priority:    tenants are packed into each capped dispatch sweep in
+                 descending priority order (ties broken by tenant name), so
+                 under overload high-priority tenants are served first.
+    """
+
+    max_pending: int = 0
+    priority: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Policy <-> JSON config (for pipeline checkpoints)
+# ---------------------------------------------------------------------------
+
+_POLICY_TYPES = {"EveryKSteps": EveryKSteps, "FrobDrift": FrobDrift, "OnDemand": OnDemand}
+
+
+def policy_to_config(policy: PublishPolicy) -> dict:
+    """Serialize a policy to a JSON-able ``{"type": ..., params...}`` dict."""
+    if isinstance(policy, EveryKSteps):
+        return {"type": "EveryKSteps", "k": policy.k}
+    if isinstance(policy, FrobDrift):
+        return {"type": "FrobDrift", "rel": policy.rel}
+    if isinstance(policy, OnDemand):
+        return {"type": "OnDemand"}
+    raise TypeError(
+        f"cannot serialize publish policy {policy!r}; custom policies must be "
+        "re-attached after StreamingPipeline.load"
+    )
+
+
+def policy_from_config(config: dict) -> PublishPolicy:
+    """Invert ``policy_to_config``."""
+    kw = {k: v for k, v in config.items() if k != "type"}
+    try:
+        cls = _POLICY_TYPES[config["type"]]
+    except KeyError:
+        raise ValueError(f"unknown publish policy config {config!r}") from None
+    return cls(**kw)

@@ -1,23 +1,40 @@
-"""Typed protocol registry — one dispatch point for both sketch engines.
+"""Typed protocol registry — one dispatch point for every engine and workload.
 
-The paper describes one object: a continuously-maintained coordinator
-sketch that ingests rows and answers ``||A x||^2``.  The repo grows two
-engines for it — the paper-exact event-driven simulator
-(``core/protocols.py``) and the TPU shard_map super-step engine
-(``core/distributed.py``) — and this module gives them one typed surface,
-``SketchProtocol``:
+The paper describes one coordinator loop over two workload families: matrix
+tracking (Section 5, answering ``||A x||^2``) and weighted heavy hitters
+(Section 4, answering frequency estimates), each with an event-driven
+paper-exact engine (``core/protocols.py``) and a shard_map TPU super-step
+engine (``core/distributed.py``).  This module gives them one typed surface
+and one registration point:
 
-    step(rows, sites=None)   absorb a batch of stream rows
-    matrix()                 the coordinator sketch B, (l, d) numpy
-    frob_estimate()          coordinator estimate of ||A||_F^2
-    comm_report()            uniform CommReport (paper message units)
-    query(x) / query_batch() ||B x||^2 via the shared quadform kernel path
+  * ``SketchProtocol`` — the matrix workload interface::
 
-Every implementation is registered here as a ``ProtocolSpec`` keyed by
-``(engine, name)``; consumers (``DistributedMatrixTracker``, the streaming
-pipeline, benchmarks, the registry round-trip test harness) enumerate and
-construct protocols through the registry instead of hard-coding
-per-protocol branches.
+        step(rows, sites=None)   absorb a batch of stream rows
+        matrix()                 the coordinator sketch B, (l, d) numpy
+        frob_estimate()          coordinator estimate of ||A||_F^2
+        comm_report()            uniform CommReport (paper message units)
+        query(x) / query_batch() ||B x||^2 via the shared quadform kernel
+
+  * ``HHProtocol`` — the weighted heavy-hitter workload interface::
+
+        step(pairs, sites=None)  absorb an (n, 2) [element, weight] batch
+        estimates()              coordinator {element: weight-estimate} map
+        total_weight()           coordinator estimate of the stream mass W
+        estimate(keys)           vectorized point lookups
+        heavy_hitters(phi)       the paper's (phi - eps/2) W threshold set
+        snapshot_matrix()        publishable (n, 2) encoding for the store
+
+Both interfaces also speak the pipeline checkpoint contract —
+``state_payload()`` / ``restore_payload()`` — so a ``StreamingPipeline``
+can persist live protocol state (not just published snapshots) and resume
+ingest mid-stream after a coordinator restart.
+
+Every implementation is registered as a ``ProtocolSpec`` keyed by
+``(kind, engine, name)``; consumers (``DistributedMatrixTracker``, the
+streaming pipeline, benchmarks, the registry round-trip tests) enumerate
+and construct protocols through the registry instead of hard-coding
+per-protocol branches.  A new workload joins the pipeline by registering
+one spec.
 """
 from __future__ import annotations
 
@@ -30,9 +47,11 @@ import numpy as np
 from repro.core import distributed as dist
 from repro.core import protocols as event
 from repro.core.comm import CommReport
+from repro.core.hh import encode_hh_snapshot
 
 __all__ = [
     "SketchProtocol",
+    "HHProtocol",
     "ProtocolSpec",
     "register_protocol",
     "get_spec",
@@ -42,22 +61,54 @@ __all__ = [
 ]
 
 
-class SketchProtocol(abc.ABC):
-    """Uniform streaming-sketch interface over every engine/protocol pair."""
+class _StatefulStream:
+    """Shared lifecycle of every registered protocol: identity + checkpointing.
+
+    ``state_payload`` / ``restore_payload`` are the pipeline checkpoint
+    contract: ``(arrays, meta)`` where ``arrays`` is a flat dict of numpy
+    leaves (stored as hashed checkpoint leaves) and ``meta`` is a JSON-able
+    dict (stored in the manifest's ``extra``).  Restoring into a freshly
+    constructed protocol of the same spec/config must reproduce the stream
+    state bit-identically.
+    """
 
     name: str
     engine: str
+    kind: str
     m: int
     eps: float
+
+    def __init__(self, name: str, engine: str, kind: str, m: int, eps: float):
+        self.name = name
+        self.engine = engine
+        self.kind = kind
+        self.m = m
+        self.eps = eps
+        self.rows_seen = 0
+
+    def state_payload(self) -> tuple[dict[str, np.ndarray], dict]:
+        """Serialize live protocol state; override to opt into checkpointing."""
+        raise NotImplementedError(
+            f"{type(self).__name__} ({self.kind}/{self.engine}/{self.name}) does "
+            "not implement pipeline checkpointing"
+        )
+
+    def restore_payload(self, arrays: dict[str, np.ndarray], meta: dict) -> None:
+        """Restore state captured by ``state_payload`` into this instance."""
+        raise NotImplementedError(
+            f"{type(self).__name__} ({self.kind}/{self.engine}/{self.name}) does "
+            "not implement pipeline checkpointing"
+        )
+
+
+class SketchProtocol(_StatefulStream, abc.ABC):
+    """Uniform matrix-sketch interface over every engine/protocol pair."""
+
     d: int
 
     def __init__(self, name: str, engine: str, m: int, eps: float, d: int):
-        self.name = name
-        self.engine = engine
-        self.m = m
-        self.eps = eps
+        super().__init__(name, engine, "matrix", m, eps)
         self.d = d
-        self.rows_seen = 0
 
     @abc.abstractmethod
     def step(self, rows: np.ndarray, sites: np.ndarray | None = None) -> None:
@@ -78,9 +129,11 @@ class SketchProtocol(abc.ABC):
     # -- queries: one code path for every engine (and the serving layer) ----
 
     def query_batch(self, x: np.ndarray) -> np.ndarray:
-        """``||B x_j||^2`` for each row of ``x`` via ``kernels.ops.quadform``
-        — the same kernel the serving engine's pallas path launches, so
-        tracker-side and serving-side answers can never diverge."""
+        """``||B x_j||^2`` for each row of ``x`` via ``kernels.ops.quadform``.
+
+        The same kernel the serving engine's pallas path launches, so
+        tracker-side and serving-side answers can never diverge.
+        """
         import jax.numpy as jnp
 
         from repro.kernels.ops import quadform
@@ -92,73 +145,170 @@ class SketchProtocol(abc.ABC):
         return np.asarray(quadform(jnp.asarray(b, jnp.float32), jnp.asarray(x)))
 
     def query(self, x: np.ndarray) -> float:
+        """Single-direction ``||B x||^2`` over the shared quadform path."""
         return float(self.query_batch(np.asarray(x)[None, :])[0])
+
+
+class HHProtocol(_StatefulStream, abc.ABC):
+    """Uniform weighted heavy-hitter interface over every engine."""
+
+    def __init__(self, name: str, engine: str, m: int, eps: float):
+        super().__init__(name, engine, "hh", m, eps)
+
+    @staticmethod
+    def split_pairs(pairs) -> tuple[np.ndarray, np.ndarray]:
+        """Normalize an ingest batch to ``(keys int64, weights float64)``.
+
+        Accepts an ``(n, 2)`` array of [element, weight] rows (the pipeline
+        wire format — element ids must stay in [0, 2**24) to survive f32) or
+        an explicit ``(keys, weights)`` pair of 1-D arrays.  Negative ids
+        are rejected: -1 is the MG empty-slot sentinel in the shard engine,
+        so letting one through would silently corrupt the sketch.
+        """
+        if isinstance(pairs, tuple):
+            keys, weights = pairs
+        else:
+            arr = np.asarray(pairs)
+            if arr.ndim != 2 or arr.shape[1] != 2:
+                raise ValueError(
+                    f"HH ingest batch must be (n, 2) [element, weight] rows or a "
+                    f"(keys, weights) tuple, got shape {arr.shape}"
+                )
+            keys, weights = arr[:, 0], arr[:, 1]
+        keys = np.asarray(keys).astype(np.int64)
+        if keys.size and not (0 <= int(keys.min()) and int(keys.max()) < 1 << 24):
+            raise ValueError(
+                "HH element ids must be in [0, 2**24): negative ids collide with "
+                "the MG empty-slot sentinel, larger ones don't survive the f32 "
+                "snapshot encoding"
+            )
+        return keys, np.asarray(weights, np.float64)
+
+    @abc.abstractmethod
+    def step(self, pairs, sites: np.ndarray | None = None) -> None:
+        """Absorb a batch of weighted elements (continuing prior state)."""
+
+    @abc.abstractmethod
+    def estimates(self) -> dict[int, float]:
+        """The coordinator's current ``{element: weight-estimate}`` map."""
+
+    @abc.abstractmethod
+    def total_weight(self) -> float:
+        """Coordinator estimate of the total stream weight ``W``."""
+
+    @abc.abstractmethod
+    def comm_report(self) -> CommReport:
+        """Messages spent so far, in the paper's units."""
+
+    # -- queries ------------------------------------------------------------
+
+    def estimate(self, keys) -> np.ndarray:
+        """Vectorized point lookups: estimated weight per queried element."""
+        est = self.estimates()
+        flat = np.asarray(keys).ravel()
+        return np.array([est.get(int(e), 0.0) for e in flat], np.float32)
+
+    def heavy_hitters(self, phi: float) -> list[int]:
+        """Elements with ``hat{W}_e >= (phi - eps/2) hat{W}`` (paper Sec. 4)."""
+        from repro.core.hh import threshold_heavy_hitters
+
+        return threshold_heavy_hitters(
+            self.estimates(), self.total_weight(), self.eps, phi
+        )
+
+    def snapshot_matrix(self) -> np.ndarray:
+        """Publishable ``(n, 2)`` [element, estimate] encoding of the state."""
+        return encode_hh_snapshot(self.estimates())
 
 
 @dataclass(frozen=True)
 class ProtocolSpec:
-    """One registered (engine, protocol) implementation.
+    """One registered (kind, engine, protocol) implementation.
 
-    err_factor: multiple of eps the covariance error is certified to stay
-    under (1.0 for the deterministic protocols; sampling protocols carry
-    the paper's looser constants).  The registry round-trip test drives
-    every spec through one harness using this field — no per-protocol
+    err_factor: multiple of the eps guarantee the protocol is certified to
+    stay under — covariance error relative to ``eps ||A||_F^2`` for matrix
+    protocols, point-estimate error relative to ``eps W`` for heavy hitters
+    (1.0 for the deterministic protocols; sampling protocols carry the
+    paper's looser constants).  The registry round-trip tests drive every
+    spec through one harness per kind using this field — no per-protocol
     special cases.
     """
 
     name: str
     engine: str  # "event" | "shard"
-    factory: Callable[..., SketchProtocol]
+    factory: Callable[..., _StatefulStream]
     err_factor: float = 1.0
     description: str = ""
+    kind: str = "matrix"  # "matrix" | "hh"
 
 
-_REGISTRY: dict[tuple[str, str], ProtocolSpec] = {}
+_REGISTRY: dict[tuple[str, str, str], ProtocolSpec] = {}
 
 
 def register_protocol(spec: ProtocolSpec) -> ProtocolSpec:
-    key = (spec.engine, spec.name)
+    """Add a spec under its ``(kind, engine, name)`` key; rejects duplicates."""
+    key = (spec.kind, spec.engine, spec.name)
     if key in _REGISTRY:
-        raise ValueError(f"protocol {spec.name!r} already registered for engine {spec.engine!r}")
+        raise ValueError(
+            f"protocol {spec.name!r} already registered for "
+            f"kind {spec.kind!r} / engine {spec.engine!r}"
+        )
     _REGISTRY[key] = spec
     return spec
 
 
-def get_spec(name: str, engine: str = "event") -> ProtocolSpec:
+def get_spec(name: str, engine: str = "event", kind: str = "matrix") -> ProtocolSpec:
+    """Look up one spec; raises KeyError naming what *is* registered."""
     try:
-        return _REGISTRY[(engine, name)]
+        return _REGISTRY[(kind, engine, name)]
     except KeyError:
         raise KeyError(
-            f"no protocol {name!r} for engine {engine!r} "
+            f"no {kind} protocol {name!r} for engine {engine!r} "
             f"(registered: {sorted(_REGISTRY)})"
         ) from None
 
 
-def protocol_names(engine: str | None = None) -> list[str]:
-    return sorted({n for (e, n) in _REGISTRY if engine is None or e == engine})
+def protocol_names(engine: str | None = None, kind: str | None = None) -> list[str]:
+    """Registered protocol names, optionally filtered by engine and/or kind."""
+    return sorted(
+        {
+            n
+            for (k, e, n) in _REGISTRY
+            if (engine is None or e == engine) and (kind is None or k == kind)
+        }
+    )
 
 
-def specs(engine: str | None = None) -> list[ProtocolSpec]:
-    return [s for (e, _), s in sorted(_REGISTRY.items()) if engine is None or e == engine]
+def specs(engine: str | None = None, kind: str | None = None) -> list[ProtocolSpec]:
+    """All registered specs, optionally filtered by engine and/or kind."""
+    return [
+        s
+        for (k, e, _), s in sorted(_REGISTRY.items())
+        if (engine is None or e == engine) and (kind is None or k == kind)
+    ]
 
 
-def create_protocol(name: str, *, engine: str = "event", **kw: Any) -> SketchProtocol:
+def create_protocol(
+    name: str, *, engine: str = "event", kind: str = "matrix", **kw: Any
+):
     """Instantiate a registered protocol.
 
     Event engine:  ``create_protocol("P2", m=8, eps=0.1, d=64, seed=0)``
     Shard engine:  ``create_protocol("P2", engine="shard", mesh=mesh, d=64,
     eps=0.1, axis="data")`` — m is the mesh axis size.
+    HH workloads:  pass ``kind="hh"`` (and drop ``d``; HH streams are
+    (element, weight) pairs).
     """
-    return get_spec(name, engine).factory(**kw)
+    return get_spec(name, engine, kind).factory(**kw)
 
 
 # ---------------------------------------------------------------------------
-# Event-driven engine adapter (core/protocols.py stream classes)
+# Event-driven engine adapters (core/protocols.py stream classes)
 # ---------------------------------------------------------------------------
 
 
 class EventProtocol(SketchProtocol):
-    """Paper-exact event-at-a-time engine behind the uniform interface."""
+    """Paper-exact event-at-a-time matrix engine behind the uniform interface."""
 
     def __init__(self, name: str, stream_cls, *, m: int, eps: float, d: int,
                  seed: int = 0, **kw: Any):
@@ -169,6 +319,7 @@ class EventProtocol(SketchProtocol):
         self._cached_result: event.MatrixResult | None = None
 
     def step(self, rows: np.ndarray, sites: np.ndarray | None = None) -> None:
+        """Absorb an (n, d) batch; site-less feeds get round-robin sites."""
         rows = np.asarray(rows)
         if sites is None:
             sites = (np.arange(rows.shape[0]) + self._rr) % self.m
@@ -184,22 +335,150 @@ class EventProtocol(SketchProtocol):
         return self._cached_result
 
     def matrix(self) -> np.ndarray:
+        """The coordinator's current sketch matrix B."""
         return np.asarray(self._result().b)
 
     def frob_estimate(self) -> float:
+        """Coordinator estimate of ``||A||_F^2``."""
         return float(self._result().f_hat)
 
     def comm_report(self) -> CommReport:
+        """Messages spent so far, in the paper's units."""
         return self._stream.comm.report(self.m)
 
 
+class EventHHProtocol(HHProtocol):
+    """Paper-exact event-at-a-time HH engine behind the uniform interface."""
+
+    def __init__(self, name: str, stream_cls, *, m: int, eps: float,
+                 seed: int = 0, **kw: Any):
+        super().__init__(name, "event", m, eps)
+        self._rng = np.random.default_rng(seed)
+        self._stream = stream_cls(m, eps, self._rng, **kw)
+        self._rr = 0  # round-robin cursor for site-less feeds
+        self._cached_result: event.HHResult | None = None
+
+    def step(self, pairs, sites: np.ndarray | None = None) -> None:
+        """Absorb an (n, 2) [element, weight] batch (round-robin if site-less)."""
+        keys, weights = self.split_pairs(pairs)
+        if sites is None:
+            sites = (np.arange(keys.shape[0]) + self._rr) % self.m
+            self._rr = int((self._rr + keys.shape[0]) % self.m)
+        self._stream.step(keys, weights, np.asarray(sites))
+        self.rows_seen += int(keys.shape[0])
+        self._cached_result = None
+
+    def _result(self) -> event.HHResult:
+        if self._cached_result is None:
+            self._cached_result = self._stream.result()
+        return self._cached_result
+
+    def estimates(self) -> dict[int, float]:
+        """The coordinator's current estimate map."""
+        return dict(self._result().estimates)
+
+    def total_weight(self) -> float:
+        """Coordinator estimate of the total stream weight."""
+        return float(self._result().w_hat)
+
+    def comm_report(self) -> CommReport:
+        """Messages spent so far, in the paper's units."""
+        return self._stream.comm.report(self.m)
+
+    def state_payload(self) -> tuple[dict[str, np.ndarray], dict]:
+        """Full stream state as JSON-able meta (HH state is all small)."""
+        return {}, {
+            "stream": self._stream.state_dict(),
+            "rr": self._rr,
+            "rows_seen": self.rows_seen,
+        }
+
+    def restore_payload(self, arrays: dict[str, np.ndarray], meta: dict) -> None:
+        """Restore a ``state_payload`` capture bit-identically."""
+        self._stream.load_state(meta["stream"])
+        self._rr = int(meta["rr"])
+        self.rows_seen = int(meta["rows_seen"])
+        self._cached_result = None
+
+
 # ---------------------------------------------------------------------------
-# shard_map super-step engine adapter (core/distributed.py)
+# shard_map super-step engine adapters (core/distributed.py)
 # ---------------------------------------------------------------------------
 
 
-class ShardProtocol(SketchProtocol):
-    """TPU super-step engine behind the uniform interface.
+def _flatten_state(state) -> tuple[dict[str, np.ndarray], list[str]]:
+    """Flatten a jax protocol state into ckpt leaves + per-leaf tags.
+
+    PRNG-key leaves (P3's per-site keys) are stored as their raw key data
+    and tagged, so restore can rewrap them with ``wrap_key_data``.
+    """
+    import jax
+
+    leaves, _ = jax.tree_util.tree_flatten(state)
+    arrays: dict[str, np.ndarray] = {}
+    tags: list[str] = []
+    for i, leaf in enumerate(leaves):
+        if jax.dtypes.issubdtype(leaf.dtype, jax.dtypes.prng_key):
+            arrays[f"leaf_{i:03d}"] = np.asarray(jax.random.key_data(leaf))
+            tags.append("prng_key")
+        else:
+            arrays[f"leaf_{i:03d}"] = np.asarray(leaf)
+            tags.append("array")
+    return arrays, tags
+
+
+def _unflatten_state(template, arrays: dict[str, np.ndarray], tags: list[str]):
+    import jax
+    import jax.numpy as jnp
+
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    if len(leaves) != len(tags):
+        raise ValueError(
+            f"checkpointed state has {len(tags)} leaves, expected {len(leaves)} "
+            "(protocol/config mismatch?)"
+        )
+    new = []
+    for i, old in enumerate(leaves):
+        arr = arrays[f"leaf_{i:03d}"]
+        if tags[i] == "prng_key":
+            restored = jax.random.wrap_key_data(jnp.asarray(arr))
+        else:
+            restored = jnp.asarray(arr).astype(old.dtype)
+        # Shape mismatch means the protocol was rebuilt with a different
+        # config (e.g. a mesh whose axis size != the checkpoint's m): fail
+        # here with the cause, not later inside a jitted shard_map step.
+        if restored.shape != old.shape:
+            raise ValueError(
+                f"checkpointed state leaf {i} has shape {restored.shape}, "
+                f"expected {old.shape} (protocol/config mismatch — was the "
+                "pipeline reloaded onto a mesh of a different size?)"
+            )
+        new.append(restored)
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
+class _ShardCheckpointMixin:
+    """Checkpoint contract shared by every jit-state (shard) protocol.
+
+    Flattens the protocol's jax state into checkpoint leaves (PRNG keys
+    tagged for rewrapping) and restores bit-identically; subclasses supply
+    ``_invalidate()`` to drop their host-side caches after a restore.
+    """
+
+    def state_payload(self) -> tuple[dict[str, np.ndarray], dict]:
+        """Flatten the jit-able protocol state into checkpoint leaves."""
+        arrays, tags = _flatten_state(self.state)
+        return arrays, {"leaves": tags, "rows_seen": self.rows_seen}
+
+    def restore_payload(self, arrays: dict[str, np.ndarray], meta: dict) -> None:
+        """Restore a ``state_payload`` capture bit-identically."""
+        self.state = _unflatten_state(self.state, arrays, list(meta["leaves"]))
+        self.rows_seen = int(meta["rows_seen"])
+        self._invalidate()
+
+
+class ShardProtocol(_ShardCheckpointMixin, SketchProtocol):
+    """TPU super-step matrix engine behind the uniform interface.
 
     ``sites`` is ignored: row placement *is* the sharding of the input batch
     over the mesh axis (each shard is one paper site).
@@ -218,11 +497,13 @@ class ShardProtocol(SketchProtocol):
         self._cached_matrix: np.ndarray | None = None
 
     def step(self, rows, sites: np.ndarray | None = None) -> None:
+        """Advance one super-step on a mesh-sharded (n, d) batch."""
         self.state = self._step(self.state, rows)
         self.rows_seen += int(rows.shape[0])
         self._cached_matrix = None
 
     def matrix(self) -> np.ndarray:
+        """The coordinator's current sketch matrix B."""
         # The sketch is a pure function of the state: one device->host
         # materialization per super-step serves matrix/frob/query alike.
         if self._cached_matrix is None:
@@ -230,13 +511,64 @@ class ShardProtocol(SketchProtocol):
         return self._cached_matrix
 
     def frob_estimate(self) -> float:
+        """Coordinator estimate of ``||A||_F^2``."""
         # Reuse the host matrix if this super-step already materialized it;
         # otherwise protocol_frob reads f_hat (P1/P2) or reduces on device
         # (P3) without forcing a full host transfer.
         return dist.protocol_frob(self.name, self.state, matrix=self._cached_matrix)
 
     def comm_report(self) -> CommReport:
+        """Messages spent so far, in the paper's units."""
         return self.state.comm.report(self.cfg.m)
+
+    def _invalidate(self) -> None:
+        self._cached_matrix = None
+
+
+class ShardHHProtocol(_ShardCheckpointMixin, HHProtocol):
+    """TPU super-step HH engine (batched MG merge) behind the uniform interface.
+
+    ``sites`` is ignored: element placement *is* the sharding of the input
+    batch over the mesh axis.  Backed by ``core.distributed.hh_p1_step``
+    (per-shard ``MGState`` + ``mg_merge`` coordinator folding).
+    """
+
+    def __init__(self, name: str, *, mesh, eps: float = 0.1,
+                 axis: str = "data", k: int = 0):
+        m = mesh.shape[axis]
+        super().__init__(name, "shard", m, eps)
+        self.cfg = dist.ProtocolConfig(eps=eps, m=m, d=2, axis=axis, k=k).resolved()
+        self.state, self._step = dist.make_protocol_runner("HH" + name, self.cfg, mesh)
+        self._cached_estimates: dict[int, float] | None = None
+
+    def step(self, pairs, sites: np.ndarray | None = None) -> None:
+        """Advance one super-step on a mesh-sharded weighted-element batch."""
+        import jax.numpy as jnp
+
+        keys, weights = self.split_pairs(pairs)
+        self.state = self._step(
+            self.state,
+            (jnp.asarray(keys, jnp.int32), jnp.asarray(weights, jnp.float32)),
+        )
+        self.rows_seen += int(keys.shape[0])
+        self._cached_estimates = None
+
+    def estimates(self) -> dict[int, float]:
+        """The coordinator's current estimate map (one host read per step)."""
+        if self._cached_estimates is None:
+            self._cached_estimates = dist.hh_estimates(self.state)
+        return dict(self._cached_estimates)
+
+    def total_weight(self) -> float:
+        """Coordinator estimate of the total stream weight."""
+        return dist.hh_w_hat(self.state)
+
+    def comm_report(self) -> CommReport:
+        """Messages spent so far, in the paper's units."""
+        return self.state.comm.report(self.cfg.m)
+
+    def _invalidate(self) -> None:
+        self._cached_estimates = None
 
 
 # ---------------------------------------------------------------------------
@@ -251,9 +583,23 @@ def _event_factory(name: str, stream_cls):
     return make
 
 
+def _event_hh_factory(name: str, stream_cls):
+    def make(**kw: Any) -> EventHHProtocol:
+        return EventHHProtocol(name, stream_cls, **kw)
+
+    return make
+
+
 def _shard_factory(name: str):
     def make(**kw: Any) -> ShardProtocol:
         return ShardProtocol(name, **kw)
+
+    return make
+
+
+def _shard_hh_factory(name: str):
+    def make(**kw: Any) -> ShardHHProtocol:
+        return ShardHHProtocol(name, **kw)
 
     return make
 
@@ -277,3 +623,26 @@ for _name in ("P1", "P2", "P3"):
         err_factor=1.5 if _name == "P3" else 1.0,
         description=f"shard_map super-step matrix {_name}",
     ))
+
+# Heavy hitters: deterministic P1/P2 meet eps exactly; the sampling
+# protocols (P3/P3wr) and probabilistic P4 carry the paper's 2x slack.
+_HH_ERR = {"P1": 1.0, "P2": 1.0, "P3": 2.0, "P3wr": 2.0, "P4": 2.0}
+
+for _name, _cls in event.HH_STREAMS.items():
+    register_protocol(ProtocolSpec(
+        name=_name,
+        kind="hh",
+        engine="event",
+        factory=_event_hh_factory(_name, _cls),
+        err_factor=_HH_ERR[_name],
+        description=f"event-driven weighted heavy hitters {_name} (paper Section 4)",
+    ))
+
+register_protocol(ProtocolSpec(
+    name="P1",
+    kind="hh",
+    engine="shard",
+    factory=_shard_hh_factory("P1"),
+    err_factor=1.0,
+    description="shard_map super-step weighted heavy hitters P1 (MG merge)",
+))

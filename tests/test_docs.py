@@ -1,0 +1,37 @@
+"""docs/ARCHITECTURE.md stays truthful: its paper-to-code table and the
+protocol registry must agree in BOTH directions — every coordinate in the
+table resolves, and every registered spec appears in the table."""
+import os
+import re
+
+from repro.runtime import get_spec, specs
+
+DOC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "docs", "ARCHITECTURE.md")
+COORD = re.compile(r"`(matrix|hh):(event|shard):([A-Za-z0-9]+)`")
+
+
+def _doc_coords() -> set[tuple[str, str, str]]:
+    with open(DOC) as f:
+        return {m.groups() for m in COORD.finditer(f.read())}
+
+
+def test_architecture_doc_exists_and_has_coords():
+    assert os.path.exists(DOC), "docs/ARCHITECTURE.md is part of the repo contract"
+    assert len(_doc_coords()) >= 10  # the full protocol family is mapped
+
+
+def test_every_doc_coordinate_resolves_in_registry():
+    for kind, engine, name in sorted(_doc_coords()):
+        spec = get_spec(name, engine, kind)  # raises KeyError if stale
+        assert (spec.kind, spec.engine, spec.name) == (kind, engine, name)
+
+
+def test_every_registered_spec_is_documented():
+    coords = _doc_coords()
+    missing = [
+        f"{s.kind}:{s.engine}:{s.name}"
+        for s in specs()
+        if (s.kind, s.engine, s.name) not in coords
+    ]
+    assert not missing, f"add to docs/ARCHITECTURE.md paper-to-code table: {missing}"

@@ -1,4 +1,12 @@
-"""Weighted Misra--Gries / SpaceSaving bounds + mergeability."""
+"""Weighted Misra--Gries / SpaceSaving bounds, mergeability, and codecs.
+
+The mg_merge algebra tests pin down the invariants the runtime's shard HH
+engine leans on: the coordinator folds shipped site summaries with
+``mg_merge`` in site order, so the merge must be commutative (estimates
+don't depend on gather order) and associativity-robust (any merge tree
+stays inside the summed error budget), with the empty summary as identity
+(masked non-senders contribute nothing).
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -12,9 +20,12 @@ except ModuleNotFoundError:
 from repro.core.hh import (
     MGSketch,
     SpaceSaving,
+    decode_hh_snapshot,
+    encode_hh_snapshot,
     exact_heavy_hitters,
     mg_estimate,
     mg_init,
+    mg_items,
     mg_merge,
     mg_update_stream,
 )
@@ -76,6 +87,103 @@ def test_mg_merge_bound(rng):
         est = float(mg_estimate(merged, jnp.int32(e)))
         assert est <= true + 1e-2
         assert true - est <= 2 * W / (k + 1) + 1e-2  # merged error adds
+
+
+def _third_streams(rng, k=48):
+    """Three disjoint MGState summaries over thirds of one stream."""
+    keys, w = _stream(rng, n=3000, universe=200)
+    parts = []
+    for i in range(3):
+        lo, hi = i * 1000, (i + 1) * 1000
+        parts.append(
+            mg_update_stream(mg_init(k), jnp.asarray(keys[lo:hi]), jnp.asarray(w[lo:hi]))
+        )
+    return keys, w, parts, k
+
+
+def test_mg_merge_commutative(rng):
+    """Gather order must not matter: mg_merge(a, b) == mg_merge(b, a) as an
+    estimate map (the shard engine folds sites in arbitrary mesh order)."""
+    keys, _, (s1, s2, _), _ = _third_streams(rng)
+    ab, ba = mg_merge(s1, s2), mg_merge(s2, s1)
+    assert mg_items(ab) == pytest.approx(mg_items(ba), rel=1e-5)
+    np.testing.assert_allclose(float(ab.weight), float(ba.weight), rtol=1e-6)
+    np.testing.assert_allclose(float(ab.shrink), float(ba.shrink), rtol=1e-6)
+
+
+def test_mg_merge_associativity_error_budget(rng):
+    """Any merge tree over the same summaries stays inside the summed
+    W/(k+1) budget, and both association orders agree on total weight."""
+    keys, w, (s1, s2, s3), k = _third_streams(rng)
+    left = mg_merge(mg_merge(s1, s2), s3)
+    right = mg_merge(s1, mg_merge(s2, s3))
+    np.testing.assert_allclose(float(left.weight), float(right.weight), rtol=1e-6)
+    _, totals, W = exact_heavy_hitters(keys, w, 0.01)
+    # merge depth 2 on top of 3 base summaries: <= 3 error terms of W/(k+1)
+    budget = 3.0 * W / (k + 1) + 1e-2
+    for merged in (left, right):
+        items = mg_items(merged)
+        for e, true in totals.items():
+            est = items.get(e, 0.0)
+            assert est <= true + 1e-2
+            assert true - est <= budget
+        # the shrink witness certifies the instance error
+        assert float(merged.shrink) <= budget
+
+
+def test_mg_merge_empty_identity(rng):
+    """The empty summary is mg_merge's identity — what makes the shard
+    engine's masked (non-sending) gather lanes correct."""
+    keys, _, (s1, _, _), k = _third_streams(rng)
+    for merged in (mg_merge(s1, mg_init(k)), mg_merge(mg_init(k), s1)):
+        assert mg_items(merged) == pytest.approx(mg_items(s1), rel=1e-6)
+        np.testing.assert_allclose(float(merged.weight), float(s1.weight))
+        np.testing.assert_allclose(float(merged.shrink), float(s1.shrink))
+
+
+def test_spacesaving_recall(rng):
+    """SpaceSaving overestimates, so thresholding at phi*W misses no true
+    heavy hitter (the guarantee P2/P4 use it for)."""
+    keys, w = _stream(rng)
+    ss = SpaceSaving(200)
+    for kk, ww in zip(keys.tolist(), w.tolist()):
+        ss.update(kk, ww)
+    hh, totals, W = exact_heavy_hitters(keys, w, 0.02)
+    returned = {e for e, v in ss.items().items() if v >= 0.02 * W}
+    assert set(hh).issubset(returned)
+
+
+def test_sketch_state_dict_round_trip(rng):
+    """MGSketch/SpaceSaving state dicts rebuild bit-identical sketches."""
+    keys, w = _stream(rng, n=5000, universe=300)
+    mg, ss = MGSketch(64), SpaceSaving(64)
+    for kk, ww in zip(keys.tolist(), w.tolist()):
+        mg.update(kk, ww)
+        ss.update(kk, ww)
+    mg2 = MGSketch.from_state(mg.state_dict())
+    ss2 = SpaceSaving.from_state(ss.state_dict())
+    assert (mg2.counters, mg2.weight, mg2.shrink) == (mg.counters, mg.weight, mg.shrink)
+    assert (ss2.counters, ss2.weight) == (ss.counters, ss.weight)
+    # and they continue identically
+    for kk, ww in zip(keys.tolist()[:500], w.tolist()[:500]):
+        mg.update(kk, ww)
+        mg2.update(kk, ww)
+    assert mg2.counters == mg.counters
+
+
+def test_hh_snapshot_codec_round_trip(rng):
+    """encode/decode invert each other; encoding is canonical (sorted)."""
+    est = {17: 3.5, 2: 1.25, 40001: 7.0}
+    mat = encode_hh_snapshot(est)
+    assert mat.shape == (3, 2) and mat.dtype == np.float32
+    assert list(mat[:, 0]) == sorted(est)  # canonical order
+    assert decode_hh_snapshot(mat) == est
+    assert encode_hh_snapshot({}).shape == (0, 2)
+    assert decode_hh_snapshot(np.zeros((0, 2), np.float32)) == {}
+    with pytest.raises(ValueError):
+        encode_hh_snapshot({1 << 24: 1.0})  # would not survive f32
+    with pytest.raises(ValueError):
+        decode_hh_snapshot(np.zeros((2, 3), np.float32))
 
 
 def test_mg_property():

@@ -1,10 +1,11 @@
 """Paper Section 4: weighted heavy-hitter protocols — error + communication."""
 import math
 
+import numpy as np
 import pytest
 
 from repro.core.hh import exact_heavy_hitters
-from repro.core.protocols import run_hh_protocol
+from repro.core.protocols import HH_STREAMS, run_hh_protocol
 from repro.data.synthetic import site_assignment, zipfian_stream
 
 N, M, EPS, PHI, BETA = 60_000, 10, 0.02, 0.05, 100.0
@@ -56,6 +57,46 @@ def test_hh_all_protocols_beat_naive(stream):
     for proto in ["P1", "P2", "P3", "P4"]:
         msgs = run_hh_protocol(proto, keys, w, sites, M, EPS).comm.total(M)
         assert msgs < N, (proto, msgs)
+
+
+@pytest.mark.parametrize("proto", sorted(HH_STREAMS))
+def test_hh_stream_batches_match_one_shot(stream, proto):
+    """The resumable stream classes continue event-at-a-time semantics
+    exactly: feeding the stream in batches reproduces the historical
+    one-shot run bit-for-bit (estimates, w_hat, and message log), RNG
+    draws included.  P3wr is the documented exception — its uniform draws
+    are blocked per step, so only a single whole-stream step reproduces
+    the historical message count (estimates still agree)."""
+    keys, w, sites, _ = stream
+    eng = HH_STREAMS[proto](M, EPS, np.random.default_rng(9))
+    splits = 1 if proto == "P3wr" else 4
+    nb = N // splits
+    for i in range(splits):
+        lo, hi = i * nb, (i + 1) * nb
+        eng.step(keys[lo:hi], w[lo:hi], sites[lo:hi])
+    got = eng.result()
+    want = run_hh_protocol(proto, keys, w, sites, M, EPS, seed=9)
+    assert got.estimates == want.estimates
+    assert got.w_hat == want.w_hat
+    assert got.comm == want.comm
+
+
+@pytest.mark.parametrize("proto", sorted(HH_STREAMS))
+def test_hh_stream_state_round_trip_mid_stream(stream, proto):
+    """state_dict/load_state mid-stream: a fresh stream restored from the
+    snapshot finishes the stream identically to the uninterrupted one."""
+    keys, w, sites, _ = stream
+    half = N // 2
+    eng = HH_STREAMS[proto](M, EPS, np.random.default_rng(11))
+    eng.step(keys[:half], w[:half], sites[:half])
+    clone = HH_STREAMS[proto](M, EPS, np.random.default_rng(0))
+    clone.load_state(eng.state_dict())
+    for e in (eng, clone):
+        e.step(keys[half:], w[half:], sites[half:])
+    got, want = clone.result(), eng.result()
+    assert got.estimates == want.estimates
+    assert got.w_hat == want.w_hat
+    assert got.comm == want.comm
 
 
 def test_hh_message_scaling_with_eps(stream):

@@ -1,9 +1,10 @@
-"""Streaming runtime layer: protocol registry round-trip, publish policies,
-cross-tenant packed serving, and store persistence.
+"""Streaming runtime layer: protocol registry round-trip (matrix and HH),
+publish policies, quotas/priorities, cross-tenant packed serving, and
+store + pipeline persistence.
 
-The registry test is deliberately ONE harness driven over every registered
-``ProtocolSpec`` — engine- and protocol-specific knowledge lives in the
-specs (err_factor), not in the test.
+The registry tests are deliberately ONE harness per workload kind, driven
+over every registered ``ProtocolSpec`` — engine- and protocol-specific
+knowledge lives in the specs (err_factor), not in the tests.
 """
 import tempfile
 
@@ -19,16 +20,26 @@ except ModuleNotFoundError:
     hypothesis = None
 
 from repro.core.comm import CommReport
-from repro.data.synthetic import lowrank_stream
+from repro.core.hh import exact_heavy_hitters
+from repro.data.synthetic import lowrank_stream, site_assignment, zipfian_stream
 from repro.kernels.ops import quadform, quadform_packed
 from repro.kernels.ref import ref_quadform_packed
-from repro.query import PackedQueryService, PackedRequest, QueryEngine, SketchStore
+from repro.query import (
+    PackedQueryService,
+    PackedRequest,
+    QueryEngine,
+    QueryShedError,
+    SketchStore,
+)
 from repro.runtime import (
     EveryKSteps,
     FrobDrift,
     OnDemand,
     StreamingPipeline,
+    TenantQuota,
     create_protocol,
+    policy_from_config,
+    policy_to_config,
     specs,
 )
 
@@ -52,7 +63,7 @@ def mesh():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("spec", specs(), ids=lambda s: f"{s.engine}-{s.name}")
+@pytest.mark.parametrize("spec", specs(kind="matrix"), ids=lambda s: f"{s.engine}-{s.name}")
 def test_registry_round_trip_eps_harness(spec, stream, mesh):
     """Every (engine, protocol) pair: stream in batches through the uniform
     interface, then check the covariance guarantee, message accounting,
@@ -95,6 +106,150 @@ def test_registry_unknown_protocol_raises():
         create_protocol("P9", engine="event", m=2, eps=0.5, d=4)
     with pytest.raises(KeyError):
         create_protocol("P4", engine="event", m=2, eps=0.5, d=4)  # negative result: unregistered
+    with pytest.raises(KeyError):
+        create_protocol("P9", engine="event", kind="hh", m=2, eps=0.5)
+
+
+# ---------------------------------------------------------------------------
+# registry: one error-bound harness for every registered HH spec
+# ---------------------------------------------------------------------------
+
+HH_N, HH_M, HH_EPS, HH_PHI, HH_BETA = 30_000, 8, 0.05, 0.05, 100.0
+
+
+@pytest.fixture(scope="module")
+def hh_stream():
+    keys, w = zipfian_stream(HH_N, beta=HH_BETA, universe=3000, seed=5)
+    sites = site_assignment(HH_N, HH_M, seed=5)
+    truth = exact_heavy_hitters(keys, w, HH_PHI)
+    return keys, w, sites, truth
+
+
+def _make_hh(spec, mesh, **kw):
+    if spec.engine == "event":
+        return create_protocol(
+            spec.name, engine="event", kind="hh", m=HH_M, eps=HH_EPS, seed=1, **kw
+        )
+    return create_protocol(spec.name, engine="shard", kind="hh", mesh=mesh, eps=HH_EPS)
+
+
+@pytest.mark.parametrize("spec", specs(kind="hh"), ids=lambda s: f"{s.engine}-{s.name}")
+def test_registry_hh_harness(spec, hh_stream, mesh):
+    """Every (engine, protocol) HH pair: stream batches through the uniform
+    interface, then check the weighted-frequency guarantee, message
+    accounting, the total-weight estimate, vectorized lookups, and the
+    checkpoint payload round-trip (restore -> identical continued stream)."""
+    keys, w, sites, (hh, totals, W) = hh_stream
+    proto = _make_hh(spec, mesh)
+    pairs = np.stack([keys.astype(np.float64), w], axis=1)
+    for i in range(0, HH_N, 10_000):
+        if spec.engine == "event":
+            proto.step(pairs[i : i + 10_000], sites[i : i + 10_000])
+        else:
+            proto.step(pairs[i : i + 10_000])
+    assert proto.rows_seen == HH_N
+
+    est = proto.estimates()
+    worst = max(abs(totals[e] - est.get(e, 0.0)) / W for e in totals)
+    assert worst <= spec.err_factor * HH_EPS + 1e-6, (spec.name, worst)
+
+    # total-weight estimate tracks the true stream weight
+    assert 0.4 * W <= proto.total_weight() <= 2.5 * W
+
+    rep = proto.comm_report()
+    assert isinstance(rep, CommReport)
+    assert rep.total > 0
+    if spec.name != "P3wr":  # P3wr's s samplers only beat N on long streams
+        assert rep.total < HH_N  # beats shipping the stream
+
+    # vectorized lookups agree with the estimate map
+    probe = np.array(sorted(totals)[:50])
+    np.testing.assert_allclose(
+        proto.estimate(probe),
+        np.array([est.get(int(e), 0.0) for e in probe], np.float32),
+    )
+
+    # checkpoint round-trip: a fresh protocol restored from the payload
+    # continues the stream identically (the pipeline-restart contract)
+    arrays, meta = proto.state_payload()
+    clone = _make_hh(spec, mesh)
+    clone.restore_payload({k: np.asarray(v) for k, v in arrays.items()}, meta)
+    tail = pairs[:5_000]
+    if spec.engine == "event":
+        proto.step(tail, sites[:5_000])
+        clone.step(tail, sites[:5_000])
+    else:
+        proto.step(tail)
+        clone.step(tail)
+    assert proto.estimates() == clone.estimates()
+    assert proto.total_weight() == clone.total_weight()
+    assert proto.comm_report() == clone.comm_report()
+
+
+@pytest.mark.parametrize(
+    "spec", specs(engine="shard", kind="matrix"), ids=lambda s: s.name
+)
+def test_shard_matrix_state_round_trip(spec, stream, mesh):
+    """Every shard matrix protocol honors the checkpoint contract: a fresh
+    protocol restored from state_payload continues the stream identically
+    (incl. P3's per-site PRNG keys, rewrapped from raw key data)."""
+    a, _, _, _ = stream
+    proto = create_protocol(spec.name, engine="shard", mesh=mesh, d=D, eps=EPS)
+    proto.step(jnp.asarray(a[:2000]))
+    arrays, meta = proto.state_payload()
+    clone = create_protocol(spec.name, engine="shard", mesh=mesh, d=D, eps=EPS)
+    clone.restore_payload({k: np.asarray(v) for k, v in arrays.items()}, meta)
+    proto.step(jnp.asarray(a[2000:4000]))
+    clone.step(jnp.asarray(a[2000:4000]))
+    np.testing.assert_array_equal(proto.matrix(), clone.matrix())
+    assert proto.comm_report() == clone.comm_report()
+    assert proto.frob_estimate() == clone.frob_estimate()
+
+
+def test_hh_rejects_out_of_range_and_malformed_ingest(mesh):
+    """Element ids outside [0, 2**24) are rejected at the ingest seam:
+    negative ids collide with the MG empty-slot sentinel in the shard
+    engine, larger ones don't survive the f32 snapshot encoding (and a
+    policy-driven publish failing later would wedge the tenant)."""
+    for engine in ("event", "shard"):
+        kw = {"m": 2} if engine == "event" else {"mesh": mesh}
+        proto = create_protocol("P1", engine=engine, kind="hh", eps=0.5, **kw)
+        with pytest.raises(ValueError, match="element ids"):
+            proto.step(np.array([[-1.0, 5.0]], np.float32))
+        with pytest.raises(ValueError, match="element ids"):
+            proto.step((np.array([1 << 24]), np.array([1.0])))
+        with pytest.raises(ValueError, match="\\(n, 2\\)"):
+            proto.step(np.zeros((3, 4), np.float32))
+
+
+def test_restore_payload_rejects_config_mismatch(stream, mesh):
+    """Restoring protocol state into a differently-configured protocol
+    (other eps -> other sketch width; other mesh size -> other m) fails
+    fast with the cause, not later inside a jitted shard_map step."""
+    a, _, _, _ = stream
+    p = create_protocol("P2", engine="shard", mesh=mesh, d=D, eps=0.3)
+    p.step(jnp.asarray(a[:1000]))
+    arrays, meta = p.state_payload()
+    q = create_protocol("P2", engine="shard", mesh=mesh, d=D, eps=0.1)
+    with pytest.raises(ValueError, match="protocol/config mismatch"):
+        q.restore_payload({k: np.asarray(v) for k, v in arrays.items()}, meta)
+
+
+def test_hh_shard_matches_event_semantics(hh_stream, mesh):
+    """The shard HHP1 engine meets the same deterministic eps bound as the
+    event P1 on the same stream, with comparable message counts."""
+    keys, w, sites, (hh, totals, W) = hh_stream
+    pairs = np.stack([keys.astype(np.float64), w], axis=1)
+    ev = create_protocol("P1", engine="event", kind="hh", m=1, eps=HH_EPS)
+    sh = create_protocol("P1", engine="shard", kind="hh", mesh=mesh, eps=HH_EPS)
+    ev.step(pairs, np.zeros(HH_N, np.int64))
+    sh.step(pairs)
+    for proto in (ev, sh):
+        est = proto.estimates()
+        worst = max(abs(totals[e] - est.get(e, 0.0)) / W for e in totals)
+        assert worst <= HH_EPS + 1e-6
+        # the paper's no-false-negative rule holds through heavy_hitters()
+        assert set(hh).issubset(set(proto.heavy_hitters(HH_PHI)))
 
 
 def test_event_protocol_round_robin_sites():
@@ -342,6 +497,83 @@ def test_packed_service_failed_flush_keeps_tickets(multi_store):
 
 
 # ---------------------------------------------------------------------------
+# admission quotas and priorities
+# ---------------------------------------------------------------------------
+
+
+def test_quota_sheds_and_reports(multi_store):
+    """Submits beyond a tenant's max_pending are rejected with a typed
+    error and counted — never queued, never silently dropped."""
+    svc = PackedQueryService(QueryEngine(multi_store))
+    svc.set_quota("a", max_pending=2)
+    rng = np.random.default_rng(20)
+    t1 = svc.submit(rng.normal(size=32).astype(np.float32), tenant="a")
+    t2 = svc.submit(rng.normal(size=32).astype(np.float32), tenant="a")
+    with pytest.raises(QueryShedError) as ei:
+        svc.submit(rng.normal(size=32).astype(np.float32), tenant="a")
+    assert (ei.value.tenant, ei.value.pending, ei.value.max_pending) == ("a", 2, 2)
+    # other tenants are unaffected by a's quota
+    tb = svc.submit(rng.normal(size=32).astype(np.float32), tenant="b")
+    assert svc.pending() == 3 and svc.pending("a") == 2
+    assert svc.stats().shed == 1 and svc.shed_counts() == {"a": 1}
+    # shedding frees nothing until a flush drains the queue
+    svc.flush()
+    assert all(t.done for t in (t1, t2, tb))
+    t4 = svc.submit(rng.normal(size=32).astype(np.float32), tenant="a")
+    assert not t4.done  # admitted again after the drain
+
+
+def test_quota_validation(multi_store):
+    svc = PackedQueryService(QueryEngine(multi_store))
+    with pytest.raises(ValueError):
+        svc.set_quota("a", max_pending=-1)
+
+
+def test_priority_orders_capped_sweeps(multi_store):
+    """With max_batch smaller than the backlog, each deadline-pump sweep
+    serves the highest-priority tenant first; lower priority waits."""
+    now = [0.0]
+    svc = PackedQueryService(
+        QueryEngine(multi_store), max_batch=2, auto_flush=False,
+        default_deadline_s=1.0, clock=lambda: now[0],
+    )
+    svc.set_quota("a", priority=0)
+    svc.set_quota("b", priority=5)
+    rng = np.random.default_rng(21)
+    lo = [svc.submit(rng.normal(size=32).astype(np.float32), tenant="a") for _ in range(2)]
+    hi = [svc.submit(rng.normal(size=32).astype(np.float32), tenant="b") for _ in range(2)]
+    now[0] = 2.0
+    assert svc.poll() == 2  # one capped sweep: the high-priority tenant
+    assert all(t.done for t in hi) and not any(t.done for t in lo)
+    assert svc.poll() == 2  # expired low-priority queries ride the next pump
+    assert all(t.done for t in lo)
+    stats = svc.stats()
+    assert stats.deadline_flushes == 2 and stats.flushes == 2
+
+
+def test_flush_drains_beyond_max_batch(multi_store):
+    """flush() loops capped sweeps until empty, splitting tenants across
+    sweeps when needed."""
+    svc = PackedQueryService(QueryEngine(multi_store), max_batch=4, auto_flush=False)
+    rng = np.random.default_rng(22)
+    tickets = [
+        svc.submit(rng.normal(size=32).astype(np.float32), tenant="abc"[i % 3])
+        for i in range(10)
+    ]
+    assert svc.flush() == 10
+    assert all(t.done for t in tickets)
+    assert svc.stats().flushes == 3  # ceil(10 / 4) engine round-trips
+
+
+def test_policy_config_round_trip():
+    for policy in (EveryKSteps(3), FrobDrift(rel=0.25), OnDemand()):
+        clone = policy_from_config(policy_to_config(policy))
+        assert repr(clone) == repr(policy)
+    with pytest.raises(ValueError):
+        policy_from_config({"type": "Nope"})
+
+
+# ---------------------------------------------------------------------------
 # store persistence
 # ---------------------------------------------------------------------------
 
@@ -430,14 +662,155 @@ def test_pipeline_end_to_end(mesh):
     with pytest.raises(KeyError):
         pipe.submit("ghost", np.zeros(d, np.float32))
 
-    # restart recovery through the pipeline's own save
+    # restart recovery through the pipeline's own save/load
     with tempfile.TemporaryDirectory() as ckdir:
         pipe.save(ckdir)
-        restored = QueryEngine(SketchStore.load(ckdir))
+        restored = StreamingPipeline.load(ckdir, mesh)
+        assert restored.tenants() == pipe.tenants()
         for tenant in streams:
             before = pipe.engine.query_batch(xs[tenant], tenant=tenant, path="pallas")
-            after = restored.query_batch(xs[tenant], tenant=tenant, path="pallas")
+            after = restored.engine.query_batch(xs[tenant], tenant=tenant, path="pallas")
             np.testing.assert_array_equal(before.estimates, after.estimates)
+            assert restored.stats(tenant) == pipe.stats(tenant)
+
+
+def _mixed_pipeline(mesh):
+    """One pipeline hosting a matrix tenant and both HH engines."""
+    pipe = StreamingPipeline(mesh, eps=0.25, policy=EveryKSteps(1))
+    pipe.add_tenant("mat", 16, quota=TenantQuota(max_pending=4, priority=1))
+    pipe.add_hh_tenant("hh-ev", eps=0.05, protocol="P1", engine="event", m=4,
+                       quota=TenantQuota(max_pending=8, priority=5))
+    pipe.add_hh_tenant("hh-sh", eps=0.05, protocol="P1", engine="shard")
+    return pipe
+
+
+def _mixed_feed():
+    a = lowrank_stream(1024, 16, rank=3, seed=41)
+    keys, w = zipfian_stream(8000, beta=100.0, universe=1000, seed=42)
+    pairs = np.stack([keys.astype(np.float32), w.astype(np.float32)], axis=1)
+    return a, pairs
+
+
+def _mixed_answers(pipe, a, pairs):
+    """Resume ingest on the second half of the feed, then query every tenant."""
+    for i in (2, 3):
+        pipe.ingest("mat", jnp.asarray(a[i * 256 : (i + 1) * 256]))
+        pipe.ingest("hh-ev", pairs[i * 2000 : (i + 1) * 2000])
+        pipe.ingest("hh-sh", pairs[i * 2000 : (i + 1) * 2000])
+    x = np.random.default_rng(43).normal(size=16).astype(np.float32)
+    tickets = [
+        pipe.submit("mat", x),
+        pipe.submit("hh-ev", np.array([1.0], np.float32)),
+        pipe.submit("hh-sh", np.array([1.0], np.float32)),
+    ]
+    pipe.flush()
+    out = [v for t in tickets for v in t.result()]
+    out += [float(pipe.stats(t).live_frob) for t in pipe.tenants()]
+    out += [float(pipe.stats(t).comm_total) for t in pipe.tenants()]
+    out += [float(e) for e in pipe.heavy_hitters("hh-ev", 0.05)]
+    return np.array(out, np.float64)
+
+
+def test_pipeline_mixed_workloads_quota_and_restart(mesh, tmp_path):
+    """The PR acceptance loop: one pipeline hosts matrix + HH tenants
+    concurrently, enforces a per-tenant quota under synthetic overload
+    (sheds and reports, never silently drops), and after save -> fresh
+    process load resumes ingest and answers bit-identically."""
+    from conftest import run_multidevice
+
+    pipe = _mixed_pipeline(mesh)
+    a, pairs = _mixed_feed()
+    for i in (0, 1):  # first half of every stream
+        pipe.ingest("mat", jnp.asarray(a[i * 256 : (i + 1) * 256]))
+        pipe.ingest("hh-ev", pairs[i * 2000 : (i + 1) * 2000])
+        pipe.ingest("hh-sh", pairs[i * 2000 : (i + 1) * 2000])
+    assert {pipe.workload(t) for t in pipe.tenants()} == {"matrix", "hh"}
+
+    # -- synthetic overload: the 5th pending "mat" query trips the quota --
+    x = np.random.default_rng(44).normal(size=16).astype(np.float32)
+    held = [pipe.submit("mat", x) for _ in range(4)]
+    with pytest.raises(QueryShedError) as ei:
+        pipe.submit("mat", x)
+    assert ei.value.tenant == "mat" and ei.value.max_pending == 4
+    # shed is *reported*: counted per tenant, queue depths intact
+    assert pipe.service.stats().shed == 1
+    assert pipe.service.shed_counts() == {"mat": 1}
+    assert pipe.service.pending("mat") == 4
+    # the high-priority HH tenant is still admitted during mat's overload
+    hh_t = pipe.submit("hh-ev", np.array([1.0], np.float32))
+    assert pipe.flush() == 5  # 4 held + 1 HH; the shed query was never queued
+    assert all(t.done for t in held) and hh_t.done
+
+    # -- checkpoint, then resume in THIS process --
+    ckdir = str(tmp_path / "pipeline_ck")
+    pipe.save(ckdir)
+    want = _mixed_answers(pipe, a, pairs)
+
+    # -- fresh-process restart: load must answer bit-identically --
+    import os
+
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    script = f"""
+import sys
+sys.path.insert(0, {tests_dir!r})
+import jax, numpy as np
+from repro.runtime import StreamingPipeline
+from test_runtime import _mixed_answers, _mixed_feed
+
+mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+pipe = StreamingPipeline.load({ckdir!r}, mesh)
+a, pairs = _mixed_feed()
+print("ANSWERS=" + _mixed_answers(pipe, a, pairs).tobytes().hex())
+"""
+    out = run_multidevice(script, n_devices=1)
+    got_hex = [ln for ln in out.splitlines() if ln.startswith("ANSWERS=")][0]
+    got = np.frombuffer(bytes.fromhex(got_hex.removeprefix("ANSWERS=")), np.float64)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pipeline_submit_rejects_wrong_workload_shape(mesh):
+    """A wrong-shape query must fail at the submitter: once queued, it
+    would make every packed flush raise (failing batches stay pending by
+    design) and wedge all tenants."""
+    pipe = _mixed_pipeline(mesh)
+    a, pairs = _mixed_feed()
+    pipe.ingest("mat", jnp.asarray(a[:256]))
+    pipe.ingest("hh-ev", pairs[:2000])
+    with pytest.raises(ValueError, match="element id"):
+        pipe.submit("hh-ev", np.zeros(16, np.float32))  # matrix direction
+    with pytest.raises(ValueError, match="direction"):
+        pipe.submit("mat", np.array([1.0], np.float32))  # HH element id
+    # nothing was queued: the service still serves cleanly
+    pipe.submit("mat", np.zeros(16, np.float32))
+    assert pipe.flush() == 1
+
+
+def test_pipeline_add_hh_tenant_rejects_unknown_engine(mesh):
+    pipe = StreamingPipeline(mesh)
+    with pytest.raises(ValueError, match="unknown HH engine"):
+        pipe.add_hh_tenant("t", engine="Shard")
+
+
+def test_pipeline_save_load_with_hostile_tenant_names(mesh, tmp_path):
+    """Tenant names are free-form: path separators and '__' must neither
+    break checkpoint file paths nor alias the leaf namespace."""
+    pipe = StreamingPipeline(mesh, eps=0.25, policy=FrobDrift(rel=0.5))
+    names = ["eu/run__a", "eu/run", "tenant_0001"]
+    a = lowrank_stream(512, 8, rank=2, seed=60)
+    for name in names:
+        pipe.add_tenant(name, 8)
+        pipe.ingest(name, jnp.asarray(a))  # FrobDrift: first ingest publishes
+    ckdir = str(tmp_path / "hostile")
+    pipe.save(ckdir)
+    restored = StreamingPipeline.load(ckdir, mesh)
+    assert restored.tenants() == pipe.tenants()
+    # the pipeline-wide default policy survives the round trip too
+    assert repr(restored.default_policy) == repr(pipe.default_policy)
+    x = np.random.default_rng(61).normal(size=8).astype(np.float32)
+    for name in names:
+        t1, t2 = pipe.submit(name, x), restored.submit(name, x)
+        pipe.flush(), restored.flush()
+        assert t1.result() == t2.result()
 
 
 def test_pipeline_on_demand_and_drift_policies(mesh):
