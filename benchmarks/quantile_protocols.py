@@ -1,0 +1,197 @@
+"""Distributed quantile tracking: comm vs eps, merge latency, pipeline serve.
+
+First half sweeps the event protocols (P1 deterministic change propagation,
+P3 priority sampling) across eps on a heavy-tailed weighted stream —
+messages vs worst served rank error vs one-shot wall time — plus the
+``QuantileSummary`` merge-latency microbenchmark (the coordinator's hot
+operation: sites push summaries, C folds them).
+
+The second half drives quantile tenants through the multi-tenant
+``StreamingPipeline`` with a ``ServicePump`` background deadline executor
+— mixed engines and eps — and writes ``BENCH_quantile_protocols.json``:
+protocol communication vs rank accuracy vs per-tenant packed-serve
+latency, with the pump (not the ingest loop) holding deadlines.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, scale, timed
+from repro.core.quantiles import (
+    QuantileSummary,
+    exact_ranks,
+    quantile_query,
+    run_quantile_protocol,
+)
+from repro.data.synthetic import site_assignment, zipfian_stream
+
+PHIS = np.linspace(0.05, 0.95, 19)
+
+
+def _stream(n: int, seed: int):
+    """Heavy-tailed weighted value stream (zipf weights, lognormal values)."""
+    rng = np.random.default_rng(seed)
+    values = rng.lognormal(3.0, 1.5, n).astype(np.float32)
+    _, weights = zipfian_stream(n, beta=100.0, universe=50_000, seed=seed)
+    return values, weights
+
+
+def _worst_rank_err(res, values, weights) -> float:
+    w_total = float(np.sum(weights))
+    worst = 0.0
+    for phi in PHIS:
+        v = float(res.quantile([phi])[0])
+        r = float(exact_ranks(values, weights, [v])[0])
+        worst = max(worst, abs(r - phi * w_total) / w_total)
+    return worst
+
+
+def run() -> None:
+    n = int(200_000 * scale())
+    m = 50
+    values, weights = _stream(n, seed=21)
+    sites = site_assignment(n, m, seed=21)
+
+    # comm vs eps vs served accuracy.  The deterministic P1 pays per-item
+    # python summary work, so its tightest-eps point is left to the cheap
+    # sampling P3 (the comparison the protocols exist for).
+    eps_grid = {"P1": [1e-2, 5e-2], "P3": [5e-3, 1e-2, 5e-2]}
+    for proto, eps_list in eps_grid.items():
+        for eps in eps_list:
+            res, us = timed(
+                run_quantile_protocol, proto, values, weights, sites, m, eps, seed=1
+            )
+            err = _worst_rank_err(res, values, weights)
+            emit(
+                f"quantile/comm/{proto}/eps={eps:g}",
+                us,
+                f"err={err:.2e};msg={res.comm.total(m)};n={n}",
+            )
+
+    # merge latency: the coordinator's hot operation, vs summary size (eps)
+    for eps in [5e-3, 5e-2]:
+        parts = []
+        for i in range(8):
+            s = QuantileSummary(eps)
+            lo = i * (n // 8)
+            s.extend(values[lo : lo + n // 8], weights[lo : lo + n // 8])
+            parts.append(s)
+
+        def fold(summaries=parts, e=eps):
+            acc = QuantileSummary(e)
+            for p in summaries:
+                acc.merge(p)
+            return acc
+
+        acc, us = timed(fold)
+        emit(
+            f"quantile/merge/eps={eps:g}",
+            us / len(parts),  # per-merge
+            f"tuples={acc.size()};bytes={acc.serialized_bytes()}",
+        )
+
+    run_pipeline()
+
+
+def run_pipeline() -> None:
+    """Quantile tenants as pipeline workloads served under a ServicePump.
+
+    Three quantile tenants (event P1 at two eps + the shard summary-merge
+    engine) stream through one ``StreamingPipeline`` whose deadlines are
+    held by the background executor; a query storm measures per-tenant
+    time-to-resolution with zero cooperative ``poll()`` calls.  Writes
+    ``BENCH_quantile_protocols.json``.
+    """
+    import jax
+
+    from repro.runtime import EveryKSteps, StreamingPipeline, TenantQuota
+
+    n = max(20_000, int(200_000 * scale()))
+    rounds, queries_per_round = 8, 32
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    pipe = StreamingPipeline(
+        mesh, policy=EveryKSteps(2), max_batch=2 * queries_per_round,
+        pump_interval_s=0.0005,
+    )
+    tenants = {
+        "q-p1-tight": dict(protocol="P1", engine="event", eps=0.01, m=10),
+        "q-p1-loose": dict(protocol="P1", engine="event", eps=0.05, m=10),
+        "q-shard": dict(protocol="P1", engine="shard", eps=0.01),
+    }
+    for i, (name, kw) in enumerate(tenants.items()):
+        pipe.add_quantile_tenant(
+            name, quota=TenantQuota(max_pending=4 * queries_per_round, priority=i), **kw
+        )
+
+    streams = {name: _stream(n, seed=60 + i) for i, name in enumerate(tenants)}
+    batch = n // 8
+    t0 = time.perf_counter()
+    for name, (values, weights) in streams.items():
+        pairs = np.stack([values, weights.astype(np.float32)], axis=1)
+        for i in range(0, n, batch):
+            pipe.ingest(name, pairs[i : i + batch])
+    ingest_s = time.perf_counter() - t0
+
+    # Query storm resolved purely by the pump: short per-query deadlines,
+    # no poll()/flush() from this loop — time-to-resolution is the pump's.
+    rng = np.random.default_rng(99)
+    serve_s = {name: 0.0 for name in tenants}
+    served = {name: 0 for name in tenants}
+    for _ in range(rounds):
+        tickets = {
+            name: [
+                pipe.submit(name, quantile_query(float(p)), deadline_s=0.001)
+                for p in rng.uniform(0.01, 0.99, queries_per_round)
+            ]
+            for name in tenants
+        }
+        t0 = time.perf_counter()
+        resolved: set = set()
+        while len(resolved) < len(tenants):
+            time.sleep(0.0002)
+            now = time.perf_counter() - t0
+            for name, ts in tickets.items():
+                if name not in resolved and all(t.done for t in ts):
+                    resolved.add(name)
+                    serve_s[name] += now
+        for name, ts in tickets.items():
+            served[name] += len(ts)
+
+    pump_polls, pump_served = pipe.pump.polls, pipe.pump.served
+    pipe.close()
+
+    out: dict = {
+        "stream": {"n_per_tenant": n, "rounds": rounds,
+                   "queries_per_round": queries_per_round},
+        "ingest_s": ingest_s,
+        "pump": {"interval_s": 0.0005, "polls": pump_polls, "served": pump_served},
+        "service": pipe.service.stats()._asdict(),
+        "tenants": {},
+    }
+    for name, (values, weights) in streams.items():
+        proto = pipe.tracker(name)  # duck-types _worst_rank_err's .quantile
+        worst = _worst_rank_err(proto, values, weights)
+        stats = pipe.stats(name)
+        lat_us = serve_s[name] / rounds * 1e6  # mean time-to-resolution
+        out["tenants"][name] = {
+            **tenants[name],
+            "priority": pipe.service.quota(name)[1],
+            "comm_total": stats.comm_total,
+            "worst_rank_err": worst,
+            "queries_served": served[name],
+            "serve_latency_us_per_round": lat_us,
+            "publishes": stats.publishes,
+        }
+        emit(
+            f"quantile/pipeline/{name}",
+            lat_us,
+            f"err={worst:.2e};msg={stats.comm_total};pump_served={pump_served}",
+        )
+
+    path = os.path.join(os.getcwd(), "BENCH_quantile_protocols.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)

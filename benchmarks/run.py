@@ -16,6 +16,7 @@ def main() -> None:
         kernels_bench,
         matrix_protocols,
         p4_negative,
+        quantile_protocols,
         query_service,
         roofline_table,
         runtime_pipeline,
@@ -26,6 +27,7 @@ def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     for mod in (
         hh_protocols,
+        quantile_protocols,
         matrix_protocols,
         tradeoff,
         p4_negative,

@@ -1,50 +1,63 @@
-"""Mixed-workload pipeline demo: matrix + heavy-hitter tenants, one runtime.
+"""Mixed-workload pipeline demo: matrix + HH + quantile tenants, one runtime.
 
-One ``StreamingPipeline`` hosts both workloads the paper covers — matrix
-tracking (Section 5) and weighted heavy hitters (Section 4) — behind a
-single ingest → publish → packed-serve loop, and demonstrates the
-hardening this layer adds:
+One ``StreamingPipeline`` hosts all three registered workload kinds —
+matrix tracking (paper Section 5), weighted heavy hitters (Section 4), and
+distributed quantiles (Yi–Zhang's companion problem) — behind a single
+ingest → publish → packed-serve loop, and demonstrates the hardening this
+layer adds:
 
-  1. mixed packed serving — matrix quadform batches and HH point-lookups
-     resolve through the same admission path and sweep,
-  2. per-tenant admission quotas — overload is shed with a typed error and
+  1. mixed packed serving — matrix quadform batches, HH point-lookups,
+     and quantile rank/phi lookups resolve through the same admission
+     path and sweep,
+  2. background deadline execution — a ``ServicePump`` thread owned by
+     the pipeline holds per-query deadlines with no cooperative
+     ``poll()`` calls from the ingest loop,
+  3. per-tenant admission quotas — overload is shed with a typed error and
      counted, never silently dropped; priorities order capped sweeps,
-  3. pipeline-level restart — ``save``/``load`` checkpoint live protocol
+  4. pipeline-level restart — ``save``/``load`` checkpoint live protocol
      state (not just published snapshots), so the restarted coordinator
-     resumes ingest mid-stream and answers bit-identically.
+     resumes ingest mid-stream and answers bit-identically (the pump
+     revives too).
 
     PYTHONPATH=src python examples/mixed_tenants.py
 """
 import tempfile
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.quantiles import quantile_query, rank_query
 from repro.data.synthetic import lowrank_stream, zipfian_stream
 from repro.query import QueryShedError
 from repro.runtime import EveryKSteps, StreamingPipeline, TenantQuota
 
-D, EPS_MAT, EPS_HH, PHI = 32, 0.2, 0.02, 0.05
+D, EPS_MAT, EPS_HH, EPS_Q, PHI = 32, 0.2, 0.02, 0.02, 0.05
 
 mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
-pipe = StreamingPipeline(mesh, eps=EPS_MAT, policy=EveryKSteps(2))
+pipe = StreamingPipeline(mesh, eps=EPS_MAT, policy=EveryKSteps(2),
+                         pump_interval_s=0.001)
 pipe.add_tenant("activations", D, quota=TenantQuota(max_pending=8, priority=1))
 pipe.add_hh_tenant("clicks", eps=EPS_HH, protocol="P1", engine="event", m=10,
                    quota=TenantQuota(max_pending=8, priority=5))
 pipe.add_hh_tenant("clicks-shard", eps=EPS_HH, protocol="P1", engine="shard")
+pipe.add_quantile_tenant("latency", eps=EPS_Q, protocol="P1", engine="event", m=10)
 
-# -- ingest both workloads through one loop ---------------------------------
+# -- ingest all three workloads through one loop -----------------------------
 rows = lowrank_stream(2048, D, rank=4, seed=0)
 keys, w = zipfian_stream(40_000, beta=100.0, universe=5000, seed=1)
 pairs = np.stack([keys.astype(np.float32), w.astype(np.float32)], axis=1)
+lat_ms = np.random.default_rng(9).lognormal(2.3, 0.8, 40_000).astype(np.float32)
+lat = np.stack([lat_ms, np.ones_like(lat_ms)], axis=1)  # [value, weight]
 for i in range(8):
     pipe.ingest("activations", jnp.asarray(rows[i * 256 : (i + 1) * 256]))
     pipe.ingest("clicks", pairs[i * 5000 : (i + 1) * 5000])
     pipe.ingest("clicks-shard", pairs[i * 5000 : (i + 1) * 5000])
+    pipe.ingest("latency", lat[i * 5000 : (i + 1) * 5000])
 for t in pipe.tenants():
     s = pipe.stats(t)
-    print(f"{t:13s} [{s.workload:6s}] steps={s.steps} publishes={s.publishes} "
+    print(f"{t:13s} [{s.workload:8s}] steps={s.steps} publishes={s.publishes} "
           f"msgs={s.comm_total}")
 
 # -- mixed packed serving ----------------------------------------------------
@@ -54,6 +67,9 @@ hot = max(set(keys[:100].tolist()), key=keys[:100].tolist().count)
 t_mat = pipe.submit("activations", x)
 t_hh = pipe.submit("clicks", np.array([float(hot)], np.float32))
 t_sh = pipe.submit("clicks-shard", np.array([float(hot)], np.float32))
+t_p50 = pipe.submit("latency", quantile_query(0.5))
+t_p99 = pipe.submit("latency", quantile_query(0.99))
+t_rank = pipe.submit("latency", rank_query(20.0))
 pipe.flush()
 est, bound, _ = t_mat.result()
 print(f"\n||A x||^2 ~ {est:.1f} (+- {bound:.1f})")
@@ -61,9 +77,23 @@ print(f"clicks[{hot}] ~ {t_hh.result()[0]:.1f} (event)  "
       f"{t_sh.result()[0]:.1f} (shard)  true "
       f"{float(np.sum(w[keys == hot])):.1f}")
 print(f"phi={PHI} heavy hitters: {pipe.heavy_hitters('clicks', PHI)}")
+print(f"latency p50 ~ {t_p50.result()[0]:.1f}ms (true "
+      f"{float(np.quantile(lat_ms, 0.5)):.1f})  p99 ~ {t_p99.result()[0]:.1f}ms "
+      f"(true {float(np.quantile(lat_ms, 0.99)):.1f})")
+print(f"requests <= 20ms: ~{t_rank.result()[0]:.0f} of {lat_ms.size} "
+      f"(true {int(np.sum(lat_ms <= 20.0))})")
+
+# -- background deadline executor: serve while ingest is idle ----------------
+tk = pipe.submit("latency", quantile_query(0.9), deadline_s=0.005)
+while not tk.done:  # nobody calls poll()/flush(); only the pump can fire
+    time.sleep(0.001)
+print(f"\npump served p90 ~ {tk.result()[0]:.1f}ms while ingest was idle "
+      f"(pump polls={pipe.pump.polls}, served={pipe.pump.served})")
 
 # -- quota overload: shed-and-report ----------------------------------------
-held = [pipe.submit("activations", x) for _ in range(8)]
+# Long deadlines: the background pump must not drain the held queries
+# before the 9th submit trips the quota, or the demo has nothing to shed.
+held = [pipe.submit("activations", x, deadline_s=60.0) for _ in range(8)]
 try:
     pipe.submit("activations", x)
 except QueryShedError as e:
@@ -77,12 +107,19 @@ assert all(t.done for t in held)
 with tempfile.TemporaryDirectory() as ckdir:
     pipe.save(ckdir)
     restored = StreamingPipeline.load(ckdir, mesh)
+    assert restored.pump is not None and restored.pump.running  # pump revived
     for p in (pipe, restored):  # resume ingest on BOTH coordinators
         p.ingest("clicks", pairs[:5000])
         p.ingest("activations", jnp.asarray(rows[:256]))
+        p.ingest("latency", lat[:5000])
     a1 = pipe.submit("clicks", np.array([float(hot)], np.float32))
     a2 = restored.submit("clicks", np.array([float(hot)], np.float32))
     b1, b2 = pipe.submit("activations", x), restored.submit("activations", x)
+    c1 = pipe.submit("latency", quantile_query(0.99))
+    c2 = restored.submit("latency", quantile_query(0.99))
     pipe.flush(), restored.flush()
     assert a1.result() == a2.result() and b1.result() == b2.result()
+    assert c1.result() == c2.result()
+    restored.close()
     print("\nrestart: resumed ingest answers bit-identical: OK")
+pipe.close()

@@ -33,9 +33,11 @@ class CommReport:
 
     @property
     def total(self) -> int:
+        """Total message cost in the paper's units (broadcasts cost m each)."""
         return self.scalar_msgs + self.row_msgs + self.broadcast_events * self.m
 
     def as_dict(self) -> dict[str, int]:
+        """The report as a plain dict (includes the derived ``total``)."""
         return {
             "scalar_msgs": self.scalar_msgs,
             "row_msgs": self.row_msgs,

@@ -38,6 +38,7 @@ from jax import lax
 
 from repro.core import fd as fdlib
 from repro.core import hh as hhlib
+from repro.core import quantiles as qlib
 from repro.core.comm import CommReport
 
 __all__ = [
@@ -46,6 +47,7 @@ __all__ = [
     "P2State",
     "P3State",
     "HHP1State",
+    "QuantP1State",
     "p1_init",
     "p1_step",
     "p2_init",
@@ -56,6 +58,10 @@ __all__ = [
     "hh_p1_step",
     "hh_estimates",
     "hh_w_hat",
+    "quant_p1_init",
+    "quant_p1_step",
+    "quant_p1_table",
+    "quant_p1_w_hat",
     "p2_query",
     "p3_matrix",
     "protocol_matrix",
@@ -65,6 +71,7 @@ __all__ = [
 
 
 class ProtocolConfig(NamedTuple):
+    """Static shard-protocol configuration (size defaults via ``resolved``)."""
     eps: float
     m: int  # number of sites == mesh axis size
     d: int  # row dimensionality
@@ -73,9 +80,11 @@ class ProtocolConfig(NamedTuple):
     l_coord: int = 0  # coordinator sketch rows (0 -> ceil(4/eps))
     s: int = 0  # P3 sample size (0 -> ceil(1/eps^2 * log(1/eps)))
     k: int = 0  # HH MG counters (0 -> ceil(2/eps), the MG_{eps/2} default)
+    q_cap: int = 0  # quantile summary capacity (0 -> ceil(8/eps) + 8)
     use_pallas: bool = False
 
     def resolved(self) -> "ProtocolConfig":
+        """Fill size defaults: sketch rows, sample size, MG counters, quantile cap."""
         import math
 
         l_default = max(2, math.ceil(4.0 / self.eps))
@@ -85,16 +94,19 @@ class ProtocolConfig(NamedTuple):
             l_coord=self.l_coord or l_default,
             s=self.s or s_default,
             k=self.k or max(2, math.ceil(2.0 / self.eps)),
+            q_cap=self.q_cap or max(32, math.ceil(8.0 / self.eps) + 8),
         )
 
 
 class CommCounters(NamedTuple):
+    """Jit-able protocol-level message counters (the shard engine's CommLog)."""
     scalar_msgs: jax.Array  # i32 — protocol-level scalar messages
     row_msgs: jax.Array  # i32 — protocol-level row messages
     broadcast_events: jax.Array  # i32
 
     @staticmethod
     def zero() -> "CommCounters":
+        """All-zero counters."""
         z = jnp.zeros((), jnp.int32)
         return CommCounters(z, z, z)
 
@@ -118,6 +130,7 @@ def _row_sq(x: jax.Array) -> jax.Array:
 
 
 class P1State(NamedTuple):
+    """Matrix P1 shard state: per-site FD + replicated coordinator FD/totals."""
     site_fd: fdlib.FDState  # per-shard
     f_i: jax.Array  # per-shard () f32 — mass since last ship
     coord_fd: fdlib.FDState  # replicated
@@ -127,6 +140,7 @@ class P1State(NamedTuple):
 
 
 def p1_init(cfg: ProtocolConfig) -> P1State:
+    """Initial P1 state for one site (tiled per shard by the runner)."""
     cfg = cfg.resolved()
     return P1State(
         site_fd=fdlib.fd_init(cfg.l_site, cfg.d),
@@ -177,6 +191,7 @@ def p1_step(cfg: ProtocolConfig, st: P1State, rows: jax.Array) -> P1State:
 
 
 class P2State(NamedTuple):
+    """Matrix P2 shard state: per-site FD + replicated coordinator FD/thresholds."""
     site_fd: fdlib.FDState  # per-shard; buffer rows are sigma_i v_i
     f_j: jax.Array  # per-shard () f32 — scalar-message accumulator
     coord_fd: fdlib.FDState  # replicated
@@ -186,6 +201,7 @@ class P2State(NamedTuple):
 
 
 def p2_init(cfg: ProtocolConfig) -> P2State:
+    """Initial P2 state for one site (tiled per shard by the runner)."""
     cfg = cfg.resolved()
     return P2State(
         site_fd=fdlib.fd_init(cfg.l_site, cfg.d),
@@ -198,6 +214,7 @@ def p2_init(cfg: ProtocolConfig) -> P2State:
 
 
 def p2_step(cfg: ProtocolConfig, st: P2State, rows: jax.Array) -> P2State:
+    """One P2 super-step; call inside shard_map with ``rows`` = local (b, d)."""
     cfg = cfg.resolved()
     # -- scalar totals (Algorithm 5.3 first half) --
     f_j = st.f_j + jnp.sum(_row_sq(rows))
@@ -243,6 +260,7 @@ def p2_query(st: P2State, x: jax.Array) -> jax.Array:
 
 
 class P3State(NamedTuple):
+    """Matrix P3 shard state: per-site PRNG + replicated priority-sample buffer."""
     rng: jax.Array  # per-shard PRNG key
     tau: jax.Array  # replicated () f32 — round threshold
     buf_rows: jax.Array  # replicated (s+1, d) — top-priority rows
@@ -252,6 +270,7 @@ class P3State(NamedTuple):
 
 
 def p3_init(cfg: ProtocolConfig, seed: int = 0) -> P3State:
+    """Initial P3 state (per-site PRNG keys are installed by the runner)."""
     cfg = cfg.resolved()
     return P3State(
         rng=jax.random.key(seed),
@@ -264,6 +283,7 @@ def p3_init(cfg: ProtocolConfig, seed: int = 0) -> P3State:
 
 
 def p3_step(cfg: ProtocolConfig, st: P3State, rows: jax.Array) -> P3State:
+    """One P3 super-step; call inside shard_map with ``rows`` = local (b, d)."""
     cfg = cfg.resolved()
     site = lax.axis_index(cfg.axis)
     key = jax.random.fold_in(st.rng, site)
@@ -340,6 +360,7 @@ def p3_matrix(st: P3State) -> jax.Array:
 
 
 class HHP1State(NamedTuple):
+    """HH P1 shard state: per-site MG summary + replicated coordinator MG/totals."""
     site_mg: hhlib.MGState  # per-shard
     w_i: jax.Array  # per-shard () f32 — weight since last ship
     coord_mg: hhlib.MGState  # replicated
@@ -349,6 +370,7 @@ class HHP1State(NamedTuple):
 
 
 def hh_p1_init(cfg: ProtocolConfig) -> HHP1State:
+    """Initial HH P1 state for one site (tiled per shard by the runner)."""
     cfg = cfg.resolved()
     return HHP1State(
         site_mg=hhlib.mg_init(cfg.k),
@@ -413,11 +435,108 @@ def hh_w_hat(st: HHP1State) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Distributed quantiles, protocol 1 — batched summary merge.
+#
+# The quantile twin of hh_p1_step: every shard (= site) maintains a fixed-
+# shape GK-style ``QuantState`` over its local (value, weight) stream;
+# when its cumulative weight has grown by a ``1 + eps/4`` factor since the
+# last ship (with an ``eps/(4m) * w_hat`` floor so early items batch up) it
+# ships the whole summary, and the coordinator folds shipped summaries in
+# with ``quant_merge`` — the all-pad summary is the merge identity, so a
+# non-sender's masked payload is exactly "nothing was shipped".  Message
+# units follow the paper: a shipped summary of ``r`` live tuples costs
+# ``r`` item messages plus one scalar, a ``w_hat`` rebroadcast costs m.
+# ---------------------------------------------------------------------------
+
+
+class QuantP1State(NamedTuple):
+    """Quantile P1 shard state: per-site summary + replicated coordinator summary."""
+    site_q: qlib.QuantState  # per-shard
+    w_i: jax.Array  # per-shard () f32 — cumulative site weight
+    w_pushed: jax.Array  # per-shard () f32 — cumulative weight at last ship
+    coord_q: qlib.QuantState  # replicated
+    w_hat: jax.Array  # replicated — broadcast estimate
+    comm: CommCounters
+
+
+def quant_p1_init(cfg: ProtocolConfig) -> QuantP1State:
+    """Initial quantile P1 state for one site (tiled per shard by the runner)."""
+    cfg = cfg.resolved()
+    return QuantP1State(
+        site_q=qlib.quant_init(cfg.q_cap),
+        w_i=jnp.zeros((), jnp.float32),
+        w_pushed=jnp.zeros((), jnp.float32),
+        coord_q=qlib.quant_init(cfg.q_cap),
+        w_hat=jnp.ones((), jnp.float32),
+        comm=CommCounters.zero(),
+    )
+
+
+def quant_p1_step(cfg: ProtocolConfig, st: QuantP1State, pairs) -> QuantP1State:
+    """One super-step; ``pairs`` = local ``(values f32 (b,), weights f32 (b,))``."""
+    cfg = cfg.resolved()
+    values, weights = pairs
+    site_q = qlib.quant_insert(st.site_q, values, weights, cfg.eps / 4.0)
+    w_i = st.w_i + jnp.sum(weights.astype(jnp.float32))
+    unpushed = w_i - st.w_pushed
+
+    send = (w_i >= (1.0 + cfg.eps / 4.0) * st.w_pushed) & (
+        unpushed >= (cfg.eps / (4.0 * cfg.m)) * st.w_hat
+    )
+    # Masked ship: a non-sender contributes the all-pad summary, which is
+    # the identity of quant_merge, so the gather-then-fold below is exactly
+    # "the coordinator merges what was shipped".
+    pay = qlib.QuantState(
+        values=jnp.where(send, site_q.values, jnp.inf),
+        g=jnp.where(send, site_q.g, 0.0),
+        delta=jnp.where(send, site_q.delta, 0.0),
+        wv=jnp.where(send, site_q.wv, 0.0),
+        weight=jnp.where(send, site_q.weight, 0.0),
+    )
+    gathered = jax.tree.map(lambda a: lax.all_gather(a, cfg.axis), pay)  # (m, ...)
+    coord = st.coord_q
+    for j in range(cfg.m):  # static unroll: m is the mesh axis size
+        coord = qlib.quant_merge(
+            coord, jax.tree.map(lambda a: a[j], gathered), cfg.eps / 2.0, cfg.q_cap
+        )
+
+    live = jnp.sum(jnp.isfinite(site_q.values).astype(jnp.int32))
+    shipped = lax.psum(jnp.where(send, live, 0), cfg.axis)
+    n_scalar = lax.psum(send.astype(jnp.int32), cfg.axis)
+
+    w_pushed = jnp.where(send, w_i, st.w_pushed)
+    # Reset shipped site summaries.
+    empty = qlib.quant_init(cfg.q_cap)
+    site_q = jax.tree.map(lambda a, b: jnp.where(send, b, a), site_q, empty)
+
+    rebroadcast = coord.weight / st.w_hat > 1.0 + cfg.eps / 2.0
+    w_hat = jnp.where(rebroadcast, coord.weight, st.w_hat)
+    comm = CommCounters(
+        scalar_msgs=st.comm.scalar_msgs + n_scalar,
+        row_msgs=st.comm.row_msgs + shipped.astype(jnp.int32),
+        broadcast_events=st.comm.broadcast_events + rebroadcast.astype(jnp.int32),
+    )
+    return QuantP1State(site_q, w_i, w_pushed, coord, w_hat, comm)
+
+
+def quant_p1_table(st: QuantP1State) -> "jax.Array":
+    """The coordinator's published ``(n, 2)`` [value, rank-estimate] table."""
+    return qlib.quant_table(st.coord_q)
+
+
+def quant_p1_w_hat(st: QuantP1State) -> float:
+    """Coordinator estimate of the total stream weight (quantile frob analog)."""
+    return float(st.coord_q.weight)
+
+
+# ---------------------------------------------------------------------------
 # Runner: wraps a protocol step in shard_map over a mesh axis.
 # ---------------------------------------------------------------------------
 
-_INITS = {"P1": p1_init, "P2": p2_init, "P3": p3_init, "HHP1": hh_p1_init}
-_STEPS = {"P1": p1_step, "P2": p2_step, "P3": p3_step, "HHP1": hh_p1_step}
+_INITS = {"P1": p1_init, "P2": p2_init, "P3": p3_init, "HHP1": hh_p1_init,
+          "QP1": quant_p1_init}
+_STEPS = {"P1": p1_step, "P2": p2_step, "P3": p3_step, "HHP1": hh_p1_step,
+          "QP1": quant_p1_step}
 _MATRICES = {
     "P1": lambda st: fdlib.fd_matrix(st.coord_fd),
     "P2": lambda st: fdlib.fd_matrix(st.coord_fd),
@@ -448,10 +567,11 @@ def make_protocol_runner(protocol: str, cfg: ProtocolConfig, mesh: jax.sharding.
     """Return ``(init_state, step)``: one jitted shard_map super-step.
 
     For the matrix protocols ``step(state, rows)`` consumes a global
-    ``(m * b, d)`` array sharded over ``cfg.axis``; for ``HHP1`` it consumes
-    a ``(keys, weights)`` pair of global ``(m * b,)`` arrays sharded the
-    same way.  ``state`` leaves that are per-site carry a leading ``m`` axis
-    sharded over ``cfg.axis``; replicated leaves are replicated.
+    ``(m * b, d)`` array sharded over ``cfg.axis``; for ``HHP1`` (element
+    keys) and ``QP1`` (quantile values) it consumes a ``(keys, weights)``
+    pair of global ``(m * b,)`` arrays sharded the same way.  ``state``
+    leaves that are per-site carry a leading ``m`` axis sharded over
+    ``cfg.axis``; replicated leaves are replicated.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
@@ -465,10 +585,14 @@ def make_protocol_runner(protocol: str, cfg: ProtocolConfig, mesh: jax.sharding.
         "P2": ("site_fd", "f_j"),
         "P3": ("rng",),
         "HHP1": ("site_mg", "w_i"),
+        "QP1": ("site_q", "w_i", "w_pushed"),
     }[protocol]
-    # HH streams arrive as a (keys, weights) pair of 1-D arrays; matrix
-    # streams as one (n, d) row block.
-    data_spec = (P(cfg.axis), P(cfg.axis)) if protocol == "HHP1" else P(cfg.axis, None)
+    # HH and quantile streams arrive as a (keys/values, weights) pair of
+    # 1-D arrays; matrix streams as one (n, d) row block.
+    if protocol in ("HHP1", "QP1"):
+        data_spec = (P(cfg.axis), P(cfg.axis))
+    else:
+        data_spec = P(cfg.axis, None)
 
     def _state_specs(state) -> object:
         specs = {}

@@ -60,10 +60,12 @@ class FDState(NamedTuple):
 
     @property
     def l(self) -> int:  # noqa: E743 - matches paper notation
+        """Sketch row budget ``l`` (paper notation)."""
         return self.buf.shape[0] // 2
 
     @property
     def d(self) -> int:
+        """Row dimensionality ``d``."""
         return self.buf.shape[1]
 
 
@@ -209,6 +211,7 @@ class FDSketch:
         self.n_seen = 0
 
     def append(self, row: np.ndarray) -> None:
+        """Absorb one stream row (shrinks when the buffer fills)."""
         if self.fill == self.buf.shape[0]:
             self._shrink()
         self.buf[self.fill] = row
@@ -218,6 +221,7 @@ class FDSketch:
 
     def extend(self, rows: np.ndarray) -> None:
         # Vectorized fast path: fill in slabs, shrink when full.
+        """Absorb an (n, d) batch of rows."""
         i = 0
         n = rows.shape[0]
         self.frob += float(np.sum(rows * rows))
@@ -247,10 +251,12 @@ class FDSketch:
         return self.buf[: self.fill]
 
     def query(self, x: np.ndarray) -> float:
+        """``||B x||^2`` — the sketch's estimate of ``||A x||^2``."""
         v = self.buf[: self.fill] @ x
         return float(v @ v)
 
     def merge(self, other: "FDSketch") -> None:
+        """Fold another FD sketch in (mergeable-summaries merge)."""
         self.extend(other.matrix())
         # extend() already added other's frob/n via rows; but rows of a sketch
         # under-count the true stream mass — correct with other's bookkeeping.

@@ -43,6 +43,7 @@ EMPTY = jnp.int32(-1)
 
 
 class MGState(NamedTuple):
+    """Weighted Misra--Gries summary as fixed-shape jit-able arrays."""
     keys: jax.Array  # (k,) int32, -1 = empty
     counts: jax.Array  # (k,) f32
     weight: jax.Array  # () f32 — total weight consumed
@@ -50,6 +51,7 @@ class MGState(NamedTuple):
 
 
 def mg_init(k: int) -> MGState:
+    """The empty k-counter MG summary (the ``mg_merge`` identity)."""
     return MGState(
         keys=jnp.full((k,), EMPTY, jnp.int32),
         counts=jnp.zeros((k,), jnp.float32),
@@ -94,6 +96,7 @@ def mg_update(state: MGState, key: jax.Array, w: jax.Array) -> MGState:
 
 
 def mg_update_stream(state: MGState, keys: jax.Array, weights: jax.Array) -> MGState:
+    """Scan ``mg_update`` over a (keys, weights) batch."""
     def body(st, kw):
         return mg_update(st, kw[0], kw[1]), None
 
@@ -102,6 +105,7 @@ def mg_update_stream(state: MGState, keys: jax.Array, weights: jax.Array) -> MGS
 
 
 def mg_estimate(state: MGState, key: jax.Array) -> jax.Array:
+    """Estimated weight of ``key`` (0 when untracked; underestimates)."""
     hit = state.keys == key.astype(jnp.int32)
     return jnp.sum(jnp.where(hit, state.counts, 0.0))
 
@@ -157,6 +161,7 @@ class MGSketch:
         self.shrink = 0.0
 
     def update(self, key: int, w: float) -> None:
+        """Absorb one (element, weight) pair."""
         self.weight += w
         c = self.counters
         if key in c:
@@ -178,13 +183,16 @@ class MGSketch:
             c[key] = w - delta
 
     def extend(self, keys, weights) -> None:
+        """Absorb a batch of (element, weight) pairs."""
         for key, w in zip(keys, weights):
             self.update(int(key), float(w))
 
     def estimate(self, key: int) -> float:
+        """Estimated weight of ``key`` (0 when untracked; underestimates)."""
         return self.counters.get(key, 0.0)
 
     def merge(self, other: "MGSketch") -> None:
+        """Fold another MG sketch in (mergeable-summaries merge)."""
         for e, w in other.counters.items():
             self.counters[e] = self.counters.get(e, 0.0) + w
         self.weight += other.weight
@@ -198,6 +206,7 @@ class MGSketch:
             }
 
     def items(self):
+        """The live ``{element: count}`` counters (a copy)."""
         return dict(self.counters)
 
     def state_dict(self) -> dict:
@@ -228,6 +237,7 @@ class SpaceSaving:
         self.weight = 0.0
 
     def update(self, key: int, w: float) -> None:
+        """Absorb one (element, weight) pair."""
         self.weight += w
         c = self.counters
         if key in c:
@@ -240,9 +250,11 @@ class SpaceSaving:
             c[key] = v_min + w
 
     def estimate(self, key: int) -> float:
+        """Estimated weight of ``key`` (0 when untracked; overestimates)."""
         return self.counters.get(key, 0.0)
 
     def items(self):
+        """The live ``{element: count}`` counters (a copy)."""
         return dict(self.counters)
 
     def state_dict(self) -> dict:

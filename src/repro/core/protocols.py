@@ -66,6 +66,7 @@ class CommLog:
     broadcast_events: int = 0  # coordinator -> all sites (each costs m)
 
     def total(self, m: int) -> int:
+        """Total message cost in the paper's units (broadcasts cost m each)."""
         return (
             self.scalar_msgs
             + self.item_msgs
@@ -85,6 +86,7 @@ class CommLog:
 
 @dataclass
 class HHResult:
+    """Coordinator HH answer: estimate map, total weight, message costs."""
     estimates: dict[int, float]
     w_hat: float
     comm: CommLog
@@ -100,6 +102,7 @@ class HHResult:
 
 @dataclass
 class MatrixResult:
+    """Coordinator matrix answer: sketch B, mass estimate, message costs."""
     b: np.ndarray  # the coordinator's sketch matrix
     f_hat: float
     comm: CommLog
@@ -155,6 +158,8 @@ class HHP1Stream:
         self.w_hat = 1.0
 
     def step(self, keys, weights, sites) -> None:
+        """Absorb a batch, continuing the event-at-a-time semantics exactly where the last
+        batch left off."""
         m, eps = self.m, self.eps
         for e, w, j in zip(keys.tolist(), weights.tolist(), sites.tolist()):
             mg = self.site_mg[j]
@@ -172,9 +177,11 @@ class HHP1Stream:
                     self.comm.broadcast_events += 1
 
     def result(self) -> HHResult:
+        """The coordinator's current answer (callable at any time)."""
         return HHResult(self.coord.items(), self.w_hat, self.comm, self.m, self.eps)
 
     def state_dict(self) -> dict:
+        """JSON-able snapshot of the full coordinator + site state."""
         return {
             "k": self.k,
             "site_mg": [mg.state_dict() for mg in self.site_mg],
@@ -186,6 +193,7 @@ class HHP1Stream:
         }
 
     def load_state(self, state: dict) -> None:
+        """Restore ``state_dict`` output bit-identically."""
         self.k = int(state["k"])
         self.site_mg = [MGSketch.from_state(s) for s in state["site_mg"]]
         self.site_w = [float(w) for w in state["site_w"]]
@@ -215,6 +223,8 @@ class HHP2Stream:
         self.thresh = (eps / m) * self.w_hat
 
     def step(self, keys, weights, sites) -> None:
+        """Absorb a batch, continuing the event-at-a-time semantics exactly where the last
+        batch left off."""
         m, eps = self.m, self.eps
         for e, w, j in zip(keys.tolist(), weights.tolist(), sites.tolist()):
             self.site_w[j] += w
@@ -236,9 +246,11 @@ class HHP2Stream:
                 d[e] = 0.0
 
     def result(self) -> HHResult:
+        """The coordinator's current answer (callable at any time)."""
         return HHResult(dict(self.est), self.w_hat, self.comm, self.m, self.eps)
 
     def state_dict(self) -> dict:
+        """JSON-able snapshot of the full coordinator + site state."""
         return {
             "site_w": list(self.site_w),
             # Flushed deltas are set to 0.0, not deleted; absent and zero are
@@ -255,6 +267,7 @@ class HHP2Stream:
         }
 
     def load_state(self, state: dict) -> None:
+        """Restore ``state_dict`` output bit-identically."""
         self.site_w = [float(w) for w in state["site_w"]]
         self.site_delta = [
             {int(e): float(w) for e, w in d.items()} for d in state["site_delta"]
@@ -286,6 +299,8 @@ class HHP3Stream:
         self.q_next: list[tuple[int, float, float]] = []
 
     def step(self, keys, weights, sites) -> None:
+        """Absorb a batch, continuing the event-at-a-time semantics exactly where the last
+        batch left off."""
         n = len(keys)
         rho_all = weights / np.maximum(self.rng.uniform(size=n), 1e-300)
         for e, w, rho in zip(keys.tolist(), weights.tolist(), rho_all.tolist()):
@@ -303,6 +318,7 @@ class HHP3Stream:
                     self.q_cur = [t for t in self.q_cur if t[2] < 2.0 * self.tau]
 
     def result(self) -> HHResult:
+        """The coordinator's current answer (callable at any time)."""
         sample = self.q_cur + self.q_next
         est: dict[int, float] = {}
         if not sample:
@@ -318,6 +334,7 @@ class HHP3Stream:
         return HHResult(est, w_hat, self.comm, self.m, self.eps)
 
     def state_dict(self) -> dict:
+        """JSON-able snapshot of the full coordinator + site state."""
         return {
             "s": self.s,
             "tau": self.tau,
@@ -328,6 +345,7 @@ class HHP3Stream:
         }
 
     def load_state(self, state: dict) -> None:
+        """Restore ``state_dict`` output bit-identically."""
         self.s = int(state["s"])
         self.tau = float(state["tau"])
         self.q_cur = [(int(e), float(w), float(r)) for e, w, r in state["q_cur"]]
@@ -362,6 +380,8 @@ class HHP3wrStream:
         self.top1_elem = np.full(s, -1, np.int64)
 
     def step(self, keys, weights, sites) -> None:
+        """Absorb a batch, continuing the event-at-a-time semantics exactly where the last
+        batch left off."""
         s = self.s
         n = len(keys)
         block = max(1, min(n, 1 << 22) // max(s, 1) or 1)
@@ -392,6 +412,7 @@ class HHP3wrStream:
             i = hi
 
     def result(self) -> HHResult:
+        """The coordinator's current answer (callable at any time)."""
         w_hat = float(np.mean(self.top2_rho))
         est: dict[int, float] = {}
         for t in range(self.s):
@@ -401,6 +422,7 @@ class HHP3wrStream:
         return HHResult(est, w_hat, self.comm, self.m, self.eps)
 
     def state_dict(self) -> dict:
+        """JSON-able snapshot of the full coordinator + site state."""
         return {
             "s": self.s,
             "tau": self.tau,
@@ -412,6 +434,7 @@ class HHP3wrStream:
         }
 
     def load_state(self, state: dict) -> None:
+        """Restore ``state_dict`` output bit-identically."""
         self.s = int(state["s"])
         self.tau = float(state["tau"])
         self.top1_rho = np.array(state["top1_rho"], np.float64)
@@ -443,6 +466,8 @@ class HHP4Stream:
         self.recv: dict[tuple[int, int], float] = {}
 
     def step(self, keys, weights, sites) -> None:
+        """Absorb a batch, continuing the event-at-a-time semantics exactly where the last
+        batch left off."""
         m, eps = self.m, self.eps
         u_all = self.rng.uniform(size=len(keys))
         for idx, (e, w, j) in enumerate(zip(keys.tolist(), weights.tolist(), sites.tolist())):
@@ -465,12 +490,14 @@ class HHP4Stream:
                 self.recv[(e, j)] = f[e]
 
     def result(self) -> HHResult:
+        """The coordinator's current answer (callable at any time)."""
         est: dict[int, float] = {}
         for (e, _j), v in self.recv.items():
             est[e] = est.get(e, 0.0) + v + 1.0 / self.p
         return HHResult(est, self.w_c, self.comm, self.m, self.eps)
 
     def state_dict(self) -> dict:
+        """JSON-able snapshot of the full coordinator + site state."""
         return {
             "w_hat": self.w_hat,
             "w_c": self.w_c,
@@ -483,6 +510,7 @@ class HHP4Stream:
         }
 
     def load_state(self, state: dict) -> None:
+        """Restore ``state_dict`` output bit-identically."""
         self.w_hat = float(state["w_hat"])
         self.w_c = float(state["w_c"])
         self.p = float(state["p"])
@@ -529,6 +557,7 @@ def run_hh_protocol(
     seed: int = 0,
     **kw,
 ) -> HHResult:
+    """One-shot wrapper: stream the whole feed through HH protocol ``name``."""
     rng = np.random.default_rng(seed)
     return HH_PROTOCOLS[name](keys, weights, sites, m, eps, rng, **kw)
 
@@ -562,6 +591,8 @@ class MP1Stream:
         self.f_hat = 1.0
 
     def step(self, rows, sites) -> None:
+        """Absorb a batch, continuing the event-at-a-time semantics exactly where the last
+        batch left off."""
         m, eps = self.m, self.eps
         row_sq = np.einsum("nd,nd->n", rows, rows)
         for i, j in enumerate(sites.tolist()):
@@ -582,6 +613,7 @@ class MP1Stream:
                     self.comm.broadcast_events += 1
 
     def result(self) -> MatrixResult:
+        """The coordinator's current answer (callable at any time)."""
         return MatrixResult(self.coord.matrix(), self.f_hat, self.comm, self.m, self.eps)
 
 
@@ -610,10 +642,12 @@ class _MP2Site:
 
     def append(self, row: np.ndarray) -> None:
         # Copy: pending rows outlive the caller's batch buffer (stream use).
+        """Buffer one row (Frobenius mass tracked for the lazy-SVD bound)."""
         self.pending.append(np.array(row, dtype=np.float64))
         self.pending_sq += float(row @ row)
 
     def maybe_send(self, thresh: float) -> list[np.ndarray]:
+        """Ship every direction whose sigma^2 crosses ``thresh`` (lazy SVD)."""
         if self.sig1_sq + self.pending_sq < thresh:
             return []
         if self.pending:
@@ -648,6 +682,8 @@ class MP2Stream:
         self.coord_rows: list[np.ndarray] = []
 
     def step(self, rows, sites) -> None:
+        """Absorb a batch, continuing the event-at-a-time semantics exactly where the last
+        batch left off."""
         m, eps = self.m, self.eps
         row_sq = np.einsum("nd,nd->n", rows, rows)
         for i, j in enumerate(sites.tolist()):
@@ -669,6 +705,7 @@ class MP2Stream:
                 self.coord_rows.extend(sent)
 
     def result(self) -> MatrixResult:
+        """The coordinator's current answer (callable at any time)."""
         b = np.stack(self.coord_rows) if self.coord_rows else np.zeros((0, self.d))
         return MatrixResult(b, self.f_hat, self.comm, self.m, self.eps)
 
@@ -693,6 +730,8 @@ class MP3Stream:
         self.q_next: list[tuple[np.ndarray, float, float]] = []
 
     def step(self, rows, sites) -> None:
+        """Absorb a batch, continuing the event-at-a-time semantics exactly where the last
+        batch left off."""
         w_all = np.einsum("nd,nd->n", rows, rows)
         rho_all = w_all / np.maximum(self.rng.uniform(size=rows.shape[0]), 1e-300)
         for i, (w, rho) in enumerate(zip(w_all.tolist(), rho_all.tolist())):
@@ -711,6 +750,7 @@ class MP3Stream:
                     self.q_cur = [t for t in self.q_cur if t[2] < 2.0 * self.tau]
 
     def result(self) -> MatrixResult:
+        """The coordinator's current answer (callable at any time)."""
         sample = self.q_cur + self.q_next
         if not sample:
             return MatrixResult(np.zeros((0, self.d)), 0.0, self.comm, self.m, self.eps)
@@ -754,6 +794,8 @@ class MP3wrStream:
         self.top1_w = np.zeros(s)
 
     def step(self, rows, sites) -> None:
+        """Absorb a batch, continuing the event-at-a-time semantics exactly where the last
+        batch left off."""
         s = self.s
         w_all = np.einsum("nd,nd->n", rows, rows)
         n = rows.shape[0]
@@ -784,6 +826,7 @@ class MP3wrStream:
             i = hi
 
     def result(self) -> MatrixResult:
+        """The coordinator's current answer (callable at any time)."""
         w_hat = float(np.mean(self.top2_rho))
         out = []
         for t in range(self.s):
@@ -875,5 +918,6 @@ def run_matrix_protocol(
     seed: int = 0,
     **kw,
 ) -> MatrixResult:
+    """One-shot wrapper: stream the whole feed through matrix protocol ``name``."""
     rng = np.random.default_rng(seed)
     return MATRIX_PROTOCOLS[name](rows, sites, m, eps, rng, **kw)

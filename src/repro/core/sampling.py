@@ -32,6 +32,7 @@ def priorities(weights: jax.Array, key: jax.Array) -> jax.Array:
 
 
 class PrioritySample(NamedTuple):
+    """A size-s priority sample: kept indices, adjusted weights, threshold tau."""
     indices: jax.Array  # (s,) indices into the source array
     weights: jax.Array  # (s,) adjusted weights bar{w}
     tau: jax.Array  # () the (s+1)-th priority (estimator threshold)
@@ -72,6 +73,7 @@ class PrioritySampler:
         self._rhos: list[float] = []
 
     def update(self, item, w: float) -> None:
+        """Offer one (item, weight) pair to the sampler."""
         rho = w / max(self.rng.uniform(), 1e-300)
         self._items.append(item)
         self._weights.append(w)
@@ -86,6 +88,7 @@ class PrioritySampler:
         self._rhos = [self._rhos[i] for i in order]
 
     def sample(self):
+        """The current sample as ``(items, adjusted subset-sum weights)``."""
         self._compact()
         if len(self._items) <= self.s:
             return list(self._items), np.asarray(self._weights, np.float64)

@@ -32,6 +32,7 @@ __all__ = ["DistributedMatrixTracker", "TrackerSnapshot"]
 
 
 class TrackerSnapshot(NamedTuple):
+    """Point-in-time tracker view: top-k spectrum, mass, and message costs."""
     basis: np.ndarray  # (k, d) top right-singular directions
     singular_values: np.ndarray  # (k,)
     frob_estimate: float
@@ -65,10 +66,12 @@ class DistributedMatrixTracker:
 
     @property
     def state(self):
+        """The underlying protocol's live jit state."""
         return self._proto.state
 
     @property
     def rows_fed(self) -> int:
+        """Stream rows absorbed so far."""
         return self._proto.rows_seen
 
     def update(self, rows: jax.Array) -> None:
@@ -76,6 +79,7 @@ class DistributedMatrixTracker:
         self._proto.step(rows)
 
     def sketch_matrix(self) -> np.ndarray:
+        """The coordinator's current sketch matrix B (host numpy)."""
         return self._proto.matrix()
 
     def frob_estimate(self) -> float:
@@ -125,6 +129,7 @@ class DistributedMatrixTracker:
         self._proto.restore_payload(arrays, meta)
 
     def snapshot(self, k: int = 8) -> TrackerSnapshot:
+        """Materialize a point-in-time view: top-k spectrum + stable rank + comm."""
         b = self.sketch_matrix()
         u, s, vt = np.linalg.svd(b, full_matrices=False)
         k = min(k, s.shape[0])

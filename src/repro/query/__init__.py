@@ -23,6 +23,8 @@ from repro.query.service import (
     QueryService,
     QueryShedError,
     QueryTicket,
+    ServicePump,
+    ServicePumpError,
     ServiceStats,
 )
 from repro.query.store import SketchSnapshot, SketchStore
@@ -36,6 +38,8 @@ __all__ = [
     "QueryService",
     "QueryShedError",
     "QueryTicket",
+    "ServicePump",
+    "ServicePumpError",
     "ServiceStats",
     "SketchSnapshot",
     "SketchStore",

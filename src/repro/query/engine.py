@@ -22,8 +22,12 @@ estimates (an ``(n, 2)`` [element, estimate] matrix, see
 ``core.hh.encode_hh_snapshot``) instead of a row sketch; queries against
 them are frequency point-lookups — each "direction" is a single element id
 — answered with the same ``QueryResult`` shape and the paper's
-``eps W`` additive bound, so mixed matrix + HH tenants share one admission
-path and one packed dispatch loop.
+``eps W`` additive bound.  ``meta["workload"] == "quantile"`` snapshots
+hold a sorted ``(n, 2)`` [value, rank-estimate] table
+(``core.quantiles.encode_quantile_snapshot``); each query is a ``(2,)``
+``[mode, arg]`` row — rank-at-value or phi-quantile — answered by one
+searchsorted pass.  All three kinds share one admission path and one
+packed dispatch loop.
 """
 from __future__ import annotations
 
@@ -152,13 +156,14 @@ class QueryEngine:
             raise ValueError(f"unknown query path {path!r}; choose from {PATHS}")
         snap = self.store.get(tenant, version)
         x = np.asarray(x, np.float32)
-        if _workload(snap) == "hh":
+        wl = _workload(snap)
+        if wl in _LOOKUPS:
             return QueryResult(
-                estimates=self._hh_batch(snap, x),
+                estimates=_LOOKUPS[wl](self, snap, x),
                 error_bound=snap.error_bound,
                 tenant=snap.tenant,
                 version=snap.version,
-                path="hh",
+                path=wl,
             )
         if x.ndim != 2 or x.shape[1] != snap.matrix.shape[1]:
             raise ValueError(
@@ -189,21 +194,21 @@ class QueryEngine:
         stacked — sketches into (T, l, d), directions zero-padded to a
         common N into (T, N, d) — and served by ONE ``quadform_packed``
         Pallas launch.  Shapes that appear only once fall back to the
-        per-tenant kernel; HH requests are served by the point-lookup path
-        (no kernel launch) in the same call.  Results come back in request
-        order, one ``QueryResult`` each, identical (to fp tolerance) to
-        serial per-tenant ``query_batch``.
+        per-tenant kernel; HH and quantile requests are served by their
+        searchsorted lookup paths (no kernel launch) in the same call.
+        Results come back in request order, one ``QueryResult`` each,
+        identical (to fp tolerance) to serial per-tenant ``query_batch``.
         """
         from repro.kernels.ops import quadform_packed
 
         snaps: list[SketchSnapshot] = []
         xs: list[np.ndarray] = []
-        hh_idxs: list[int] = []
+        lookups: dict[int, str] = {}  # request index -> lookup workload
         for i, req in enumerate(requests):
             snap = self.store.get(req.tenant, req.version)
             x = np.asarray(req.x, np.float32)
-            if _workload(snap) == "hh":
-                hh_idxs.append(i)
+            if _workload(snap) in _LOOKUPS:
+                lookups[i] = _workload(snap)
             elif x.ndim != 2 or x.shape[1] != snap.matrix.shape[1]:
                 raise ValueError(
                     f"tenant {req.tenant!r}: directions must be "
@@ -212,14 +217,13 @@ class QueryEngine:
             snaps.append(snap)
             xs.append(x)
 
-        hh = set(hh_idxs)
         estimates: list[np.ndarray | None] = [None] * len(requests)
         by_shape: dict[tuple[int, int], list[int]] = {}
         for i, snap in enumerate(snaps):
-            if i not in hh:
+            if i not in lookups:
                 by_shape.setdefault(snap.matrix.shape, []).append(i)
-        for i in hh_idxs:
-            estimates[i] = self._hh_batch(snaps[i], xs[i])
+        for i, wl in lookups.items():
+            estimates[i] = _LOOKUPS[wl](self, snaps[i], xs[i])
 
         for shape, idxs in by_shape.items():
             self.packed_launches += 1
@@ -243,7 +247,7 @@ class QueryEngine:
                 error_bound=snap.error_bound,
                 tenant=snap.tenant,
                 version=snap.version,
-                path="hh" if i in hh else "pallas",
+                path=lookups.get(i, "pallas"),
             )
             for i, (est, snap) in enumerate(zip(estimates, snaps))
         ]
@@ -277,6 +281,42 @@ class QueryEngine:
         idx = np.clip(np.searchsorted(keys, q), 0, keys.shape[0] - 1)
         return np.where(keys[idx] == q, counts[idx], 0.0).astype(np.float32)
 
+    def _quantile_batch(self, snap: SketchSnapshot, x: np.ndarray) -> np.ndarray:
+        """Quantile lookups: each query row is ``(2,)`` ``[mode, arg]``.
+
+        Mode ``QUERY_RANK`` (0) estimates the weighted rank of value
+        ``arg``; mode ``QUERY_QUANTILE`` (1) returns the value whose rank
+        is nearest ``arg * W`` — both one searchsorted pass over the
+        published table, the same code path the live protocols answer
+        from (``core.quantiles.table_rank`` / ``table_quantile``).
+        """
+        from repro.core.quantiles import (
+            QUERY_QUANTILE,
+            QUERY_RANK,
+            table_quantile,
+            table_rank,
+        )
+
+        q = np.asarray(x, np.float32)
+        if q.ndim != 2 or q.shape[1] != 2:
+            raise ValueError(
+                f"tenant {snap.tenant!r}: quantile queries must be (n, 2) "
+                f"[mode, arg] rows, got {np.asarray(x).shape}"
+            )
+        modes, args = q[:, 0], q[:, 1]
+        is_rank = modes == QUERY_RANK
+        is_quant = modes == QUERY_QUANTILE
+        if not np.all(is_rank | is_quant):
+            raise ValueError(
+                f"tenant {snap.tenant!r}: quantile query mode must be "
+                f"{QUERY_RANK} (rank) or {QUERY_QUANTILE} (phi-quantile)"
+            )
+        mat = np.asarray(snap.matrix)
+        out = np.empty(q.shape[0], np.float32)
+        out[is_rank] = table_rank(mat, args[is_rank])
+        out[is_quant] = table_quantile(mat, snap.frob, args[is_quant])
+        return out
+
     def _cached_batch(self, snap: SketchSnapshot, x: np.ndarray) -> np.ndarray:
         spec = self._spectrum_for(snap)
         proj = (x @ spec.vt.T) * spec.s[None, :]
@@ -306,3 +346,12 @@ class QueryEngine:
         if spec.s.size == 0:
             return 0.0
         return float(np.sum(spec.s**2) / max(float(spec.s[0] ** 2), 1e-30))
+
+
+# Lookup workloads: snapshot kinds served by a searchsorted pass instead of
+# a quadform kernel launch.  One dispatch point for query_batch and
+# query_packed, so adding a kind cannot desynchronize the two paths.
+_LOOKUPS = {
+    "hh": QueryEngine._hh_batch,
+    "quantile": QueryEngine._quantile_batch,
+}

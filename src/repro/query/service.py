@@ -19,9 +19,16 @@ with shed-and-report via ``QueryShedError``, priority-ordered dispatch
 under overload).  ``stats()`` on either service reports served queries,
 batches/flushes, padding overhead, shed counts, and the measured
 queries/sec of the engine-facing hot path.
+
+``ServicePump`` is the real deadline executor: a small background thread
+driving ``PackedQueryService.poll()`` so per-entry deadlines hold even
+when nothing else touches the service — no cooperative pumping from an
+ingest loop required.  ``PackedQueryService`` is thread-safe (one RLock
+around queue state), so submits and pump sweeps may interleave freely.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Callable, NamedTuple
 
@@ -35,6 +42,8 @@ __all__ = [
     "QueryService",
     "QueryShedError",
     "QueryTicket",
+    "ServicePump",
+    "ServicePumpError",
     "ServiceStats",
 ]
 
@@ -225,7 +234,10 @@ class PackedQueryService:
     the service counts it, nothing is silently dropped).
 
     ``clock`` is injectable so deadline behaviour is testable without
-    sleeping.
+    sleeping.  All public methods are thread-safe (one RLock around queue
+    state), so a ``ServicePump`` thread can drive ``poll()`` while the
+    ingest thread keeps submitting; a sweep holds the lock for its engine
+    round-trip, briefly blocking concurrent submits.
     """
 
     def __init__(
@@ -246,6 +258,7 @@ class PackedQueryService:
         self.default_deadline_s = default_deadline_s
         self.auto_flush = auto_flush
         self.clock = clock
+        self._lock = threading.RLock()
         # tenant -> [(x, ticket, abs_deadline), ...] in FIFO order.
         self._pending: dict[str, list[tuple[np.ndarray, QueryTicket, float]]] = {}
         self._n_pending = 0
@@ -273,15 +286,18 @@ class PackedQueryService:
         """
         if max_pending < 0:
             raise ValueError(f"max_pending must be >= 0, got {max_pending}")
-        self._quotas[tenant] = (int(max_pending), int(priority))
+        with self._lock:
+            self._quotas[tenant] = (int(max_pending), int(priority))
 
     def quota(self, tenant: str) -> tuple[int, int]:
         """The tenant's ``(max_pending, priority)`` (defaults ``(0, 0)``)."""
-        return self._quotas.get(tenant, (0, 0))
+        with self._lock:
+            return self._quotas.get(tenant, (0, 0))
 
     def shed_counts(self) -> dict[str, int]:
         """Per-tenant count of submits rejected by the quota."""
-        return dict(self._shed_by_tenant)
+        with self._lock:
+            return dict(self._shed_by_tenant)
 
     # -- submission ----------------------------------------------------------
 
@@ -300,28 +316,30 @@ class PackedQueryService:
         x = np.asarray(x, np.float32)
         if x.ndim != 1:
             raise ValueError(f"submit takes a single (d,) direction, got shape {x.shape}")
-        max_pending, _ = self._quotas.get(tenant, (0, 0))
-        depth = len(self._pending.get(tenant, ()))
-        if max_pending and depth >= max_pending:
-            self._shed += 1
-            self._shed_by_tenant[tenant] = self._shed_by_tenant.get(tenant, 0) + 1
-            raise QueryShedError(tenant, depth, max_pending)
-        ticket = QueryTicket(self)
-        if deadline_s is None:
-            deadline_s = self.default_deadline_s
-        deadline = self.clock() + deadline_s
-        self._pending.setdefault(tenant, []).append((x, ticket, deadline))
-        self._n_pending += 1
-        self._earliest_deadline = min(self._earliest_deadline, deadline)
-        if self.auto_flush and self._n_pending >= self.max_batch:
-            self.flush()
-        return ticket
+        with self._lock:
+            max_pending, _ = self._quotas.get(tenant, (0, 0))
+            depth = len(self._pending.get(tenant, ()))
+            if max_pending and depth >= max_pending:
+                self._shed += 1
+                self._shed_by_tenant[tenant] = self._shed_by_tenant.get(tenant, 0) + 1
+                raise QueryShedError(tenant, depth, max_pending)
+            ticket = QueryTicket(self)
+            if deadline_s is None:
+                deadline_s = self.default_deadline_s
+            deadline = self.clock() + deadline_s
+            self._pending.setdefault(tenant, []).append((x, ticket, deadline))
+            self._n_pending += 1
+            self._earliest_deadline = min(self._earliest_deadline, deadline)
+            if self.auto_flush and self._n_pending >= self.max_batch:
+                self.flush()
+            return ticket
 
     def pending(self, tenant: str | None = None) -> int:
         """Queued-but-unserved query count (for one tenant, or in total)."""
-        if tenant is not None:
-            return len(self._pending.get(tenant, ()))
-        return self._n_pending
+        with self._lock:
+            if tenant is not None:
+                return len(self._pending.get(tenant, ()))
+            return self._n_pending
 
     # -- dispatch ------------------------------------------------------------
 
@@ -329,20 +347,23 @@ class PackedQueryService:
         """Deadline pump: one priority-ordered sweep iff a deadline passed.
 
         Bounded work per call (at most ``max_batch`` queries served), so an
-        ingest loop can pump it every step; if expired queries remain after
-        the sweep the next ``poll`` fires again.
+        ingest loop — or a ``ServicePump`` thread — can pump it freely; if
+        expired queries remain after the sweep the next ``poll`` fires
+        again.
         """
-        if self._n_pending and self.clock() >= self._earliest_deadline:
-            self._deadline_flushes += 1
-            return self._sweep()
-        return 0
+        with self._lock:
+            if self._n_pending and self.clock() >= self._earliest_deadline:
+                self._deadline_flushes += 1
+                return self._sweep()
+            return 0
 
     def flush(self) -> int:
         """Drain everything pending in capped priority-ordered sweeps."""
-        served = 0
-        while self._n_pending:
-            served += self._sweep()
-        return served
+        with self._lock:
+            served = 0
+            while self._n_pending:
+                served += self._sweep()
+            return served
 
     def _sweep(self) -> int:
         """One engine round-trip: up to ``max_batch`` queries, priority order."""
@@ -393,14 +414,124 @@ class PackedQueryService:
 
     def stats(self) -> PackedServiceStats:
         """Lifetime service counters (see ``PackedServiceStats``)."""
-        qps = self._queries / self._busy_s if self._busy_s > 0 else 0.0
-        return PackedServiceStats(
-            queries=self._queries,
-            flushes=self._flushes,
-            packed_tenants=self._packed_tenants,
-            padded=self._padded,
-            deadline_flushes=self._deadline_flushes,
-            busy_s=self._busy_s,
-            queries_per_sec=qps,
-            shed=self._shed,
+        with self._lock:
+            qps = self._queries / self._busy_s if self._busy_s > 0 else 0.0
+            return PackedServiceStats(
+                queries=self._queries,
+                flushes=self._flushes,
+                packed_tenants=self._packed_tenants,
+                padded=self._padded,
+                deadline_flushes=self._deadline_flushes,
+                busy_s=self._busy_s,
+                queries_per_sec=qps,
+                shed=self._shed,
+            )
+
+
+# ---------------------------------------------------------------------------
+# Background deadline executor
+# ---------------------------------------------------------------------------
+
+
+class ServicePumpError(RuntimeError):
+    """The pump thread died on an exception raised by ``poll()``.
+
+    Raised by ``ServicePump.stop()`` (and ``start()`` on restart) so a
+    crashed pump can never fail silently; the original exception rides
+    ``__cause__``.
+    """
+
+
+class ServicePump:
+    """Background thread driving ``PackedQueryService.poll()``.
+
+    The deadline pump as a real executor: per-entry deadlines hold even
+    when the ingest loop is idle or gone — no cooperative ``poll()`` calls
+    required.  The thread wakes every ``interval_s`` seconds, fires one
+    bounded deadline sweep, and exits cleanly on ``stop()``.
+
+    Exception safety: an exception escaping ``poll()`` stops the loop and
+    is *recorded*, never swallowed — ``error`` exposes it immediately and
+    the next ``stop()`` (or restart attempt) raises ``ServicePumpError``
+    from it.  The thread is a daemon, so a crashed or forgotten pump never
+    blocks interpreter shutdown.
+    """
+
+    def __init__(self, service: PackedQueryService, *, interval_s: float = 0.001,
+                 name: str = "service-pump"):
+        if interval_s <= 0:
+            raise ValueError(f"interval_s must be > 0, got {interval_s}")
+        self.service = service
+        self.interval_s = interval_s
+        self.name = name
+        self._thread: threading.Thread | None = None
+        self._stop: threading.Event | None = None
+        self._error: BaseException | None = None
+        self.polls = 0  # completed poll() calls
+        self.served = 0  # queries resolved by deadline sweeps
+
+    def _run(self, stop: threading.Event) -> None:
+        # ``stop`` is captured per thread: a later start() gets a fresh
+        # event, so it can never accidentally un-stop an older thread.
+        while not stop.wait(self.interval_s):
+            try:
+                self.served += self.service.poll()
+                self.polls += 1
+            except BaseException as exc:  # noqa: B036 — recorded, re-raised on stop
+                self._error = exc
+                return
+
+    def start(self) -> "ServicePump":
+        """Start the pump thread (idempotent while running)."""
+        if self._error is not None:
+            self._raise_error()
+        if self.running:
+            return self
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, args=(self._stop,), name=self.name, daemon=True
         )
+        self._thread.start()
+        return self
+
+    def stop(self, *, timeout: float = 5.0) -> None:
+        """Stop the thread and re-raise any exception the pump captured.
+
+        Raises ``ServicePumpError`` if the thread is still alive after
+        ``timeout`` (the pump keeps its reference, so a later ``stop``
+        can retry — it is never orphaned).
+        """
+        thread = self._thread
+        if thread is not None:
+            self._stop.set()
+            thread.join(timeout)
+            if thread.is_alive():
+                raise ServicePumpError(
+                    f"pump {self.name!r} did not stop within {timeout}s "
+                    "(a poll() sweep is still running); call stop() again"
+                )
+            self._thread = None
+        if self._error is not None:
+            self._raise_error()
+
+    def _raise_error(self) -> None:
+        error, self._error = self._error, None
+        raise ServicePumpError(
+            f"pump {self.name!r} died driving poll(): {error!r}"
+        ) from error
+
+    @property
+    def running(self) -> bool:
+        """Whether the pump thread is alive."""
+        return self._thread is not None and self._thread.is_alive()
+
+    @property
+    def error(self) -> BaseException | None:
+        """The exception that killed the pump loop, if any (not yet raised)."""
+        return self._error
+
+    def __enter__(self) -> "ServicePump":
+        return self.start()
+
+    def __exit__(self, *exc_info) -> None:
+        self.stop()

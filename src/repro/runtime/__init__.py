@@ -28,6 +28,7 @@ from repro.runtime.policies import (
 from repro.runtime.registry import (
     HHProtocol,
     ProtocolSpec,
+    QuantileProtocol,
     SketchProtocol,
     create_protocol,
     get_spec,
@@ -43,6 +44,7 @@ __all__ = [
     "OnDemand",
     "ProtocolSpec",
     "PublishPolicy",
+    "QuantileProtocol",
     "SketchProtocol",
     "StreamingPipeline",
     "TenantQuota",

@@ -4,33 +4,43 @@ The paper's model is a single continuous loop — sites stream rows, the
 coordinator maintains a sketch, queries are answered at any time.  The repo
 previously split that loop across three layers the caller had to glue by
 hand (tracker updates, store publishes, service flushes).  The pipeline
-owns the whole lifecycle for a fleet of tenants, and a tenant may be either
-workload the paper covers: matrix tracking (Section 5) or weighted heavy
-hitters (Section 4)::
+owns the whole lifecycle for a fleet of tenants, and a tenant may be any
+workload kind in the registry: matrix tracking (paper Section 5), weighted
+heavy hitters (Section 4), or distributed quantiles (Yi--Zhang)::
 
     pipeline = StreamingPipeline(mesh, policy=EveryKSteps(4))
     pipeline.add_tenant("run-a", d=64)                       # matrix
     pipeline.add_hh_tenant("clicks", eps=0.05,
                            quota=TenantQuota(max_pending=64, priority=5))
+    pipeline.add_quantile_tenant("latency", eps=0.02)
 
     pipeline.ingest("run-a", rows)         # super-step + policy publish
     pipeline.ingest("clicks", pairs)       # (n, 2) [element, weight] rows
+    pipeline.ingest("latency", samples)    # (n, 2) [value, weight] rows
     t = pipeline.submit("run-a", x, deadline_s=0.005)
     e = pipeline.submit("clicks", np.array([element_id], np.float32))
+    q = pipeline.submit("latency", quantile_query(0.99))
     pipeline.poll()                        # deadline pump (packed sweep)
     estimate, bound, version = t.result()
 
 Ingest drives the tenant's protocol one super-step and asks its
 ``PublishPolicy`` whether the live state drifted enough to become a new
 immutable ``SketchStore`` version (matrix tenants publish their sketch B,
-HH tenants their encoded estimate table).  Queries are admitted through a
+HH tenants their encoded estimate table, quantile tenants their sorted
+[value, rank] table).  Queries are admitted through a
 ``PackedQueryService`` under per-tenant ``TenantQuota``s: overflow is shed
 with a typed error, and each dispatch sweep packs tenants in priority
 order — matrix batches that share (l, d) ride one packed quadform launch,
-HH lookups ride the same sweep without a kernel.  ``save``/``load`` persist
-the *whole* pipeline — published store versions and every tenant's live
-protocol state — through ``repro.ckpt``, so a restarted coordinator resumes
-ingest mid-stream and answers identically.
+HH and quantile lookups ride the same sweep without a kernel.  Deadlines
+are held either cooperatively (every ``ingest`` pumps ``poll()``) or by a
+``ServicePump`` background thread the pipeline owns — pass
+``pump_interval_s`` (or call ``start_pump``) and expiry fires even while
+ingest is idle; ``close()`` (or the context manager) stops it.
+``save``/``load`` persist the *whole* pipeline — published store versions
+and every tenant's live protocol state — through ``repro.ckpt``, so a
+restarted coordinator resumes ingest mid-stream and answers identically
+(the pump is stopped around the checkpoint write and restarted after, and
+``load`` revives it).
 """
 from __future__ import annotations
 
@@ -41,7 +51,7 @@ import jax
 import numpy as np
 
 from repro.query import QueryEngine, SketchStore
-from repro.query.service import PackedQueryService, QueryTicket
+from repro.query.service import PackedQueryService, QueryTicket, ServicePump
 from repro.runtime.policies import (
     EveryKSteps,
     PublishPolicy,
@@ -61,9 +71,9 @@ class TenantStats(NamedTuple):
     rows: int  # stream rows / weighted elements absorbed
     publishes: int  # snapshots auto- or force-published
     latest_version: int | None
-    live_frob: float  # live stream-mass estimate (||A||_F^2, or W for HH)
+    live_frob: float  # live stream-mass estimate (||A||_F^2, or W for HH/quantile)
     comm_total: int  # protocol messages spent (paper units)
-    workload: str = "matrix"  # "matrix" | "hh"
+    workload: str = "matrix"  # "matrix" | "hh" | "quantile"
 
 
 class _MatrixAdapter:
@@ -121,17 +131,23 @@ class _MatrixAdapter:
         return self.tracker
 
 
-class _HHAdapter:
-    """Uniform ingest/publish face over a registry ``HHProtocol``."""
+class _RegistryAdapter:
+    """Uniform ingest/publish face over a registry protocol (HH, quantile).
 
-    workload = "hh"
+    Everything a registered ``(kind, engine, name)`` protocol exposes is
+    uniform — ``step``/``total_weight``/``snapshot_matrix`` plus the
+    checkpoint contract — so this one adapter serves every non-matrix
+    kind; subclasses only pin ``workload`` and the per-kind query shape.
+    """
+
+    workload = ""  # set by subclasses; also the snapshot meta tag
 
     def __init__(self, proto, ctor_kw: dict):
         self.proto = proto
         self._ctor_kw = ctor_kw
 
     def ingest(self, pairs) -> None:
-        """Advance the protocol one step on an (n, 2) [element, weight] batch."""
+        """Advance the protocol one step on an (n, 2) ingest batch."""
         self.proto.step(pairs)
 
     def live_mass(self) -> float:
@@ -140,15 +156,12 @@ class _HHAdapter:
 
     def check_query(self, x: np.ndarray) -> None:
         """Reject wrong-shape queries at the submitter (see pipeline.submit)."""
-        if x.shape != (1,):
-            raise ValueError(
-                f"HH tenants take a (1,) element id, got shape {x.shape}"
-            )
+        raise NotImplementedError
 
     def publish(self, store, tenant: str, meta: dict):
-        """Publish the encoded estimate table as the tenant's next version."""
+        """Publish the encoded snapshot table as the tenant's next version."""
         md = {
-            "workload": "hh",
+            "workload": self.workload,
             "protocol": self.proto.name,
             "engine": self.proto.engine,
             "m": self.proto.m,
@@ -164,7 +177,7 @@ class _HHAdapter:
         )
 
     def rows(self) -> int:
-        """Weighted elements absorbed so far."""
+        """Weighted items absorbed so far."""
         return self.proto.rows_seen
 
     def comm_report(self):
@@ -190,8 +203,42 @@ class _HHAdapter:
 
     @property
     def target(self):
-        """The wrapped HHProtocol (what ``pipeline.tracker()`` returns)."""
+        """The wrapped protocol (what ``pipeline.tracker()`` returns)."""
         return self.proto
+
+
+class _HHAdapter(_RegistryAdapter):
+    """Registry adapter for ``HHProtocol`` tenants."""
+
+    workload = "hh"
+
+    def check_query(self, x: np.ndarray) -> None:
+        """Reject wrong-shape queries at the submitter (see pipeline.submit)."""
+        if x.shape != (1,):
+            raise ValueError(
+                f"HH tenants take a (1,) element id, got shape {x.shape}"
+            )
+
+
+class _QuantileAdapter(_RegistryAdapter):
+    """Registry adapter for ``QuantileProtocol`` tenants."""
+
+    workload = "quantile"
+
+    def check_query(self, x: np.ndarray) -> None:
+        """Reject wrong-shape queries at the submitter (see pipeline.submit)."""
+        from repro.core.quantiles import QUERY_QUANTILE, QUERY_RANK
+
+        if x.shape != (2,):
+            raise ValueError(
+                f"quantile tenants take a (2,) [mode, arg] query, got shape "
+                f"{x.shape} (use core.quantiles.rank_query / quantile_query)"
+            )
+        if x[0] not in (QUERY_RANK, QUERY_QUANTILE):
+            raise ValueError(
+                f"quantile query mode must be {QUERY_RANK} (rank) or "
+                f"{QUERY_QUANTILE} (phi-quantile), got {x[0]}"
+            )
 
 
 class _Tenant:
@@ -225,6 +272,7 @@ class StreamingPipeline:
         interpret: bool | None = None,
         max_batch: int = 1024,
         default_deadline_s: float = 0.02,
+        pump_interval_s: float | None = None,
     ):
         self.mesh = mesh
         self.axis = axis
@@ -238,6 +286,41 @@ class StreamingPipeline:
         )
         self._tenants: dict[str, _Tenant] = {}
         self._publish_s = 0.0
+        # Deadline executor: None means cooperative pumping (every ingest
+        # calls service.poll()); an interval starts a ServicePump thread
+        # the pipeline owns, and ingest stops pumping cooperatively.
+        self.pump: ServicePump | None = None
+        if pump_interval_s is not None:
+            self.start_pump(pump_interval_s)
+
+    # -- deadline executor lifecycle ------------------------------------------
+
+    def start_pump(self, interval_s: float = 0.001) -> ServicePump:
+        """Start (or restart) the background deadline executor.
+
+        While a pump runs, per-entry deadlines hold with no cooperative
+        ``poll()`` calls from the ingest loop — ``ingest`` stops pumping.
+        """
+        if self.pump is not None:
+            self.pump.stop()
+        self.pump = ServicePump(self.service, interval_s=interval_s)
+        return self.pump.start()
+
+    def stop_pump(self) -> None:
+        """Stop the background deadline executor (cooperative pumping resumes)."""
+        pump, self.pump = self.pump, None
+        if pump is not None:
+            pump.stop()
+
+    def close(self) -> None:
+        """Release background resources (stops the pump thread if running)."""
+        self.stop_pump()
+
+    def __enter__(self) -> "StreamingPipeline":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()
 
     # -- tenant lifecycle ----------------------------------------------------
 
@@ -314,12 +397,55 @@ class StreamingPipeline:
         self._register(tenant, _HHAdapter(proto, kw), policy, quota)
         return proto
 
+    def add_quantile_tenant(
+        self,
+        tenant: str,
+        *,
+        eps: float | None = None,
+        protocol: str = "P1",
+        engine: str = "event",
+        policy: PublishPolicy | None = None,
+        quota: TenantQuota | None = None,
+        **kw,
+    ):
+        """Register a distributed-quantile tenant; returns its protocol.
+
+        ``engine="event"`` runs the paper-style simulator in-process
+        (``m`` defaults to the mesh axis size; pass ``m=...`` to override);
+        ``engine="shard"`` runs the shard_map summary-merge super-step
+        engine on the pipeline's mesh.  Extra ``kw`` (``s``, ``q_cap``,
+        ``seed``) pass through to the registered protocol factory and are
+        recorded so ``load`` rebuilds the tenant identically.
+        """
+        from repro.runtime.registry import create_protocol
+
+        if tenant in self._tenants:
+            raise ValueError(f"tenant {tenant!r} already registered")
+        if engine not in ("event", "shard"):
+            raise ValueError(
+                f"unknown quantile engine {engine!r}; choose 'event' or 'shard'"
+            )
+        eps = self.default_eps if eps is None else eps
+        kw = dict(kw)
+        if engine == "shard":
+            proto = create_protocol(
+                protocol, engine="shard", kind="quantile",
+                mesh=self.mesh, eps=eps, axis=self.axis, **kw,
+            )
+        else:
+            kw.setdefault("m", self.mesh.shape[self.axis])
+            proto = create_protocol(
+                protocol, engine="event", kind="quantile", eps=eps, **kw,
+            )
+        self._register(tenant, _QuantileAdapter(proto, kw), policy, quota)
+        return proto
+
     def tenants(self) -> list[str]:
         """Registered tenant names (sorted)."""
         return sorted(self._tenants)
 
     def workload(self, tenant: str) -> str:
-        """The tenant's workload kind: ``"matrix"`` or ``"hh"``."""
+        """The tenant's workload kind: ``"matrix"``, ``"hh"``, or ``"quantile"``."""
         return self._tenant(tenant).adapter.workload
 
     def tracker(self, tenant: str):
@@ -348,9 +474,13 @@ class StreamingPipeline:
         """Absorb one super-step batch; auto-publish per the tenant's policy.
 
         Matrix tenants take an (n, d) row batch, HH tenants an (n, 2)
-        [element, weight] batch.  Returns the new ``SketchSnapshot`` if the
-        policy fired, else None.  Also pumps the packed service's deadlines,
-        so a pure ingest loop still serves queries on time.
+        [element, weight] batch, quantile tenants an (n, 2) [value,
+        weight] batch.  Returns the new ``SketchSnapshot`` if the policy
+        fired, else None.  When no ``ServicePump`` is running this also
+        pumps the packed service's deadlines cooperatively, so a pure
+        ingest loop still serves queries on time.  A pump that died on an
+        exception is detected here and surfaced as ``ServicePumpError``
+        (deadline enforcement must never fail silently).
         """
         t = self._tenant(tenant)
         t.adapter.ingest(rows)
@@ -366,7 +496,14 @@ class StreamingPipeline:
             published_frob=t.published_frob,
         ):
             snap = self._publish(tenant, t)
-        self.service.poll()
+        if self.pump is None:
+            self.service.poll()
+        elif not self.pump.running:
+            # The executor died or was stopped behind our back: detach it
+            # (raising its captured error, if any) and pump cooperatively
+            # so deadlines never silently stop being enforced.
+            self.stop_pump()
+            self.service.poll()
         return snap
 
     def ingest_many(self, batches: Iterable[tuple[str, "np.ndarray"]]) -> int:
@@ -396,7 +533,9 @@ class StreamingPipeline:
     def submit(self, tenant: str, x, *, deadline_s: float | None = None) -> QueryTicket:
         """Admit one query for a tenant into the packed service.
 
-        Matrix tenants take a (d,) direction; HH tenants a (1,) element id.
+        Matrix tenants take a (d,) direction; HH tenants a (1,) element
+        id; quantile tenants a (2,) [mode, arg] row (see
+        ``core.quantiles.rank_query`` / ``quantile_query``).
         The tenant must have at least one published snapshot, and ``x``
         must match the tenant's workload shape: admitting a query nothing
         can answer would poison every later packed flush (the service
@@ -441,6 +580,22 @@ class StreamingPipeline:
             decode_hh_snapshot(snap.matrix), snap.frob, snap.eps, phi
         )
 
+    def quantiles(
+        self, tenant: str, phis, *, version: int | None = None
+    ) -> np.ndarray:
+        """Eps-approximate phi-quantile values from a published snapshot.
+
+        Reads the pinned store version — the same sorted [value, rank]
+        table packed queries are answered from, so restart recovery
+        covers it too.
+        """
+        from repro.core.quantiles import table_quantile
+
+        snap = self.store.get(tenant, version)
+        if snap.meta.get("workload") != "quantile":
+            raise ValueError(f"tenant {tenant!r} is not a quantile tenant")
+        return table_quantile(snap.matrix, snap.frob, phis)
+
     # -- persistence / accounting -------------------------------------------
 
     def save(self, directory: str, *, step: int = 0) -> str:
@@ -451,7 +606,20 @@ class StreamingPipeline:
         protocol state (``state_payload``), plus policies, quotas, and
         publish counters in the manifest.  ``load`` rebuilds a pipeline
         that answers queries bit-identically and resumes ingest mid-stream.
+        A running ``ServicePump`` is stopped for the duration of the write
+        and restarted after (its interval is recorded, so ``load`` revives
+        it on the restored pipeline too).
         """
+        pump = self.pump
+        if pump is not None:
+            pump.stop()
+        try:
+            return self._save(directory, step=step)
+        finally:
+            if pump is not None:
+                pump.start()
+
+    def _save(self, directory: str, *, step: int = 0) -> str:
         from repro import ckpt
 
         store_tree, store_extra = self.store.state_tree()
@@ -486,6 +654,7 @@ class StreamingPipeline:
                 "protocol": self.default_protocol,
                 "axis": self.axis,
                 "policy": policy_to_config(self.default_policy),
+                "pump_interval_s": None if self.pump is None else self.pump.interval_s,
             },
         }
         return ckpt.save(directory, step, tree, extra=extra)
@@ -536,6 +705,8 @@ class StreamingPipeline:
         tree, _ = ckpt.restore(directory, step, template)
 
         defaults = extra.get("defaults", {})
+        if "pump_interval_s" not in pipeline_kw and defaults.get("pump_interval_s"):
+            pipeline_kw["pump_interval_s"] = float(defaults["pump_interval_s"])
         pipe = cls(
             mesh,
             axis=str(defaults.get("axis", "data")) if axis is None else axis,
@@ -551,6 +722,16 @@ class StreamingPipeline:
             quota = None if meta["quota"] is None else TenantQuota(*meta["quota"])
             if meta["workload"] == "hh":
                 pipe.add_hh_tenant(
+                    name,
+                    eps=float(ctor["eps"]),
+                    protocol=str(ctor["protocol"]),
+                    engine=str(ctor["engine"]),
+                    policy=policy,
+                    quota=quota,
+                    **ctor["kw"],
+                )
+            elif meta["workload"] == "quantile":
+                pipe.add_quantile_tenant(
                     name,
                     eps=float(ctor["eps"]),
                     protocol=str(ctor["protocol"]),

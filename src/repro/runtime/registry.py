@@ -24,6 +24,15 @@ and one registration point:
         heavy_hitters(phi)       the paper's (phi - eps/2) W threshold set
         snapshot_matrix()        publishable (n, 2) encoding for the store
 
+  * ``QuantileProtocol`` — the distributed-quantile workload interface::
+
+        step(pairs, sites=None)  absorb an (n, 2) [value, weight] batch
+        table()                  coordinator (k, 2) [value, rank] table
+        total_weight()           coordinator estimate of the stream mass W
+        rank(values)             vectorized weighted-rank estimates
+        quantile(phis)           vectorized eps-approximate phi-quantiles
+        snapshot_matrix()        publishable (n, 2) encoding for the store
+
 Both interfaces also speak the pipeline checkpoint contract —
 ``state_payload()`` / ``restore_payload()`` — so a ``StreamingPipeline``
 can persist live protocol state (not just published snapshots) and resume
@@ -46,12 +55,14 @@ import numpy as np
 
 from repro.core import distributed as dist
 from repro.core import protocols as event
+from repro.core import quantiles as quant
 from repro.core.comm import CommReport
 from repro.core.hh import encode_hh_snapshot
 
 __all__ = [
     "SketchProtocol",
     "HHProtocol",
+    "QuantileProtocol",
     "ProtocolSpec",
     "register_protocol",
     "get_spec",
@@ -221,6 +232,78 @@ class HHProtocol(_StatefulStream, abc.ABC):
         return encode_hh_snapshot(self.estimates())
 
 
+class QuantileProtocol(_StatefulStream, abc.ABC):
+    """Uniform distributed-quantile interface over every engine."""
+
+    def __init__(self, name: str, engine: str, m: int, eps: float):
+        super().__init__(name, engine, "quantile", m, eps)
+
+    @staticmethod
+    def split_pairs(pairs) -> tuple[np.ndarray, np.ndarray]:
+        """Normalize an ingest batch to ``(values f64, weights f64)``.
+
+        Accepts an ``(n, 2)`` array of [value, weight] rows (the pipeline
+        wire format) or an explicit ``(values, weights)`` pair of 1-D
+        arrays.  Values must be finite *as float32* (the summaries and
+        the published table are f32; a value that rounds to ``+/-inf``
+        would collide with the jit summary's empty-slot sentinel and be
+        silently dropped) and weights non-negative.
+        """
+        if isinstance(pairs, tuple):
+            values, weights = pairs
+        else:
+            arr = np.asarray(pairs)
+            if arr.ndim != 2 or arr.shape[1] != 2:
+                raise ValueError(
+                    f"quantile ingest batch must be (n, 2) [value, weight] rows "
+                    f"or a (values, weights) tuple, got shape {arr.shape}"
+                )
+            values, weights = arr[:, 0], arr[:, 1]
+        values = np.asarray(values, np.float64)
+        weights = np.asarray(weights, np.float64)
+        if values.size and not np.all(
+            np.isfinite(values) & (np.abs(values) <= np.finfo(np.float32).max)
+        ):
+            raise ValueError(
+                "quantile values must be finite in float32: +/-inf (incl. "
+                "f32 overflow) collides with the summary's empty-slot "
+                "sentinel and NaN cannot be ranked"
+            )
+        if weights.size and (not np.all(np.isfinite(weights)) or weights.min() < 0):
+            raise ValueError("quantile weights must be finite and >= 0")
+        return values, weights
+
+    @abc.abstractmethod
+    def step(self, pairs, sites: np.ndarray | None = None) -> None:
+        """Absorb a batch of weighted values (continuing prior state)."""
+
+    @abc.abstractmethod
+    def table(self) -> np.ndarray:
+        """The coordinator's ``(k, 2)`` [value, rank-estimate] table."""
+
+    @abc.abstractmethod
+    def total_weight(self) -> float:
+        """Coordinator estimate of the total stream weight ``W``."""
+
+    @abc.abstractmethod
+    def comm_report(self) -> CommReport:
+        """Messages spent so far, in the paper's units."""
+
+    # -- queries: one searchsorted path for every engine and the serving ----
+
+    def rank(self, values) -> np.ndarray:
+        """Vectorized weighted-rank estimates (error <= eps W)."""
+        return quant.table_rank(self.table(), values)
+
+    def quantile(self, phis) -> np.ndarray:
+        """Vectorized eps-approximate phi-quantile values."""
+        return quant.table_quantile(self.table(), self.total_weight(), phis)
+
+    def snapshot_matrix(self) -> np.ndarray:
+        """Publishable sorted ``(n, 2)`` [value, rank] encoding of the state."""
+        return quant.encode_quantile_snapshot(self.table())
+
+
 @dataclass(frozen=True)
 class ProtocolSpec:
     """One registered (kind, engine, protocol) implementation.
@@ -239,7 +322,7 @@ class ProtocolSpec:
     factory: Callable[..., _StatefulStream]
     err_factor: float = 1.0
     description: str = ""
-    kind: str = "matrix"  # "matrix" | "hh"
+    kind: str = "matrix"  # "matrix" | "hh" | "quantile"
 
 
 _REGISTRY: dict[tuple[str, str, str], ProtocolSpec] = {}
@@ -298,6 +381,8 @@ def create_protocol(
     eps=0.1, axis="data")`` — m is the mesh axis size.
     HH workloads:  pass ``kind="hh"`` (and drop ``d``; HH streams are
     (element, weight) pairs).
+    Quantiles:     pass ``kind="quantile"`` (streams are (value, weight)
+    pairs; see ``QuantileProtocol``).
     """
     return get_spec(name, engine, kind).factory(**kw)
 
@@ -387,6 +472,60 @@ class EventHHProtocol(HHProtocol):
 
     def state_payload(self) -> tuple[dict[str, np.ndarray], dict]:
         """Full stream state as JSON-able meta (HH state is all small)."""
+        return {}, {
+            "stream": self._stream.state_dict(),
+            "rr": self._rr,
+            "rows_seen": self.rows_seen,
+        }
+
+    def restore_payload(self, arrays: dict[str, np.ndarray], meta: dict) -> None:
+        """Restore a ``state_payload`` capture bit-identically."""
+        self._stream.load_state(meta["stream"])
+        self._rr = int(meta["rr"])
+        self.rows_seen = int(meta["rows_seen"])
+        self._cached_result = None
+
+
+class EventQuantileProtocol(QuantileProtocol):
+    """Paper-exact event-at-a-time quantile engine behind the interface."""
+
+    def __init__(self, name: str, stream_cls, *, m: int, eps: float,
+                 seed: int = 0, **kw: Any):
+        super().__init__(name, "event", m, eps)
+        self._rng = np.random.default_rng(seed)
+        self._stream = stream_cls(m, eps, self._rng, **kw)
+        self._rr = 0  # round-robin cursor for site-less feeds
+        self._cached_result: quant.QuantileResult | None = None
+
+    def step(self, pairs, sites: np.ndarray | None = None) -> None:
+        """Absorb an (n, 2) [value, weight] batch (round-robin if site-less)."""
+        values, weights = self.split_pairs(pairs)
+        if sites is None:
+            sites = (np.arange(values.shape[0]) + self._rr) % self.m
+            self._rr = int((self._rr + values.shape[0]) % self.m)
+        self._stream.step(values, weights, np.asarray(sites))
+        self.rows_seen += int(values.shape[0])
+        self._cached_result = None
+
+    def _result(self) -> quant.QuantileResult:
+        if self._cached_result is None:
+            self._cached_result = self._stream.result()
+        return self._cached_result
+
+    def table(self) -> np.ndarray:
+        """The coordinator's current table."""
+        return np.asarray(self._result().table)
+
+    def total_weight(self) -> float:
+        """Coordinator estimate of the total stream weight."""
+        return float(self._result().w_hat)
+
+    def comm_report(self) -> CommReport:
+        """Messages spent so far, in the paper's units."""
+        return self._stream.comm.report(self.m)
+
+    def state_payload(self) -> tuple[dict[str, np.ndarray], dict]:
+        """Full stream state as JSON-able meta (quantile state is small)."""
         return {}, {
             "stream": self._stream.state_dict(),
             "rr": self._rr,
@@ -571,6 +710,54 @@ class ShardHHProtocol(_ShardCheckpointMixin, HHProtocol):
         self._cached_estimates = None
 
 
+class ShardQuantileProtocol(_ShardCheckpointMixin, QuantileProtocol):
+    """TPU super-step quantile engine behind the uniform interface.
+
+    ``sites`` is ignored: value placement *is* the sharding of the input
+    batch over the mesh axis.  Backed by ``core.distributed.quant_p1_step``
+    (per-shard ``QuantState`` + ``quant_merge`` coordinator folding).
+    """
+
+    def __init__(self, name: str, *, mesh, eps: float = 0.1,
+                 axis: str = "data", q_cap: int = 0):
+        m = mesh.shape[axis]
+        super().__init__(name, "shard", m, eps)
+        self.cfg = dist.ProtocolConfig(
+            eps=eps, m=m, d=2, axis=axis, q_cap=q_cap
+        ).resolved()
+        self.state, self._step = dist.make_protocol_runner("Q" + name, self.cfg, mesh)
+        self._cached_table: np.ndarray | None = None
+
+    def step(self, pairs, sites: np.ndarray | None = None) -> None:
+        """Advance one super-step on a mesh-sharded weighted-value batch."""
+        import jax.numpy as jnp
+
+        values, weights = self.split_pairs(pairs)
+        self.state = self._step(
+            self.state,
+            (jnp.asarray(values, jnp.float32), jnp.asarray(weights, jnp.float32)),
+        )
+        self.rows_seen += int(values.shape[0])
+        self._cached_table = None
+
+    def table(self) -> np.ndarray:
+        """The coordinator's current table (one host read per step)."""
+        if self._cached_table is None:
+            self._cached_table = np.asarray(dist.quant_p1_table(self.state))
+        return self._cached_table
+
+    def total_weight(self) -> float:
+        """Coordinator estimate of the total stream weight."""
+        return dist.quant_p1_w_hat(self.state)
+
+    def comm_report(self) -> CommReport:
+        """Messages spent so far, in the paper's units."""
+        return self.state.comm.report(self.cfg.m)
+
+    def _invalidate(self) -> None:
+        self._cached_table = None
+
+
 # ---------------------------------------------------------------------------
 # Registrations — the one place protocol names are bound to engines.
 # ---------------------------------------------------------------------------
@@ -645,4 +832,43 @@ register_protocol(ProtocolSpec(
     factory=_shard_hh_factory("P1"),
     err_factor=1.0,
     description="shard_map super-step weighted heavy hitters P1 (MG merge)",
+))
+
+
+def _event_quantile_factory(name: str, stream_cls):
+    def make(**kw: Any) -> EventQuantileProtocol:
+        return EventQuantileProtocol(name, stream_cls, **kw)
+
+    return make
+
+
+def _shard_quantile_factory(name: str):
+    def make(**kw: Any) -> ShardQuantileProtocol:
+        return ShardQuantileProtocol(name, **kw)
+
+    return make
+
+
+# Quantiles: deterministic P1 meets eps via the GK interval invariant; the
+# sampling P3 and the fixed-capacity shard summary carry 2x slack (same
+# convention as the HH sampling protocols).
+_QUANT_ERR = {"P1": 1.0, "P3": 2.0}
+
+for _name, _cls in quant.QUANTILE_STREAMS.items():
+    register_protocol(ProtocolSpec(
+        name=_name,
+        kind="quantile",
+        engine="event",
+        factory=_event_quantile_factory(_name, _cls),
+        err_factor=_QUANT_ERR[_name],
+        description=f"event-driven distributed quantiles {_name} (GK summaries)",
+    ))
+
+register_protocol(ProtocolSpec(
+    name="P1",
+    kind="quantile",
+    engine="shard",
+    factory=_shard_quantile_factory("P1"),
+    err_factor=2.0,
+    description="shard_map super-step distributed quantiles P1 (summary merge)",
 ))

@@ -8,7 +8,7 @@ from repro.runtime import get_spec, specs
 
 DOC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                    "docs", "ARCHITECTURE.md")
-COORD = re.compile(r"`(matrix|hh):(event|shard):([A-Za-z0-9]+)`")
+COORD = re.compile(r"`(matrix|hh|quantile):(event|shard):([A-Za-z0-9]+)`")
 
 
 def _doc_coords() -> set[tuple[str, str, str]]:

@@ -1,0 +1,726 @@
+"""Distributed quantile tracking: summary guarantee (hypothesis-adversarial,
+served through the real store + engine path), merge laws, protocol registry
+harness, comm sanity vs naive forwarding, ServicePump deadline executor, and
+the mixed matrix+HH+quantile pipeline restart contract.
+"""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # property-based tests skip gracefully on minimal installs
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:
+    hypothesis = None
+
+from repro.core.comm import CommReport
+from repro.core.quantiles import (
+    QuantileSummary,
+    decode_quantile_snapshot,
+    encode_quantile_snapshot,
+    exact_ranks,
+    quantile_query,
+    rank_query,
+    table_quantile,
+    table_rank,
+)
+from repro.data.synthetic import lowrank_stream, zipfian_stream
+from repro.query import (
+    PackedQueryService,
+    PackedRequest,
+    QueryEngine,
+    ServicePump,
+    ServicePumpError,
+    SketchStore,
+)
+from repro.runtime import (
+    EveryKSteps,
+    StreamingPipeline,
+    TenantQuota,
+    create_protocol,
+    specs,
+)
+
+Q_N, Q_M, Q_EPS = 30_000, 4, 0.05
+
+
+def _assert_quantile_guarantee(values, weights, serve, eps, slack=0.0):
+    """Check eps-approximate quantiles against the achievable-rank criterion.
+
+    ``serve(phi)`` returns the served value; the criterion (see
+    docs/ARCHITECTURE.md "The guarantees") is ``R(v) >= phi W - eps W``
+    and ``R(v) - mass(v) <= phi W + eps W`` — mass sitting exactly at the
+    served value can always absorb the target, so it is not error.
+    """
+    values = np.asarray(values, np.float32)
+    weights = np.asarray(weights, np.float64)
+    w_total = float(weights.sum())
+    budget = eps * w_total + slack + 1e-5 * w_total + 1e-9
+    for phi in np.linspace(0.0, 1.0, 21):
+        v = float(serve(phi))
+        r_v = float(exact_ranks(values, weights, [v])[0])
+        mass = float(weights[values == np.float32(v)].sum())
+        target = phi * w_total
+        assert r_v >= target - budget, (phi, v, r_v, target)
+        assert r_v - mass <= target + budget, (phi, v, r_v, mass, target)
+
+
+# ---------------------------------------------------------------------------
+# the summary itself: guarantee on adversarial streams, merge laws
+# ---------------------------------------------------------------------------
+
+
+ADVERSARIAL = {
+    "random": lambda rng, n: rng.normal(size=n),
+    "duplicate-heavy": lambda rng, n: rng.integers(0, 8, n).astype(float),
+    "one-heavy": lambda rng, n: np.where(rng.uniform(size=n) < 0.9, 3.0,
+                                         rng.normal(size=n)),
+    "sorted": lambda rng, n: np.sort(rng.normal(size=n)),
+    "reversed": lambda rng, n: np.sort(rng.normal(size=n))[::-1],
+}
+
+
+@pytest.mark.parametrize("kind", sorted(ADVERSARIAL))
+def test_summary_eps_guarantee_adversarial(kind):
+    """Unweighted adversarial streams: every served quantile's rank is
+    within eps*N of its target, and the summary's own certificate
+    (error_bound) honors the same budget."""
+    rng = np.random.default_rng(7)
+    n, eps = 20_000, 0.02
+    vals = np.asarray(ADVERSARIAL[kind](rng, n), np.float32)
+    qs = QuantileSummary(eps)
+    qs.extend(vals)
+    assert qs.weight == n
+    assert qs.error_bound() <= eps * n * (1 + 1e-6)
+    tab = qs.table()
+    _assert_quantile_guarantee(vals, np.ones(n), lambda phi: table_quantile(
+        tab, qs.weight, [phi])[0], eps)
+    # rank queries: same budget, same shared table path
+    xs = np.concatenate([rng.choice(vals, 64), rng.normal(size=16).astype(np.float32)])
+    est = table_rank(tab, xs)
+    tru = exact_ranks(vals, np.ones(n), xs)
+    assert np.max(np.abs(est - tru)) <= eps * n * (1 + 1e-6) + 1e-3
+
+
+def test_summary_small_streams_are_exact():
+    """Below the compression threshold the summary is lossless."""
+    qs = QuantileSummary(0.1)
+    vals = [5.0, -2.0, 5.0, 3.25, -2.0, 0.0]
+    qs.extend(np.array(vals))
+    for x in sorted(set(vals)):
+        assert qs.rank(x) == sum(v <= x for v in vals)
+    assert qs.quantile(0.0) == -2.0 and qs.quantile(1.0) == 5.0
+    assert qs.error_bound() == 0.0
+    assert qs.size() == len(set(vals))
+    assert qs.serialized_bytes() == 32 * qs.size()
+
+
+def test_summary_input_validation():
+    qs = QuantileSummary(0.1)
+    with pytest.raises(ValueError, match="finite"):
+        qs.insert(np.inf)
+    with pytest.raises(ValueError, match=">= 0"):
+        qs.insert(1.0, -2.0)
+    qs.insert(1.0, 0.0)  # zero weight: absorbed as a no-op
+    assert qs.weight == 0.0 and qs.size() == 0
+    with pytest.raises(ValueError):
+        QuantileSummary(0.0)
+    with pytest.raises(ValueError):
+        QuantileSummary(1.5)
+
+
+def test_summary_merge_order_invariance_of_guarantee():
+    """Mergeability laws: any merge order (commuted, re-associated) yields
+    an eps-summary of the union with identical total weight."""
+    rng = np.random.default_rng(8)
+    n, eps = 24_000, 0.05
+    vals = np.asarray(rng.normal(size=n) * 10, np.float32)
+    chunks = np.array_split(vals, 6)
+
+    def summarize(chunk):
+        s = QuantileSummary(eps)
+        s.extend(chunk)
+        return s
+
+    def merged(order):
+        acc = QuantileSummary(eps)
+        for i in order:
+            acc.merge(summarize(chunks[i]))
+        return acc
+
+    for order in (range(6), reversed(range(6)), [3, 0, 5, 1, 4, 2]):
+        s = merged(order)
+        assert s.weight == pytest.approx(n, rel=1e-6)
+        assert s.error_bound() <= eps * n * (1 + 1e-6)
+        tab = s.table()
+        _assert_quantile_guarantee(
+            vals, np.ones(n), lambda phi: table_quantile(tab, s.weight, [phi])[0], eps
+        )
+    # pairwise-tree association agrees with left fold on the guarantee too
+    left, right = summarize(np.concatenate(chunks[:3])), summarize(np.concatenate(chunks[3:]))
+    left.merge(right)
+    assert left.weight == pytest.approx(n, rel=1e-6)
+    assert left.error_bound() <= eps * n * (1 + 1e-6)
+    # merging an empty summary is the identity
+    s = merged(range(6))
+    before = s.table().copy()
+    s.merge(QuantileSummary(eps))
+    np.testing.assert_array_equal(s.table(), before)
+
+
+def test_summary_state_dict_round_trip_is_exact():
+    rng = np.random.default_rng(9)
+    s = QuantileSummary(0.05)
+    s.extend(rng.normal(size=5000).astype(np.float32))
+    clone = QuantileSummary.from_state(s.state_dict())
+    np.testing.assert_array_equal(s.table(), clone.table())
+    # continuing both with the same tail stays bit-identical (ckpt contract)
+    tail = rng.normal(size=2000).astype(np.float32)
+    s.extend(tail)
+    clone.extend(tail)
+    np.testing.assert_array_equal(s.table(), clone.table())
+
+
+def test_served_quantiles_property_harness():
+    """Hypothesis: adversarial/duplicate-heavy streams served through the
+    REAL path — summary -> snapshot codec -> SketchStore -> QueryEngine
+    packed-query rows — keep every quantile within eps*N rank error."""
+    pytest.importorskip("hypothesis")
+
+    @hypothesis.given(
+        base=st.lists(
+            st.one_of(
+                st.floats(min_value=-1e6, max_value=1e6, width=32),
+                st.sampled_from([0.0, 1.0, -3.5, 7.0]),  # forced duplicates
+            ),
+            min_size=1,
+            max_size=400,
+        ),
+        dup_factor=st.integers(min_value=1, max_value=50),
+        eps=st.floats(min_value=0.02, max_value=0.3),
+        descending=st.booleans(),
+    )
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def check(base, dup_factor, eps, descending):
+        vals = np.asarray(base * dup_factor, np.float32)
+        if descending:
+            vals = np.sort(vals)[::-1]
+        n = vals.shape[0]
+        qs = QuantileSummary(eps)
+        qs.extend(vals)
+        store = SketchStore()
+        store.publish("q", encode_quantile_snapshot(qs.table()),
+                      frob=qs.weight, eps=eps, meta={"workload": "quantile"})
+        engine = QueryEngine(store)
+        phis = np.linspace(0.0, 1.0, 17)
+        res = engine.query_batch(np.stack([quantile_query(p) for p in phis]), tenant="q")
+        assert res.path == "quantile" and res.error_bound == pytest.approx(eps * qs.weight)
+        for phi, v in zip(phis, res.estimates):
+            r_v = float(exact_ranks(vals, np.ones(n), [v])[0])
+            mass = float(np.sum(vals == np.float32(v)))
+            assert r_v >= phi * n - eps * n - 1e-3 * n - 1e-9
+            assert r_v - mass <= phi * n + eps * n + 1e-3 * n + 1e-9
+        # rank mode rides the same snapshot within the same budget
+        probe = vals[:: max(1, n // 16)]
+        ranks = engine.query_batch(np.stack([rank_query(float(v)) for v in probe]),
+                                   tenant="q").estimates
+        tru = exact_ranks(vals, np.ones(n), probe)
+        assert np.max(np.abs(ranks - tru)) <= eps * n + 1e-3 * n + 1e-9
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# snapshot codec
+# ---------------------------------------------------------------------------
+
+
+def test_quantile_snapshot_codec_round_trip_and_validation():
+    tab = np.array([[-1.0, 2.0], [0.5, 4.0], [3.0, 9.0]], np.float32)
+    enc = encode_quantile_snapshot(tab)
+    vals, ranks = decode_quantile_snapshot(enc)
+    np.testing.assert_array_equal(vals, tab[:, 0])
+    np.testing.assert_array_equal(ranks, tab[:, 1])
+    assert encode_quantile_snapshot(np.zeros((0, 2), np.float32)).shape == (0, 2)
+    with pytest.raises(ValueError, match="\\(n, 2\\)"):
+        encode_quantile_snapshot(np.zeros((3, 3), np.float32))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        encode_quantile_snapshot(np.array([[1.0, 1.0], [1.0, 2.0]], np.float32))
+    with pytest.raises(ValueError, match="non-decreasing"):
+        encode_quantile_snapshot(np.array([[1.0, 5.0], [2.0, 4.0]], np.float32))
+    with pytest.raises(ValueError, match="\\(n, 2\\)"):
+        decode_quantile_snapshot(np.zeros((2, 3), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# registry: one harness for every registered quantile spec
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+@pytest.fixture(scope="module")
+def q_stream():
+    rng = np.random.default_rng(11)
+    vals = (rng.normal(size=Q_N) * 10).astype(np.float32)
+    weights = rng.uniform(1.0, 50.0, Q_N)
+    sites = rng.integers(0, Q_M, Q_N)
+    return vals, weights, sites
+
+
+def _make_quantile(spec, mesh):
+    if spec.engine == "event":
+        return create_protocol(
+            spec.name, engine="event", kind="quantile", m=Q_M, eps=Q_EPS, seed=1
+        )
+    return create_protocol(
+        spec.name, engine="shard", kind="quantile", mesh=mesh, eps=Q_EPS
+    )
+
+
+@pytest.mark.parametrize("spec", specs(kind="quantile"), ids=lambda s: f"{s.engine}-{s.name}")
+def test_registry_quantile_harness(spec, q_stream, mesh):
+    """Every (engine, protocol) quantile pair: stream batches through the
+    uniform interface, then check the rank-error guarantee, message
+    accounting vs naive forwarding, the total-weight estimate, the shared
+    table query path, and the checkpoint payload round-trip."""
+    vals, weights, sites = q_stream
+    w_total = float(weights.sum())
+    proto = _make_quantile(spec, mesh)
+    pairs = np.stack([vals.astype(np.float64), weights], axis=1)
+    for i in range(0, Q_N, 10_000):
+        if spec.engine == "event":
+            proto.step(pairs[i : i + 10_000], sites[i : i + 10_000])
+        else:
+            proto.step(pairs[i : i + 10_000])
+    assert proto.rows_seen == Q_N
+
+    # eps guarantee (err_factor slack for the sampling/shard variants)
+    _assert_quantile_guarantee(
+        vals, weights, lambda phi: proto.quantile([phi])[0],
+        spec.err_factor * Q_EPS,
+    )
+
+    # total-weight estimate tracks the true stream weight
+    assert 0.5 * w_total <= proto.total_weight() <= 2.0 * w_total
+
+    # comm-bound sanity: beats naive forwarding (one message per item)
+    rep = proto.comm_report()
+    assert isinstance(rep, CommReport)
+    assert 0 < rep.total < Q_N
+
+    # vectorized rank lookups ride the same published-table code path
+    probe = vals[:64]
+    np.testing.assert_array_equal(proto.rank(probe), table_rank(proto.table(), probe))
+
+    # snapshot encoding is valid store input
+    enc = proto.snapshot_matrix()
+    assert enc.dtype == np.float32 and enc.shape[1] == 2
+
+    # the jit state's own error certificate honors the coordinator's
+    # compress budget (eps/2 internally -> band/2 <= eps/2 * W)
+    if spec.engine == "shard":
+        from repro.core.quantiles import quant_band
+
+        band = quant_band(proto.state.coord_q)
+        assert 0.0 <= band <= 0.5 * Q_EPS * proto.total_weight() * (1 + 1e-5)
+
+    # checkpoint round-trip: a fresh protocol restored from the payload
+    # continues the stream identically (the pipeline-restart contract)
+    arrays, meta = proto.state_payload()
+    clone = _make_quantile(spec, mesh)
+    clone.restore_payload({k: np.asarray(v) for k, v in arrays.items()}, meta)
+    tail = pairs[:5_000]
+    if spec.engine == "event":
+        proto.step(tail, sites[:5_000])
+        clone.step(tail, sites[:5_000])
+    else:
+        proto.step(tail)
+        clone.step(tail)
+    np.testing.assert_array_equal(proto.table(), clone.table())
+    assert proto.total_weight() == clone.total_weight()
+    assert proto.comm_report() == clone.comm_report()
+
+
+def test_quantile_rejects_malformed_ingest(mesh):
+    """Non-finite values and negative weights are rejected at the ingest
+    seam: +/-inf collides with the jit summary's empty-slot sentinel and a
+    policy-driven publish failing later would wedge the tenant."""
+    for engine in ("event", "shard"):
+        kw = {"m": 2} if engine == "event" else {"mesh": mesh}
+        proto = create_protocol("P1", engine=engine, kind="quantile", eps=0.5, **kw)
+        with pytest.raises(ValueError, match="finite"):
+            proto.step(np.array([[np.inf, 1.0]]))
+        with pytest.raises(ValueError, match="finite"):
+            # finite in f64 but overflows to inf in f32: would silently
+            # become the jit summary's empty-slot sentinel
+            proto.step(np.array([[1e39, 1.0]]))
+        with pytest.raises(ValueError, match=">= 0"):
+            proto.step((np.array([1.0]), np.array([-1.0])))
+        with pytest.raises(ValueError, match="\\(n, 2\\)"):
+            proto.step(np.zeros((3, 4), np.float32))
+
+
+def test_shard_quantile_duplicate_heavy_publishes_cleanly(mesh):
+    """Coordinator merges of equal-valued summaries must fold them into one
+    tuple: a duplicate-heavy shard tenant publishes a strictly-increasing
+    table (the codec contract) and stays exact across batches."""
+    proto = create_protocol("P1", engine="shard", kind="quantile", mesh=mesh, eps=0.01)
+    batch = np.stack([np.full(100, 5.0), np.ones(100)], axis=1)
+    for _ in range(4):  # several ships of the same single value
+        proto.step(batch)
+    tab = proto.snapshot_matrix()  # validates strict monotonicity
+    assert tab.shape[0] == 1 and tab[0, 0] == 5.0
+    assert float(proto.rank([5.0])[0]) == pytest.approx(400.0, rel=1e-6)
+    # mixed with distinct values the table stays strictly increasing
+    rng = np.random.default_rng(3)
+    proto.step(np.stack([rng.normal(size=200), np.ones(200)], axis=1))
+    vals = proto.snapshot_matrix()[:, 0]
+    assert np.all(np.diff(vals) > 0)
+
+
+def test_event_quantile_f32_colliding_values_publish_cleanly():
+    """Values distinct in f64 but equal in f32 must collapse in the
+    published table instead of violating the strictly-increasing codec
+    contract (16777217 rounds to 16777216 in float32)."""
+    proto = create_protocol("P1", engine="event", kind="quantile", m=1, eps=0.1)
+    proto.step(np.array([[16777216.0, 1.0], [16777217.0, 1.0]] * 50))
+    tab = proto.snapshot_matrix()
+    assert np.all(np.diff(tab[:, 0]) > 0)
+    # within eps*W of the exact rank (the unshipped site tail is part of
+    # the protocol's eps budget)
+    assert float(proto.rank([16777216.0])[0]) == pytest.approx(100.0, abs=0.1 * 100)
+    # the sampling variant publishes cleanly on the same colliding stream
+    p3 = create_protocol("P3", engine="event", kind="quantile", m=1, eps=0.5, seed=0)
+    p3.step(np.array([[16777216.0, 1.0], [16777217.0, 1.0]] * 50))
+    tab3 = p3.snapshot_matrix()
+    assert tab3.shape[0] >= 1 and np.all(np.diff(tab3[:, 0]) > 0)
+
+
+def test_quant_insert_empty_batch_is_identity(mesh):
+    """An empty (0, 2) ingest batch is a no-op for every quantile engine."""
+    from repro.core.quantiles import quant_init, quant_insert
+
+    st = quant_init(16)
+    st2 = quant_insert(st, np.zeros(0, np.float32), np.zeros(0, np.float32), 0.1)
+    assert st2 is st
+    for engine in ("event", "shard"):
+        kw = {"m": 2} if engine == "event" else {"mesh": mesh}
+        proto = create_protocol("P1", engine=engine, kind="quantile", eps=0.5, **kw)
+        proto.step(np.zeros((0, 2), np.float32))
+        proto.step(np.array([[1.0, 2.0]], np.float32))
+        proto.step(np.zeros((0, 2), np.float32))
+        assert float(proto.rank([1.0])[0]) == pytest.approx(2.0)
+
+
+def test_pipeline_surfaces_dead_pump_instead_of_dropping_deadlines(mesh):
+    """A pump that died on an exception must not silently disable deadline
+    enforcement: the next ingest raises its error, detaches the pump, and
+    cooperative polling resumes."""
+    rng = np.random.default_rng(41)
+    pipe = StreamingPipeline(mesh, eps=0.1, policy=EveryKSteps(1),
+                             pump_interval_s=0.002)
+    pipe.add_quantile_tenant("q", eps=0.1, m=2)
+    samples = np.stack([rng.normal(size=512).astype(np.float32),
+                        np.ones(512, np.float32)], axis=1)
+    pipe.ingest("q", samples)
+    # Poison the pump: a query for a tenant that can never be answered
+    # (pipeline.submit would reject it; go to the service directly).
+    pipe.service.submit(np.ones(2, np.float32), tenant="ghost", deadline_s=0.0)
+    assert _wait_until(lambda: pipe.pump is not None and not pipe.pump.running)
+    with pytest.raises(ServicePumpError) as ei:
+        pipe.ingest("q", samples)
+    assert isinstance(ei.value.__cause__, KeyError)
+    assert pipe.pump is None  # detached: cooperative polling is back on
+
+
+def test_quantile_shard_matches_event_semantics(q_stream, mesh):
+    """Both engines meet the deterministic bound on the same stream."""
+    vals, weights, sites = q_stream
+    pairs = np.stack([vals.astype(np.float64), weights], axis=1)
+    ev = create_protocol("P1", engine="event", kind="quantile", m=1, eps=Q_EPS)
+    sh = create_protocol("P1", engine="shard", kind="quantile", mesh=mesh, eps=Q_EPS)
+    ev.step(pairs, np.zeros(Q_N, np.int64))
+    sh.step(pairs)
+    for proto in (ev, sh):
+        _assert_quantile_guarantee(
+            vals, weights, lambda phi: proto.quantile([phi])[0], 2.0 * Q_EPS
+        )
+
+
+# ---------------------------------------------------------------------------
+# engine: packed quantile serving
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def three_kind_store():
+    rng = np.random.default_rng(21)
+    store = SketchStore()
+    for tenant in ("m1", "m2"):
+        store.publish(tenant, rng.normal(size=(12, 32)).astype(np.float32),
+                      frob=10.0, eps=0.1)
+    store.publish("hh", np.array([[1.0, 5.0], [7.0, 3.0]], np.float32),
+                  frob=8.0, eps=0.1, meta={"workload": "hh"})
+    qs = QuantileSummary(0.1)
+    qs.extend(rng.normal(size=4000).astype(np.float32))
+    store.publish("q", encode_quantile_snapshot(qs.table()), frob=qs.weight,
+                  eps=0.1, meta={"workload": "quantile"})
+    return store
+
+
+def test_engine_packed_mixed_three_kinds_equals_serial(three_kind_store):
+    engine = QueryEngine(three_kind_store)
+    rng = np.random.default_rng(22)
+    reqs = [
+        PackedRequest("m1", rng.normal(size=(5, 32)).astype(np.float32)),
+        PackedRequest("q", np.stack([quantile_query(0.5), rank_query(0.0),
+                                     quantile_query(0.99)])),
+        PackedRequest("m2", rng.normal(size=(3, 32)).astype(np.float32)),
+        PackedRequest("hh", np.array([[1.0], [2.0], [7.0]], np.float32)),
+    ]
+    results = engine.query_packed(reqs)
+    assert [r.path for r in results] == ["pallas", "quantile", "pallas", "hh"]
+    assert engine.packed_launches == 1  # m1+m2 share (12, 32); lookups launch none
+    for req, res in zip(reqs, results):
+        serial = engine.query_batch(req.x, tenant=req.tenant)
+        np.testing.assert_allclose(res.estimates, serial.estimates, rtol=1e-5)
+        assert res.error_bound == serial.error_bound
+
+
+def test_engine_quantile_query_validation(three_kind_store):
+    engine = QueryEngine(three_kind_store)
+    with pytest.raises(ValueError, match="\\[mode, arg\\]"):
+        engine.query_batch(np.zeros((2, 3), np.float32), tenant="q")
+    with pytest.raises(ValueError, match="mode"):
+        engine.query_batch(np.array([[7.0, 0.5]], np.float32), tenant="q")
+
+
+# ---------------------------------------------------------------------------
+# ServicePump: the real deadline executor
+# ---------------------------------------------------------------------------
+
+
+def _wait_until(cond, timeout_s=5.0):
+    deadline = time.monotonic() + timeout_s
+    while not cond() and time.monotonic() < deadline:
+        time.sleep(0.002)
+    return cond()
+
+
+def test_service_pump_fires_deadline_without_cooperative_poll(three_kind_store):
+    """The acceptance property: an expired deadline is served while the
+    submitting thread does nothing — no poll(), no flush(), no ingest."""
+    svc = PackedQueryService(QueryEngine(three_kind_store), auto_flush=False)
+    with ServicePump(svc, interval_s=0.002) as pump:
+        ticket = svc.submit(quantile_query(0.5), tenant="q", deadline_s=0.01)
+        assert _wait_until(lambda: ticket.done)
+        assert pump.served >= 1 and pump.polls >= 1
+    assert not pump.running
+
+
+def test_service_pump_captures_exceptions_and_reraises_on_stop(three_kind_store):
+    """Exception safety: a poll() failure stops the loop, is exposed on
+    .error, and stop() re-raises it as ServicePumpError — never silent."""
+    svc = PackedQueryService(QueryEngine(three_kind_store), auto_flush=False)
+    pump = ServicePump(svc, interval_s=0.002).start()
+    # a query nothing can answer: the sweep raises KeyError in the pump
+    svc.submit(np.ones(32, np.float32), tenant="unpublished", deadline_s=0.0)
+    assert _wait_until(lambda: pump.error is not None)
+    assert not pump.running
+    with pytest.raises(ServicePumpError) as ei:
+        pump.stop()
+    assert isinstance(ei.value.__cause__, KeyError)
+    # the error was consumed: the pump can be restarted cleanly
+    pump.stop()
+    assert pump.error is None
+
+
+def test_service_pump_validation_and_idempotent_start(three_kind_store):
+    svc = PackedQueryService(QueryEngine(three_kind_store))
+    with pytest.raises(ValueError):
+        ServicePump(svc, interval_s=0.0)
+    pump = ServicePump(svc, interval_s=0.01)
+    assert pump.start() is pump and pump.start() is pump  # idempotent
+    assert pump.running
+    pump.stop()
+    pump.stop()  # idempotent too
+    assert not pump.running
+
+
+def test_pipeline_pump_serves_while_ingest_idle(mesh):
+    """Pipeline-owned executor: deadlines hold with zero cooperative
+    pumping from the ingest loop (the ROADMAP 'still open' item)."""
+    rng = np.random.default_rng(31)
+    with StreamingPipeline(mesh, eps=0.1, policy=EveryKSteps(1),
+                           pump_interval_s=0.002) as pipe:
+        pipe.add_quantile_tenant("lat", eps=0.05, m=2)
+        samples = np.stack([rng.lognormal(3, 1, 4000).astype(np.float32),
+                            np.ones(4000, np.float32)], axis=1)
+        pipe.ingest("lat", samples)
+        ticket = pipe.submit("lat", quantile_query(0.9), deadline_s=0.01)
+        # ingest is idle from here on; only the pump can resolve the ticket
+        assert _wait_until(lambda: ticket.done)
+        est, bound, version = ticket.result()
+        # bound = eps * hat{W}; hat{W} is the coordinator's received mass,
+        # a (1 - eps)-accurate tracker of the true 4000.
+        assert version == 1 and bound == pytest.approx(0.05 * 4000, rel=0.1)
+        r = float(exact_ranks(samples[:, 0], samples[:, 1], [est])[0])
+        assert abs(r - 0.9 * 4000) <= 2 * 0.05 * 4000 + 1
+    assert pipe.pump is None  # context exit stopped and detached the pump
+
+
+# ---------------------------------------------------------------------------
+# pipeline: matrix + HH + quantile tenants, fresh-process restart
+# ---------------------------------------------------------------------------
+
+
+def _three_kind_pipeline(mesh):
+    """One pipeline hosting all three registered workload kinds."""
+    pipe = StreamingPipeline(mesh, eps=0.25, policy=EveryKSteps(1))
+    pipe.add_tenant("mat", 16, quota=TenantQuota(max_pending=4, priority=1))
+    pipe.add_hh_tenant("clicks", eps=0.05, protocol="P1", engine="event", m=4)
+    pipe.add_quantile_tenant("lat-ev", eps=0.05, protocol="P1", engine="event", m=4,
+                             quota=TenantQuota(max_pending=8, priority=5))
+    pipe.add_quantile_tenant("lat-sh", eps=0.05, protocol="P1", engine="shard")
+    return pipe
+
+
+def _three_kind_feed():
+    a = lowrank_stream(1024, 16, rank=3, seed=51)
+    keys, w = zipfian_stream(8000, beta=100.0, universe=1000, seed=52)
+    hh_pairs = np.stack([keys.astype(np.float32), w.astype(np.float32)], axis=1)
+    rng = np.random.default_rng(53)
+    q_pairs = np.stack([rng.lognormal(3.0, 1.0, 8000).astype(np.float32),
+                        rng.uniform(1.0, 3.0, 8000).astype(np.float32)], axis=1)
+    return a, hh_pairs, q_pairs
+
+
+def _three_kind_answers(pipe, a, hh_pairs, q_pairs):
+    """Resume ingest on the second half of every feed, then query all kinds."""
+    for i in (2, 3):
+        pipe.ingest("mat", jnp.asarray(a[i * 256 : (i + 1) * 256]))
+        pipe.ingest("clicks", hh_pairs[i * 2000 : (i + 1) * 2000])
+        pipe.ingest("lat-ev", q_pairs[i * 2000 : (i + 1) * 2000])
+        pipe.ingest("lat-sh", q_pairs[i * 2000 : (i + 1) * 2000])
+    x = np.random.default_rng(54).normal(size=16).astype(np.float32)
+    tickets = [
+        pipe.submit("mat", x),
+        pipe.submit("clicks", np.array([1.0], np.float32)),
+        pipe.submit("lat-ev", quantile_query(0.9)),
+        pipe.submit("lat-ev", rank_query(30.0)),
+        pipe.submit("lat-sh", quantile_query(0.9)),
+    ]
+    pipe.flush()
+    out = [v for t in tickets for v in t.result()]
+    out += [float(pipe.stats(t).live_frob) for t in pipe.tenants()]
+    out += [float(pipe.stats(t).comm_total) for t in pipe.tenants()]
+    out += [float(v) for v in pipe.quantiles("lat-ev", [0.25, 0.5, 0.75, 0.99])]
+    return np.array(out, np.float64)
+
+
+def test_pipeline_three_kinds_restart_fresh_process(mesh, tmp_path):
+    """The PR acceptance loop: one pipeline hosts matrix + HH + quantile
+    tenants, serves phi-quantiles within the eps envelope through the
+    packed path, and after save -> fresh-process load resumes ingest and
+    answers bit-identically."""
+    from conftest import run_multidevice
+
+    pipe = _three_kind_pipeline(mesh)
+    a, hh_pairs, q_pairs = _three_kind_feed()
+    for i in (0, 1):  # first half of every stream
+        pipe.ingest("mat", jnp.asarray(a[i * 256 : (i + 1) * 256]))
+        pipe.ingest("clicks", hh_pairs[i * 2000 : (i + 1) * 2000])
+        pipe.ingest("lat-ev", q_pairs[i * 2000 : (i + 1) * 2000])
+        pipe.ingest("lat-sh", q_pairs[i * 2000 : (i + 1) * 2000])
+    assert {pipe.workload(t) for t in pipe.tenants()} == {"matrix", "hh", "quantile"}
+
+    # served phi-quantiles honor the guarantee through the packed path
+    half_vals, half_w = q_pairs[:4000, 0], q_pairs[:4000, 1]
+    for tenant in ("lat-ev", "lat-sh"):
+        t = pipe.submit(tenant, quantile_query(0.5))
+        pipe.flush()
+        r = float(exact_ranks(half_vals, half_w, [t.result()[0]])[0])
+        w_total = float(half_w.sum())
+        assert abs(r - 0.5 * w_total) <= 2 * 0.05 * w_total + 1
+    # mixed-workload accessor errors stay typed
+    with pytest.raises(ValueError, match="not a quantile tenant"):
+        pipe.quantiles("mat", [0.5])
+    with pytest.raises(ValueError, match="not a heavy-hitter tenant"):
+        pipe.heavy_hitters("lat-ev", 0.1)
+
+    # -- checkpoint, then resume in THIS process --
+    ckdir = str(tmp_path / "three_kinds_ck")
+    pipe.save(ckdir)
+    want = _three_kind_answers(pipe, a, hh_pairs, q_pairs)
+
+    # -- fresh-process restart: load must answer bit-identically --
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    script = f"""
+import sys
+sys.path.insert(0, {tests_dir!r})
+import jax, numpy as np
+from repro.runtime import StreamingPipeline
+from test_quantiles import _three_kind_answers, _three_kind_feed
+
+mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+pipe = StreamingPipeline.load({ckdir!r}, mesh)
+a, hh_pairs, q_pairs = _three_kind_feed()
+print("ANSWERS=" + _three_kind_answers(pipe, a, hh_pairs, q_pairs).tobytes().hex())
+"""
+    out = run_multidevice(script, n_devices=1)
+    got_hex = [ln for ln in out.splitlines() if ln.startswith("ANSWERS=")][0]
+    got = np.frombuffer(bytes.fromhex(got_hex.removeprefix("ANSWERS=")), np.float64)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_quant_p1_shard_multidevice():
+    """QP1 on a real 8-shard mesh: every shard is a paper site, the masked
+    all_gather ships summaries, and the folded coordinator meets the rank
+    bound at sub-stream communication (like test_distributed.py's matrix
+    checks)."""
+    from conftest import run_multidevice
+
+    out = run_multidevice(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.distributed import (
+    ProtocolConfig, make_protocol_runner, quant_p1_table, quant_p1_w_hat)
+from repro.core.quantiles import exact_ranks, table_quantile
+
+m, eps, n = 8, 0.1, 16384
+mesh = Mesh(np.array(jax.devices()).reshape(m), ("sites",))
+rng = np.random.default_rng(5)
+vals = (rng.normal(size=n) * 10).astype(np.float32)
+ws = rng.uniform(1.0, 20.0, n).astype(np.float32)
+W = float(ws.sum())
+cfg = ProtocolConfig(eps=eps, m=m, d=2, axis="sites")
+state, step = make_protocol_runner("QP1", cfg, mesh)
+batch = 512
+for t in range(n // (m * batch)):
+    lo, hi = t * m * batch, (t + 1) * m * batch
+    state = step(state, (jnp.asarray(vals[lo:hi]), jnp.asarray(ws[lo:hi])))
+tab = np.asarray(quant_p1_table(state))
+w_hat = quant_p1_w_hat(state)
+assert 0.8 * W <= w_hat <= 1.2 * W, (w_hat, W)
+worst = 0.0
+for phi in np.linspace(0.05, 0.95, 19):
+    v = float(table_quantile(tab, w_hat, [phi])[0])
+    r = float(exact_ranks(vals, ws, [v])[0])
+    worst = max(worst, abs(r - phi * W) / W)
+assert worst <= 2 * eps, worst
+c = state.comm
+total = int(c.scalar_msgs) + int(c.row_msgs) + int(c.broadcast_events) * m
+assert 0 < total < n, total
+print("OK", worst, total)
+"""
+    )
+    assert "OK" in out
