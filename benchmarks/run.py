@@ -14,6 +14,7 @@ def main() -> None:
         grad_compression,
         hh_protocols,
         kernels_bench,
+        leverage_protocols,
         matrix_protocols,
         p4_negative,
         quantile_protocols,
@@ -28,6 +29,7 @@ def main() -> None:
     for mod in (
         hh_protocols,
         quantile_protocols,
+        leverage_protocols,
         matrix_protocols,
         tradeoff,
         p4_negative,

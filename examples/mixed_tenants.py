@@ -1,14 +1,15 @@
-"""Mixed-workload pipeline demo: matrix + HH + quantile tenants, one runtime.
+"""Mixed-workload pipeline demo: all four workload kinds, one runtime.
 
-One ``StreamingPipeline`` hosts all three registered workload kinds —
-matrix tracking (paper Section 5), weighted heavy hitters (Section 4), and
-distributed quantiles (Yi–Zhang's companion problem) — behind a single
+One ``StreamingPipeline`` hosts all four registered workload kinds —
+matrix tracking (paper Section 5), weighted heavy hitters (Section 4),
+distributed quantiles (Yi–Zhang's companion problem), and leverage-score
+row sampling (the distributed-PCA companion) — behind a single
 ingest → publish → packed-serve loop, and demonstrates the hardening this
 layer adds:
 
   1. mixed packed serving — matrix quadform batches, HH point-lookups,
-     and quantile rank/phi lookups resolve through the same admission
-     path and sweep,
+     quantile rank/phi lookups, and leverage subspace/score sweeps
+     resolve through the same admission path and sweep,
   2. background deadline execution — a ``ServicePump`` thread owned by
      the pipeline holds per-query deadlines with no cooperative
      ``poll()`` calls from the ingest loop,
@@ -28,12 +29,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.leverage import score_query, subspace_query
 from repro.core.quantiles import quantile_query, rank_query
 from repro.data.synthetic import lowrank_stream, zipfian_stream
 from repro.query import QueryShedError
 from repro.runtime import EveryKSteps, StreamingPipeline, TenantQuota
 
-D, EPS_MAT, EPS_HH, EPS_Q, PHI = 32, 0.2, 0.02, 0.02, 0.05
+D, EPS_MAT, EPS_HH, EPS_Q, EPS_LEV, PHI = 32, 0.2, 0.02, 0.02, 0.2, 0.05
 
 mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
 pipe = StreamingPipeline(mesh, eps=EPS_MAT, policy=EveryKSteps(2),
@@ -43,8 +45,10 @@ pipe.add_hh_tenant("clicks", eps=EPS_HH, protocol="P1", engine="event", m=10,
                    quota=TenantQuota(max_pending=8, priority=5))
 pipe.add_hh_tenant("clicks-shard", eps=EPS_HH, protocol="P1", engine="shard")
 pipe.add_quantile_tenant("latency", eps=EPS_Q, protocol="P1", engine="event", m=10)
+pipe.add_leverage_tenant("rowspace", D, eps=EPS_LEV, protocol="P1",
+                         engine="event", m=10)
 
-# -- ingest all three workloads through one loop -----------------------------
+# -- ingest all four workloads through one loop ------------------------------
 rows = lowrank_stream(2048, D, rank=4, seed=0)
 keys, w = zipfian_stream(40_000, beta=100.0, universe=5000, seed=1)
 pairs = np.stack([keys.astype(np.float32), w.astype(np.float32)], axis=1)
@@ -55,6 +59,7 @@ for i in range(8):
     pipe.ingest("clicks", pairs[i * 5000 : (i + 1) * 5000])
     pipe.ingest("clicks-shard", pairs[i * 5000 : (i + 1) * 5000])
     pipe.ingest("latency", lat[i * 5000 : (i + 1) * 5000])
+    pipe.ingest("rowspace", rows[i * 256 : (i + 1) * 256])
 for t in pipe.tenants():
     s = pipe.stats(t)
     print(f"{t:13s} [{s.workload:8s}] steps={s.steps} publishes={s.publishes} "
@@ -70,9 +75,16 @@ t_sh = pipe.submit("clicks-shard", np.array([float(hot)], np.float32))
 t_p50 = pipe.submit("latency", quantile_query(0.5))
 t_p99 = pipe.submit("latency", quantile_query(0.99))
 t_rank = pipe.submit("latency", rank_query(20.0))
+t_sub = pipe.submit("rowspace", subspace_query(x))
+t_score = pipe.submit("rowspace", score_query(x))
 pipe.flush()
 est, bound, _ = t_mat.result()
 print(f"\n||A x||^2 ~ {est:.1f} (+- {bound:.1f})")
+sub_est, sub_bound, _ = t_sub.result()
+n_sampled = pipe.sampled_rows("rowspace")[0].shape[0]
+print(f"leverage sample ({n_sampled} rows): ||A x||^2 ~ {sub_est:.1f} "
+      f"(+- {sub_bound:.1f}, true {float(np.sum((rows @ x) ** 2)):.1f}), "
+      f"ridge score of x ~ {t_score.result()[0]:.2e}")
 print(f"clicks[{hot}] ~ {t_hh.result()[0]:.1f} (event)  "
       f"{t_sh.result()[0]:.1f} (shard)  true "
       f"{float(np.sum(w[keys == hot])):.1f}")
@@ -112,14 +124,17 @@ with tempfile.TemporaryDirectory() as ckdir:
         p.ingest("clicks", pairs[:5000])
         p.ingest("activations", jnp.asarray(rows[:256]))
         p.ingest("latency", lat[:5000])
+        p.ingest("rowspace", rows[:256])
     a1 = pipe.submit("clicks", np.array([float(hot)], np.float32))
     a2 = restored.submit("clicks", np.array([float(hot)], np.float32))
     b1, b2 = pipe.submit("activations", x), restored.submit("activations", x)
     c1 = pipe.submit("latency", quantile_query(0.99))
     c2 = restored.submit("latency", quantile_query(0.99))
+    d1 = pipe.submit("rowspace", subspace_query(x))
+    d2 = restored.submit("rowspace", subspace_query(x))
     pipe.flush(), restored.flush()
     assert a1.result() == a2.result() and b1.result() == b2.result()
-    assert c1.result() == c2.result()
+    assert c1.result() == c2.result() and d1.result() == d2.result()
     restored.close()
     print("\nrestart: resumed ingest answers bit-identical: OK")
 pipe.close()

@@ -1,3 +1,8 @@
+"""Fault-tolerant checkpointing: atomic, hashed, reshardable, async.
+
+Public surface re-exported from ``repro.ckpt.checkpoint`` — see its
+module docstring for the on-disk layout and guarantees.
+"""
 from repro.ckpt.checkpoint import (
     AsyncCheckpointer,
     latest_step,

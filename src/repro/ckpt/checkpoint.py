@@ -118,6 +118,11 @@ def save(directory: str, step: int, tree, *, extra: dict | None = None) -> str:
 
 
 def latest_step(directory: str) -> int | None:
+    """Newest fully-written step under ``directory`` (None when empty).
+
+    Only renamed ``step_*`` directories count — an in-flight ``.tmp-*``
+    write is invisible, which is what makes ``save`` atomic to readers.
+    """
     if not os.path.isdir(directory):
         return None
     steps = [
@@ -194,6 +199,12 @@ class AsyncCheckpointer:
         self._error: Exception | None = None
 
     def save(self, step: int, tree, *, extra: dict | None = None):
+        """Snapshot ``tree`` to host now, write it in a background thread.
+
+        Blocks only for the previous outstanding write (one at a time) and
+        the device->host transfer; the compression + disk I/O happen off
+        the caller's thread.  Write errors surface on the next ``wait``.
+        """
         self.wait()  # one outstanding write at a time
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
 
@@ -208,6 +219,7 @@ class AsyncCheckpointer:
         self._thread.start()
 
     def wait(self):
+        """Block until the outstanding write finishes; re-raise its error."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None

@@ -4,10 +4,11 @@ Layers:
   * fd.py          — Frequent Directions sketch (JAX + numpy oracle)
   * hh.py          — weighted Misra--Gries / SpaceSaving
   * quantiles.py   — mergeable GK-style quantile summaries + protocols
+  * leverage.py    — streaming ridge leverage scores + row-sampling protocols
   * sampling.py    — priority sampling (Duffield--Lund--Thorup)
   * protocols.py   — event-driven engine: HH P1-P4, matrix P1-P4 (paper-exact)
   * distributed.py — TPU shard_map super-step engine: matrix P1/P2/P3,
-                     HH P1, quantile P1
+                     HH P1, quantile P1, leverage P1
   * tracker.py     — continuous tracking facade for training integration
 """
 from repro.core.fd import (
@@ -23,6 +24,11 @@ from repro.core.fd import (
 )
 from repro.core.comm import CommReport
 from repro.core.hh import MGSketch, MGState, SpaceSaving, mg_init, mg_merge, mg_update
+from repro.core.leverage import (
+    LeverageP1Stream,
+    LeverageP2Stream,
+    run_leverage_protocol,
+)
 from repro.core.quantiles import (
     QuantileP1Stream,
     QuantileP3Stream,

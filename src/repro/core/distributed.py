@@ -38,6 +38,7 @@ from jax import lax
 
 from repro.core import fd as fdlib
 from repro.core import hh as hhlib
+from repro.core import leverage as levlib
 from repro.core import quantiles as qlib
 from repro.core.comm import CommReport
 
@@ -48,6 +49,7 @@ __all__ = [
     "P3State",
     "HHP1State",
     "QuantP1State",
+    "LevP1State",
     "p1_init",
     "p1_step",
     "p2_init",
@@ -62,6 +64,11 @@ __all__ = [
     "quant_p1_step",
     "quant_p1_table",
     "quant_p1_w_hat",
+    "lev_p1_init",
+    "lev_p1_step",
+    "lev_p1_table",
+    "lev_p1_mass",
+    "lev_p1_lambda",
     "p2_query",
     "p3_matrix",
     "protocol_matrix",
@@ -81,10 +88,12 @@ class ProtocolConfig(NamedTuple):
     s: int = 0  # P3 sample size (0 -> ceil(1/eps^2 * log(1/eps)))
     k: int = 0  # HH MG counters (0 -> ceil(2/eps), the MG_{eps/2} default)
     q_cap: int = 0  # quantile summary capacity (0 -> ceil(8/eps) + 8)
+    lev_cap: int = 0  # leverage reservoir capacity (0 -> ceil(4/eps), floor 16)
     use_pallas: bool = False
 
     def resolved(self) -> "ProtocolConfig":
-        """Fill size defaults: sketch rows, sample size, MG counters, quantile cap."""
+        """Fill size defaults: sketch rows, sample size, MG counters,
+        quantile cap, leverage reservoir cap."""
         import math
 
         l_default = max(2, math.ceil(4.0 / self.eps))
@@ -95,6 +104,7 @@ class ProtocolConfig(NamedTuple):
             s=self.s or s_default,
             k=self.k or max(2, math.ceil(2.0 / self.eps)),
             q_cap=self.q_cap or max(32, math.ceil(8.0 / self.eps) + 8),
+            lev_cap=self.lev_cap or levlib.default_cap(self.eps),
         )
 
 
@@ -530,13 +540,201 @@ def quant_p1_w_hat(st: QuantP1State) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Leverage-score row sampling, protocol 1 — deterministic threshold
+# forwarding over masked collectives.
+#
+# The leverage twin of quant_p1_step, mirroring the event-driven
+# ``LeverageP1Stream``: every shard (= site) scores its local rows against
+# the replicated coordinator factor ``(B^T B + lambda I)^+`` (B = residual
+# FD rows + the kept reservoir, lambda = eps * F_hat).  Rows whose score
+# crosses the broadcast threshold ``theta`` are shipped outright through a
+# masked ``all_gather`` and folded into the replicated reservoir with
+# ``lev_merge_spill`` (the all-pad candidate batch is the merge identity);
+# reservoir spill folds into the residual FD sketch, so overflow never
+# loses mass.  Everything below threshold rides the site FD sketch,
+# shipped on the matrix-P1 mass threshold ``(eps/2m) F_hat``.  Message
+# units follow the paper: a forwarded row or shipped sketch row costs one
+# row message, a sketch ship one scalar, and a rebroadcast (F_hat growth
+# or theta doubling) costs m.  The scoring factor refreshes ONLY on those
+# counted broadcasts, so sites never consume coordinator state that was
+# not paid for (the same information boundary f_hat/w_hat observe).
+# ---------------------------------------------------------------------------
+
+
+class LevP1State(NamedTuple):
+    """Leverage P1 shard state: per-site FD + replicated reservoir/factor data."""
+    site_fd: fdlib.FDState  # per-shard — residual (below-threshold) rows only
+    f_i: jax.Array  # per-shard () f32 — residual mass since last ship
+    coord_fd: fdlib.FDState  # replicated — residual sketch at C
+    res: levlib.LevState  # replicated — kept (row, score, weight) reservoir
+    f_res: jax.Array  # replicated — residual mass received at C
+    f_hat: jax.Array  # replicated — broadcast estimate of ||A||_F^2
+    theta: jax.Array  # replicated — forwarding threshold
+    factor: jax.Array  # replicated (d, d) — last BROADCAST scoring factor
+    comm: CommCounters
+
+
+def lev_p1_init(cfg: ProtocolConfig) -> LevP1State:
+    """Initial leverage P1 state for one site (tiled per shard by the runner)."""
+    cfg = cfg.resolved()
+    lam0 = levlib.default_lambda(cfg.eps, 1.0)
+    return LevP1State(
+        site_fd=fdlib.fd_init(cfg.l_site, cfg.d),
+        f_i=jnp.zeros((), jnp.float32),
+        coord_fd=fdlib.fd_init(cfg.l_coord, cfg.d),
+        res=levlib.lev_init(cfg.lev_cap, cfg.d),
+        f_res=jnp.zeros((), jnp.float32),
+        f_hat=jnp.ones((), jnp.float32),
+        theta=jnp.ones((), jnp.float32),
+        factor=jnp.eye(cfg.d, dtype=jnp.float32) / jnp.float32(lam0),
+        comm=CommCounters.zero(),
+    )
+
+
+def _lev_factor(coord_fd: fdlib.FDState, res: levlib.LevState,
+                f_hat: jax.Array, cfg: ProtocolConfig) -> jax.Array:
+    """The scoring factor ``(B^T B + lambda I)^{-1}`` (d, d) at broadcast time.
+
+    B stacks the residual FD rows and the kept reservoir rows; the ridge
+    ``lambda = eps * max(f_hat, 1)`` keeps the Gram positive definite, so
+    a plain eigh-based inverse is exact and jit-stable.
+    """
+    ball = jnp.concatenate([fdlib.fd_matrix(coord_fd), res.rows])
+    lam = jnp.float32(cfg.eps) * jnp.maximum(f_hat, 1.0)
+    g = jnp.matmul(ball.T, ball, preferred_element_type=jnp.float32)
+    g = g + lam * jnp.eye(cfg.d, dtype=jnp.float32)
+    evals, evecs = jnp.linalg.eigh(g)
+    inv = (evecs / jnp.maximum(evals, 1e-30)[None, :]) @ evecs.T
+    return inv
+
+
+def lev_p1_step(cfg: ProtocolConfig, st: LevP1State, rows: jax.Array) -> LevP1State:
+    """One super-step; call inside shard_map with ``rows`` = local (b, d)."""
+    cfg = cfg.resolved()
+    if rows.shape[0] == 0:  # static shape: nothing to absorb
+        return st
+    rows = rows.astype(jnp.float32)
+    # Score against the LAST BROADCAST factor: between counted broadcasts
+    # the sites' view of the coordinator summary is frozen, exactly like
+    # the event engine's self._factor.
+    scores = jnp.sum((rows @ st.factor) * rows, axis=1)
+    # A site forwards at most lev_cap rows per super-step (the reservoir
+    # can absorb no more): the top local scorers above theta.  Everything
+    # else rides the FD residual, so the envelope is indifferent to the
+    # cap — it only bounds per-step communication.
+    k_local = min(cfg.lev_cap, scores.shape[0])
+    kth = lax.top_k(scores, k_local)[0][-1]
+    fwd = (scores >= st.theta) & (scores >= kth)
+    n_fwd = lax.psum(jnp.sum(fwd.astype(jnp.int32)), cfg.axis)
+
+    # Masked ship of forwarded candidates: a non-forwarded lane contributes
+    # a zero-score triple, the identity of lev_merge, so gather-then-merge
+    # is exactly "the coordinator keeps what was forwarded".
+    cand_rows = lax.all_gather(
+        jnp.where(fwd[:, None], rows, 0.0), cfg.axis
+    ).reshape(-1, cfg.d)
+    cand_scores = lax.all_gather(jnp.where(fwd, scores, 0.0), cfg.axis).reshape(-1)
+    res, spilled = levlib.lev_merge_spill(
+        st.res, cand_rows, cand_scores, jnp.ones_like(cand_scores)
+    )
+    # Reservoir spill folds into the residual sketch (coordinator-local):
+    # overflow raises theta, it never drops mass.
+    coord_fd = fdlib.fd_update_stream(st.coord_fd, spilled, use_pallas=cfg.use_pallas)
+    spill_mass = jnp.sum(_row_sq(spilled))
+    overflow = spill_mass > 0.0
+    # Threshold propagation: once the reservoir overflows, the broadcast
+    # entry bar jumps to the smallest kept score (doubling at minimum) —
+    # a site learns it must beat the incumbents to forward at all.
+    theta = jnp.where(
+        overflow, jnp.maximum(st.theta * 2.0, res.scores[-1]), st.theta
+    )
+
+    # Below-threshold rows ride the site FD sketch (zero rows are free).
+    site_rows = jnp.where(fwd[:, None], 0.0, rows)
+    site_fd = fdlib.fd_update_stream(st.site_fd, site_rows, use_pallas=cfg.use_pallas)
+    f_i = st.f_i + jnp.sum(_row_sq(site_rows))
+
+    send = f_i >= (cfg.eps / (2 * cfg.m)) * st.f_hat
+    payload = jnp.where(send, fdlib.fd_matrix(site_fd), 0.0)  # (l_site, d)
+    gathered = lax.all_gather(payload, cfg.axis)  # (m, l_site, d)
+    coord_fd = fdlib.fd_update_stream(
+        coord_fd, gathered.reshape(-1, cfg.d), use_pallas=cfg.use_pallas
+    )
+    shipped_rows = lax.psum(
+        jnp.where(send, jnp.sum(_row_sq(fdlib.fd_matrix(site_fd)) > 0), 0), cfg.axis
+    )
+    n_scalar = lax.psum(send.astype(jnp.int32), cfg.axis)
+
+    f_res = st.f_res + spill_mass + lax.psum(jnp.where(send, f_i, 0.0), cfg.axis)
+    f_i = jnp.where(send, 0.0, f_i)
+    empty = fdlib.fd_init(cfg.l_site, cfg.d)
+    site_fd = jax.tree.map(lambda a, b: jnp.where(send, b, a), site_fd, empty)
+
+    mass_kept = jnp.sum(_row_sq(res.rows))
+    rebroadcast = (f_res + mass_kept) / st.f_hat > 1.0 + cfg.eps / 2.0
+    f_hat = jnp.where(rebroadcast, f_res + mass_kept, st.f_hat)
+    # The factor refreshes only when a broadcast is actually counted
+    # (mass growth or theta doubling) — sites keep scoring against the
+    # stale one until then.
+    did_broadcast = rebroadcast | overflow
+    factor = jnp.where(did_broadcast, _lev_factor(coord_fd, res, f_hat, cfg),
+                       st.factor)
+    comm = CommCounters(
+        scalar_msgs=st.comm.scalar_msgs + n_scalar,
+        row_msgs=st.comm.row_msgs + shipped_rows.astype(jnp.int32) + n_fwd,
+        broadcast_events=st.comm.broadcast_events
+        + rebroadcast.astype(jnp.int32)
+        + overflow.astype(jnp.int32),
+    )
+    return LevP1State(site_fd, f_i, coord_fd, res, f_res, f_hat, theta, factor,
+                      comm)
+
+
+def lev_p1_table(cfg: ProtocolConfig, st: LevP1State) -> "np.ndarray":
+    """The coordinator's published ``(n, d+2)`` [row | score | weight] table.
+
+    Assembled by the shared ``core.leverage.build_p1_table`` encoder (kept
+    reservoir rows at weight 1 beside the live residual-sketch rows at
+    weight 1) — the same deterministic estimator the event stream
+    publishes, so ``table_subspace`` inherits the FD envelope on both
+    engines.
+    """
+    import numpy as np
+
+    cfg = cfg.resolved()
+    scores = np.asarray(st.res.scores, np.float64)
+    live = scores > 0
+    return levlib.build_p1_table(
+        np.asarray(st.res.rows, np.float64)[live],
+        scores[live],
+        np.asarray(fdlib.fd_matrix(st.coord_fd)),
+        lev_p1_lambda(cfg, st),
+    )
+
+
+def lev_p1_mass(st: LevP1State) -> float:
+    """Coordinator estimate of ``||A||_F^2`` (residual + kept reservoir mass)."""
+    return float(st.f_res) + float(jnp.sum(_row_sq(st.res.rows)))
+
+
+def lev_p1_lambda(cfg: ProtocolConfig, st: LevP1State) -> float:
+    """The live ridge ``lambda = eps * max(f_hat, 1)`` of a shard state.
+
+    Based on the *broadcast* mass estimate — the same basis the in-step
+    scoring factor uses — so the score column of a published table and a
+    served score query for the same vector agree beyond timing lag.
+    """
+    return levlib.default_lambda(cfg.eps, float(st.f_hat))
+
+
+# ---------------------------------------------------------------------------
 # Runner: wraps a protocol step in shard_map over a mesh axis.
 # ---------------------------------------------------------------------------
 
 _INITS = {"P1": p1_init, "P2": p2_init, "P3": p3_init, "HHP1": hh_p1_init,
-          "QP1": quant_p1_init}
+          "QP1": quant_p1_init, "LP1": lev_p1_init}
 _STEPS = {"P1": p1_step, "P2": p2_step, "P3": p3_step, "HHP1": hh_p1_step,
-          "QP1": quant_p1_step}
+          "QP1": quant_p1_step, "LP1": lev_p1_step}
 _MATRICES = {
     "P1": lambda st: fdlib.fd_matrix(st.coord_fd),
     "P2": lambda st: fdlib.fd_matrix(st.coord_fd),
@@ -566,10 +764,11 @@ def protocol_frob(protocol: str, state, matrix=None) -> float:
 def make_protocol_runner(protocol: str, cfg: ProtocolConfig, mesh: jax.sharding.Mesh):
     """Return ``(init_state, step)``: one jitted shard_map super-step.
 
-    For the matrix protocols ``step(state, rows)`` consumes a global
-    ``(m * b, d)`` array sharded over ``cfg.axis``; for ``HHP1`` (element
-    keys) and ``QP1`` (quantile values) it consumes a ``(keys, weights)``
-    pair of global ``(m * b,)`` arrays sharded the same way.  ``state``
+    For the matrix protocols and ``LP1`` (leverage sampling)
+    ``step(state, rows)`` consumes a global ``(m * b, d)`` array sharded
+    over ``cfg.axis``; for ``HHP1`` (element keys) and ``QP1`` (quantile
+    values) it consumes a ``(keys, weights)`` pair of global ``(m * b,)``
+    arrays sharded the same way.  ``state``
     leaves that are per-site carry a leading ``m`` axis sharded over
     ``cfg.axis``; replicated leaves are replicated.
     """
@@ -586,9 +785,10 @@ def make_protocol_runner(protocol: str, cfg: ProtocolConfig, mesh: jax.sharding.
         "P3": ("rng",),
         "HHP1": ("site_mg", "w_i"),
         "QP1": ("site_q", "w_i", "w_pushed"),
+        "LP1": ("site_fd", "f_i"),
     }[protocol]
     # HH and quantile streams arrive as a (keys/values, weights) pair of
-    # 1-D arrays; matrix streams as one (n, d) row block.
+    # 1-D arrays; matrix and leverage streams as one (n, d) row block.
     if protocol in ("HHP1", "QP1"):
         data_spec = (P(cfg.axis), P(cfg.axis))
     else:

@@ -269,3 +269,32 @@ class FDSketch:
         b = self.matrix()
         m = a.T @ a - b.T @ b
         return float(np.linalg.norm(m, 2) / max(np.sum(a * a), 1e-300))
+
+    # -- persistence ---------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-able snapshot of the sketch (exact float round-trip).
+
+        The checkpoint convention every sketch in ``core`` follows
+        (``MGSketch``, ``QuantileSummary``): streams that embed an
+        ``FDSketch`` persist it through this, so a future field change
+        cannot silently miss an out-of-module serializer.
+        """
+        return {
+            "buf": self.buf.tolist(),
+            "fill": self.fill,
+            "frob": self.frob,
+            "delta_sum": self.delta_sum,
+            "n_seen": self.n_seen,
+        }
+
+    @classmethod
+    def from_state(cls, state: dict, l: int, d: int) -> "FDSketch":
+        """Rebuild a sketch from ``state_dict`` output (state identity)."""
+        fd = cls(l, d)
+        fd.buf = np.asarray(state["buf"], np.float64)
+        fd.fill = int(state["fill"])
+        fd.frob = float(state["frob"])
+        fd.delta_sum = float(state["delta_sum"])
+        fd.n_seen = int(state["n_seen"])
+        return fd

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: fused batched ridge-leverage scoring ``tau_j = x_j^T M x_j``.
+
+Leverage protocols score candidate rows against a precomputed factor
+``M = (B^T B + lambda I)^+`` (see ``core/leverage.py``).  Scoring S rows
+one at a time is S matvec pairs (``M @ x`` then ``x . (M x)``) with S
+dispatches; unfused batch scoring materializes the (S, d) product
+``X @ M`` in HBM before the multiply-and-reduce pass.  The kernel reuses
+the ``quadform`` tiling discipline — d innermost, the intermediate kept
+VMEM-resident — so scoring S rows costs one fused sweep over M:
+
+    grid = (N / BLOCK_N, d / BLOCK_D)          # d innermost
+    step (j, i):  y = X[blk_j, :] @ M[:, blk_i]              (MXU)
+                  o[blk_j] += sum_d y * X[blk_j, blk_i]      (VPU)
+
+The (S, d) intermediate ``X @ M`` never touches HBM: each (BLOCK_N,
+BLOCK_D) column slab of it lives only as ``y``.  VMEM working set:
+BLOCK_N*d (full query rows) + d*BLOCK_D (the M slab) + BLOCK_N*BLOCK_D
+f32 — with BLOCK_N=256, BLOCK_D=512, d<=2048 about 3 MiB, inside v5e
+VMEM, and every matmul tile is 128-lane aligned.
+
+``X`` is passed twice under two BlockSpecs (full rows for the contraction,
+the (j, i) slab for the reduce) — two views of one HBM buffer, not a copy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.quadform import DEFAULT_BLOCK_D, DEFAULT_BLOCK_N
+
+
+def _levscore_kernel(xf_ref, m_ref, xs_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    y = jax.lax.dot_general(
+        xf_ref[...].astype(jnp.float32),
+        m_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),  # X_blk @ M[:, blk_i]
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += jnp.sum(y * xs_ref[...].astype(jnp.float32), axis=1)[None, :]
+
+
+def levscore_pallas(
+    m: jax.Array,
+    x: jax.Array,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+) -> jax.Array:
+    """``tau_j = x_j^T M x_j`` for every row x_j of X.
+
+    m: (d, d) scoring factor, x: (N, d) rows -> (1, N) f32.
+    N % block_n == 0, d % block_d == 0 (pad upstream —
+    ``repro.kernels.ops.levscore`` does; zero pad rows/cols are exact
+    no-ops).  M need not be symmetric; only ``x^T M x`` is computed.
+    """
+    d, d2 = m.shape
+    n, dx = x.shape
+    if d != d2:
+        raise ValueError(f"scoring factor must be square, got {m.shape}")
+    if dx != d:
+        raise ValueError(f"row dim {dx} != factor dim {d}")
+    if n % block_n != 0 or d % block_d != 0:
+        raise ValueError(f"(N={n}, d={d}) must tile into ({block_n}, {block_d}) blocks")
+    grid = (n // block_n, d // block_d)
+    return pl.pallas_call(
+        _levscore_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda j, i: (j, 0)),  # X, full rows
+            pl.BlockSpec((d, block_d), lambda j, i: (0, i)),  # M, streams d
+            pl.BlockSpec((block_n, block_d), lambda j, i: (j, i)),  # X slab
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(x, m, x)

@@ -18,6 +18,7 @@ from repro.kernels.flash_attention import (
     DEFAULT_BLOCK_Q,
     flash_attention_pallas,
 )
+from repro.kernels.levscore import levscore_pallas
 from repro.kernels.quadform import (
     DEFAULT_BLOCK_D,
     DEFAULT_BLOCK_N,
@@ -25,7 +26,14 @@ from repro.kernels.quadform import (
     quadform_packed_pallas,
 )
 
-__all__ = ["fd_gram", "fd_project", "flash_attention", "quadform", "quadform_packed"]
+__all__ = [
+    "fd_gram",
+    "fd_project",
+    "flash_attention",
+    "levscore",
+    "quadform",
+    "quadform_packed",
+]
 
 
 def _on_tpu() -> bool:
@@ -106,6 +114,40 @@ def quadform_packed(
     xp = jnp.pad(x, ((0, 0), (0, np_ - n), (0, dp - d)))
     out = _quadform_packed_padded(bp, xp, block_n=block_n, block_d=block_d, interpret=interpret)
     return out[:, 0, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d", "interpret"))
+def _levscore_padded(m, x, *, block_n, block_d, interpret):
+    return levscore_pallas(m, x, block_n=block_n, block_d=block_d, interpret=interpret)
+
+
+def levscore(
+    m: jax.Array,
+    x: jax.Array,
+    *,
+    block_n: int = 0,
+    block_d: int = 0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched ``x_j^T M x_j`` via the Pallas kernel, (d, d) x (N, d) -> (N,).
+
+    Pads N/d to block multiples; zero pad rows/cols of M and X contribute
+    zero to every quadratic form, so padding is exact.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    d = m.shape[0]
+    n = x.shape[0]
+    if block_n <= 0:
+        block_n = min(DEFAULT_BLOCK_N, _pad_to(max(n, 1), 128))
+    if block_d <= 0:
+        block_d = min(DEFAULT_BLOCK_D, _pad_to(d, 128))
+    dp = _pad_to(d, block_d)
+    np_ = _pad_to(max(n, block_n), block_n)
+    mp = jnp.pad(m, ((0, dp - d), (0, dp - d)))
+    xp = jnp.pad(x, ((0, np_ - n), (0, dp - d)))
+    out = _levscore_padded(mp, xp, block_n=block_n, block_d=block_d, interpret=interpret)
+    return out[0, :n]
 
 
 @functools.partial(

@@ -10,15 +10,27 @@ import jax.numpy as jnp
 
 
 def ref_fd_gram(b: jax.Array) -> jax.Array:
+    """FD Gram product ``G = B @ B.T`` in f32.  b: (L, d) -> (L, L)."""
     b32 = b.astype(jnp.float32)
     return jnp.matmul(b32, b32.T, preferred_element_type=jnp.float32)
 
 
 def ref_fd_project(w: jax.Array, u: jax.Array, b: jax.Array) -> jax.Array:
+    """FD shrink projection ``diag(w) @ (U.T @ B)``.
+
+    w: (L,), u: (L, L), b: (L, d) -> (L, d) in b's dtype.
+    """
     out = w[:, None].astype(jnp.float32) * jnp.matmul(
         u.astype(jnp.float32).T, b.astype(jnp.float32), preferred_element_type=jnp.float32
     )
     return out.astype(b.dtype)
+
+
+def ref_levscore(m: jax.Array, x: jax.Array) -> jax.Array:
+    """Batched quadratic form ``tau_j = x_j^T M x_j``.  m: (d, d), x: (N, d) -> (N,)."""
+    xf = x.astype(jnp.float32)
+    xm = jnp.matmul(xf, m.astype(jnp.float32), preferred_element_type=jnp.float32)
+    return jnp.sum(xm * xf, axis=1)
 
 
 def ref_quadform(b: jax.Array, x: jax.Array) -> jax.Array:

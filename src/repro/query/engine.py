@@ -26,8 +26,13 @@ them are frequency point-lookups — each "direction" is a single element id
 hold a sorted ``(n, 2)`` [value, rank-estimate] table
 (``core.quantiles.encode_quantile_snapshot``); each query is a ``(2,)``
 ``[mode, arg]`` row — rank-at-value or phi-quantile — answered by one
-searchsorted pass.  All three kinds share one admission path and one
-packed dispatch loop.
+searchsorted pass.  ``meta["workload"] == "leverage"`` snapshots hold an
+``(n, d+2)`` [row | score | weight] importance-weighted row sample
+(``core.leverage.encode_leverage_snapshot``); each query is a ``(d+1,)``
+``[mode, x]`` row — a subspace query ``sum_i w_i (a_i . x)^2`` served by
+the shared ``quadform`` kernel over the weighted sample, or a ridge
+leverage score served by the fused ``levscore`` kernel.  All four kinds
+share one admission path and one packed dispatch loop.
 """
 from __future__ import annotations
 
@@ -74,7 +79,7 @@ def _svd_spectrum(matrix: np.ndarray) -> Spectrum:
 
 
 def _workload(snap: SketchSnapshot) -> str:
-    """A snapshot's workload kind: ``"matrix"`` (default) or ``"hh"``."""
+    """A snapshot's workload kind (``"matrix"`` when untagged)."""
     return snap.meta.get("workload", "matrix")
 
 
@@ -82,8 +87,9 @@ class QueryEngine:
     """Serves batched queries against pinned ``SketchStore`` snapshots.
 
     Dispatches per snapshot workload: matrix snapshots ride the quadform
-    paths (pallas / cached / naive), HH snapshots ride a vectorized
-    point-lookup.  ``query_packed`` packs many tenants per engine call.
+    paths (pallas / cached / naive), HH and quantile snapshots ride
+    vectorized lookups, leverage snapshots ride weighted quadform /
+    levscore sweeps.  ``query_packed`` packs many tenants per engine call.
     """
 
     def __init__(
@@ -99,6 +105,8 @@ class QueryEngine:
         self.cache_size = cache_size
         self.interpret = interpret
         self._cache: OrderedDict[tuple[str, int], Spectrum] = OrderedDict()
+        # Leverage tenants' ridge factors, same LRU discipline as _cache.
+        self._factor_cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
         self.cache_hits = 0
         self.cache_misses = 0
         self.packed_launches = 0  # kernel launches spent by query_packed
@@ -114,26 +122,43 @@ class QueryEngine:
         """
         return self._spectrum_for(self.store.get(tenant, version))
 
-    def _spectrum_for(self, snap: SketchSnapshot) -> Spectrum:
-        key = (snap.tenant, snap.version)
-        hit = self._cache.get(key)
+    def _lru_get(self, cache: OrderedDict, key, compute):
+        """One LRU discipline for every per-version cache (spectra, ridge
+        factors): shared hit/miss counters, move-to-end on hit, evict the
+        oldest past ``cache_size``.  Versions are immutable, so a hit can
+        never be stale; publishing changes the key, which IS the
+        invalidation."""
+        hit = cache.get(key)
         if hit is not None:
-            self._cache.move_to_end(key)
+            cache.move_to_end(key)
             self.cache_hits += 1
             return hit
         self.cache_misses += 1
-        spec = _svd_spectrum(snap.matrix)
-        self._cache[key] = spec
-        while len(self._cache) > self.cache_size:
-            self._cache.popitem(last=False)
-        return spec
+        value = compute()
+        cache[key] = value
+        while len(cache) > self.cache_size:
+            cache.popitem(last=False)
+        return value
+
+    def _spectrum_for(self, snap: SketchSnapshot) -> Spectrum:
+        return self._lru_get(
+            self._cache,
+            (snap.tenant, snap.version),
+            lambda: _svd_spectrum(snap.matrix),
+        )
 
     def cache_stats(self) -> dict[str, int]:
-        """Spectrum-cache hit/miss/entry counters."""
+        """Hit/miss/entry counters for the per-version caches.
+
+        ``hits``/``misses`` cover both caches (matrix spectra and leverage
+        ridge factors share one counter pair); ``entries`` is the spectrum
+        cache, ``factor_entries`` the leverage factor cache.
+        """
         return {
             "hits": self.cache_hits,
             "misses": self.cache_misses,
             "entries": len(self._cache),
+            "factor_entries": len(self._factor_cache),
         }
 
     # -- batched quadratic forms --------------------------------------------
@@ -195,7 +220,8 @@ class QueryEngine:
         common N into (T, N, d) — and served by ONE ``quadform_packed``
         Pallas launch.  Shapes that appear only once fall back to the
         per-tenant kernel; HH and quantile requests are served by their
-        searchsorted lookup paths (no kernel launch) in the same call.
+        searchsorted lookup paths (no kernel launch) and leverage
+        requests by their per-tenant weighted sweeps in the same call.
         Results come back in request order, one ``QueryResult`` each,
         identical (to fp tolerance) to serial per-tenant ``query_batch``.
         """
@@ -317,6 +343,81 @@ class QueryEngine:
         out[is_quant] = table_quantile(mat, snap.frob, args[is_quant])
         return out
 
+    def _leverage_batch(self, snap: SketchSnapshot, x: np.ndarray) -> np.ndarray:
+        """Leverage lookups: each query row is ``(d+1,)`` ``[mode, x_1..x_d]``.
+
+        Mode ``QUERY_SUBSPACE`` (0) serves the importance-weighted
+        ``||A x||^2`` estimate ``sum_i w_i (a_i . x)^2`` — the weighted
+        sample rows ride the same ``quadform`` kernel matrix snapshots
+        use.  Mode ``QUERY_SCORE`` (1) serves the approximate ridge
+        leverage score of ``x`` against the published sample's Gram via
+        the fused ``levscore`` kernel (the snapshot's ``meta["lam"]``
+        pins the ridge the sample was published at).
+
+        The batch's ``error_bound`` (``eps * F_hat``) certifies the
+        SUBSPACE answers only; a ridge score lives on the ~[0, d_eff]
+        scale and carries no additive certificate — score answers are
+        diagnostics, not bounded estimates (see ``core.leverage.score_query``).
+        """
+        import jax.numpy as jnp
+
+        from repro.core.leverage import (
+            QUERY_SCORE,
+            QUERY_SUBSPACE,
+            serve_subspace,
+        )
+        from repro.kernels.ops import levscore
+
+        mat = np.asarray(snap.matrix)
+        d = mat.shape[1] - 2
+        q = np.asarray(x, np.float32)
+        if q.ndim != 2 or q.shape[1] != d + 1:
+            raise ValueError(
+                f"tenant {snap.tenant!r}: leverage queries must be (n, {d + 1}) "
+                f"[mode, x] rows, got {np.asarray(x).shape}"
+            )
+        modes, dirs = q[:, 0], q[:, 1:]
+        is_sub = modes == QUERY_SUBSPACE
+        is_score = modes == QUERY_SCORE
+        if not np.all(is_sub | is_score):
+            raise ValueError(
+                f"tenant {snap.tenant!r}: leverage query mode must be "
+                f"{QUERY_SUBSPACE} (subspace) or {QUERY_SCORE} (score)"
+            )
+        out = np.empty(q.shape[0], np.float32)
+        if np.any(is_sub):
+            out[is_sub] = serve_subspace(mat, dirs[is_sub], interpret=self.interpret)
+        if np.any(is_score):
+            out[is_score] = np.asarray(levscore(
+                jnp.asarray(self._factor_for(snap), jnp.float32),
+                jnp.asarray(dirs[is_score]),
+                interpret=self.interpret,
+            ))
+        return out
+
+    def _factor_for(self, snap: SketchSnapshot) -> np.ndarray:
+        """The leverage snapshot's ridge scoring factor, LRU-cached.
+
+        Keyed ``(tenant, version)`` like ``_spectrum_for`` (same shared
+        LRU discipline via ``_lru_get``; the version pins ``meta["lam"]``),
+        which keeps repeated score sweeps against a pinned snapshot from
+        redoing the O(d^3) pseudo-inverse per batch.
+        """
+        from repro.core.leverage import (
+            decode_leverage_snapshot,
+            default_lambda,
+            ridge_factor,
+        )
+
+        def compute() -> np.ndarray:
+            rows, _, w = decode_leverage_snapshot(np.asarray(snap.matrix))
+            lam = float(snap.meta.get("lam", default_lambda(snap.eps, snap.frob)))
+            return ridge_factor(rows, w, lam)
+
+        return self._lru_get(
+            self._factor_cache, (snap.tenant, snap.version), compute
+        )
+
     def _cached_batch(self, snap: SketchSnapshot, x: np.ndarray) -> np.ndarray:
         spec = self._spectrum_for(snap)
         proj = (x @ spec.vt.T) * spec.s[None, :]
@@ -348,10 +449,13 @@ class QueryEngine:
         return float(np.sum(spec.s**2) / max(float(spec.s[0] ** 2), 1e-30))
 
 
-# Lookup workloads: snapshot kinds served by a searchsorted pass instead of
-# a quadform kernel launch.  One dispatch point for query_batch and
-# query_packed, so adding a kind cannot desynchronize the two paths.
+# Non-matrix workloads: snapshot kinds served by their own per-tenant path
+# (searchsorted for hh/quantile, weighted quadform / levscore sweeps for
+# leverage) instead of joining the cross-tenant quadform pack.  One
+# dispatch point for query_batch and query_packed, so adding a kind cannot
+# desynchronize the two paths.
 _LOOKUPS = {
     "hh": QueryEngine._hh_batch,
     "quantile": QueryEngine._quantile_batch,
+    "leverage": QueryEngine._leverage_batch,
 }

@@ -27,6 +27,7 @@ from repro.runtime.policies import (
 )
 from repro.runtime.registry import (
     HHProtocol,
+    LeverageProtocol,
     ProtocolSpec,
     QuantileProtocol,
     SketchProtocol,
@@ -41,6 +42,7 @@ __all__ = [
     "EveryKSteps",
     "FrobDrift",
     "HHProtocol",
+    "LeverageProtocol",
     "OnDemand",
     "ProtocolSpec",
     "PublishPolicy",

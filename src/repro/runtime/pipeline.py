@@ -6,20 +6,24 @@ previously split that loop across three layers the caller had to glue by
 hand (tracker updates, store publishes, service flushes).  The pipeline
 owns the whole lifecycle for a fleet of tenants, and a tenant may be any
 workload kind in the registry: matrix tracking (paper Section 5), weighted
-heavy hitters (Section 4), or distributed quantiles (Yi--Zhang)::
+heavy hitters (Section 4), distributed quantiles (Yi--Zhang), or
+leverage-score row sampling (Boutsidis--Woodruff--Zhong)::
 
     pipeline = StreamingPipeline(mesh, policy=EveryKSteps(4))
     pipeline.add_tenant("run-a", d=64)                       # matrix
     pipeline.add_hh_tenant("clicks", eps=0.05,
                            quota=TenantQuota(max_pending=64, priority=5))
     pipeline.add_quantile_tenant("latency", eps=0.02)
+    pipeline.add_leverage_tenant("rowspace", d=64, eps=0.1)
 
     pipeline.ingest("run-a", rows)         # super-step + policy publish
     pipeline.ingest("clicks", pairs)       # (n, 2) [element, weight] rows
     pipeline.ingest("latency", samples)    # (n, 2) [value, weight] rows
+    pipeline.ingest("rowspace", rows)      # (n, d) rows, like matrix
     t = pipeline.submit("run-a", x, deadline_s=0.005)
     e = pipeline.submit("clicks", np.array([element_id], np.float32))
     q = pipeline.submit("latency", quantile_query(0.99))
+    s = pipeline.submit("rowspace", subspace_query(x))
     pipeline.poll()                        # deadline pump (packed sweep)
     estimate, bound, version = t.result()
 
@@ -27,11 +31,13 @@ Ingest drives the tenant's protocol one super-step and asks its
 ``PublishPolicy`` whether the live state drifted enough to become a new
 immutable ``SketchStore`` version (matrix tenants publish their sketch B,
 HH tenants their encoded estimate table, quantile tenants their sorted
-[value, rank] table).  Queries are admitted through a
+[value, rank] table, leverage tenants their [row | score | weight]
+sample).  Queries are admitted through a
 ``PackedQueryService`` under per-tenant ``TenantQuota``s: overflow is shed
 with a typed error, and each dispatch sweep packs tenants in priority
 order — matrix batches that share (l, d) ride one packed quadform launch,
-HH and quantile lookups ride the same sweep without a kernel.  Deadlines
+HH and quantile lookups ride the same sweep without a kernel, leverage
+subspace/score queries ride weighted quadform / levscore sweeps.  Deadlines
 are held either cooperatively (every ``ingest`` pumps ``poll()``) or by a
 ``ServicePump`` background thread the pipeline owns — pass
 ``pump_interval_s`` (or call ``start_pump``) and expiry fires even while
@@ -73,7 +79,7 @@ class TenantStats(NamedTuple):
     latest_version: int | None
     live_frob: float  # live stream-mass estimate (||A||_F^2, or W for HH/quantile)
     comm_total: int  # protocol messages spent (paper units)
-    workload: str = "matrix"  # "matrix" | "hh" | "quantile"
+    workload: str = "matrix"  # "matrix" | "hh" | "quantile" | "leverage"
 
 
 class _MatrixAdapter:
@@ -239,6 +245,39 @@ class _QuantileAdapter(_RegistryAdapter):
                 f"quantile query mode must be {QUERY_RANK} (rank) or "
                 f"{QUERY_QUANTILE} (phi-quantile), got {x[0]}"
             )
+
+
+class _LeverageAdapter(_RegistryAdapter):
+    """Registry adapter for ``LeverageProtocol`` tenants."""
+
+    workload = "leverage"
+
+    def check_query(self, x: np.ndarray) -> None:
+        """Reject wrong-shape queries at the submitter (see pipeline.submit)."""
+        from repro.core.leverage import QUERY_SCORE, QUERY_SUBSPACE
+
+        d = self.proto.d
+        if x.shape != (d + 1,):
+            raise ValueError(
+                f"leverage tenants take a ({d + 1},) [mode, x] query, got "
+                f"shape {x.shape} (use core.leverage.subspace_query / "
+                "score_query)"
+            )
+        if x[0] not in (QUERY_SUBSPACE, QUERY_SCORE):
+            raise ValueError(
+                f"leverage query mode must be {QUERY_SUBSPACE} (subspace) or "
+                f"{QUERY_SCORE} (score), got {x[0]}"
+            )
+
+    def publish(self, store, tenant: str, meta: dict):
+        """Publish the sample table, pinning the live ridge in the metadata."""
+        return super().publish(
+            store, tenant, {"lam": self.proto.lam(), "d": self.proto.d, **meta}
+        )
+
+    def ctor_meta(self) -> dict:
+        """Construction parameters ``load`` needs to rebuild the tenant."""
+        return {**super().ctor_meta(), "d": self.proto.d}
 
 
 class _Tenant:
@@ -440,12 +479,59 @@ class StreamingPipeline:
         self._register(tenant, _QuantileAdapter(proto, kw), policy, quota)
         return proto
 
+    def add_leverage_tenant(
+        self,
+        tenant: str,
+        d: int,
+        *,
+        eps: float | None = None,
+        protocol: str = "P1",
+        engine: str = "event",
+        policy: PublishPolicy | None = None,
+        quota: TenantQuota | None = None,
+        **kw,
+    ):
+        """Register a leverage-score row-sampling tenant; returns its protocol.
+
+        ``engine="event"`` runs the paper-style simulator in-process
+        (``m`` defaults to the mesh axis size; pass ``m=...`` to override);
+        ``engine="shard"`` runs the shard_map threshold-forwarding
+        super-step engine on the pipeline's mesh.  Extra ``kw`` pass
+        through to the registered protocol factory — event P1 takes
+        ``l``/``s``/``seed``, event P2 ``s``/``seed``, the shard engine
+        ``lev_cap``/``l_site``/``l_coord``/``use_pallas`` — and are
+        recorded so ``load`` rebuilds the tenant identically.
+        """
+        from repro.runtime.registry import create_protocol
+
+        if tenant in self._tenants:
+            raise ValueError(f"tenant {tenant!r} already registered")
+        if engine not in ("event", "shard"):
+            raise ValueError(
+                f"unknown leverage engine {engine!r}; choose 'event' or 'shard'"
+            )
+        eps = self.default_eps if eps is None else eps
+        kw = dict(kw)
+        if engine == "shard":
+            proto = create_protocol(
+                protocol, engine="shard", kind="leverage",
+                mesh=self.mesh, d=d, eps=eps, axis=self.axis, **kw,
+            )
+        else:
+            kw.setdefault("m", self.mesh.shape[self.axis])
+            proto = create_protocol(
+                protocol, engine="event", kind="leverage", d=d, eps=eps, **kw,
+            )
+        self._register(tenant, _LeverageAdapter(proto, kw), policy, quota)
+        return proto
+
     def tenants(self) -> list[str]:
         """Registered tenant names (sorted)."""
         return sorted(self._tenants)
 
     def workload(self, tenant: str) -> str:
-        """The tenant's workload kind: ``"matrix"``, ``"hh"``, or ``"quantile"``."""
+        """The tenant's workload kind (``"matrix"``, ``"hh"``, ``"quantile"``,
+        or ``"leverage"``)."""
         return self._tenant(tenant).adapter.workload
 
     def tracker(self, tenant: str):
@@ -473,9 +559,9 @@ class StreamingPipeline:
     def ingest(self, tenant: str, rows) -> "object | None":
         """Absorb one super-step batch; auto-publish per the tenant's policy.
 
-        Matrix tenants take an (n, d) row batch, HH tenants an (n, 2)
-        [element, weight] batch, quantile tenants an (n, 2) [value,
-        weight] batch.  Returns the new ``SketchSnapshot`` if the policy
+        Matrix and leverage tenants take an (n, d) row batch, HH tenants
+        an (n, 2) [element, weight] batch, quantile tenants an (n, 2)
+        [value, weight] batch.  Returns the new ``SketchSnapshot`` if the policy
         fired, else None.  When no ``ServicePump`` is running this also
         pumps the packed service's deadlines cooperatively, so a pure
         ingest loop still serves queries on time.  A pump that died on an
@@ -535,8 +621,10 @@ class StreamingPipeline:
 
         Matrix tenants take a (d,) direction; HH tenants a (1,) element
         id; quantile tenants a (2,) [mode, arg] row (see
-        ``core.quantiles.rank_query`` / ``quantile_query``).
-        The tenant must have at least one published snapshot, and ``x``
+        ``core.quantiles.rank_query`` / ``quantile_query``); leverage
+        tenants a (d+1,) [mode, x] row (see ``core.leverage.subspace_query``
+        / ``score_query``).  The tenant must have at least one published
+        snapshot, and ``x``
         must match the tenant's workload shape: admitting a query nothing
         can answer would poison every later packed flush (the service
         keeps failing batches pending by design), wedging other tenants'
@@ -595,6 +683,22 @@ class StreamingPipeline:
         if snap.meta.get("workload") != "quantile":
             raise ValueError(f"tenant {tenant!r} is not a quantile tenant")
         return table_quantile(snap.matrix, snap.frob, phis)
+
+    def sampled_rows(
+        self, tenant: str, *, version: int | None = None
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The published leverage sample as ``(rows, scores, weights)``.
+
+        Reads the pinned store version — the same [row | score | weight]
+        table packed subspace/score queries are answered from, so restart
+        recovery covers it too.
+        """
+        from repro.core.leverage import decode_leverage_snapshot
+
+        snap = self.store.get(tenant, version)
+        if snap.meta.get("workload") != "leverage":
+            raise ValueError(f"tenant {tenant!r} is not a leverage tenant")
+        return decode_leverage_snapshot(snap.matrix)
 
     # -- persistence / accounting -------------------------------------------
 
@@ -733,6 +837,17 @@ class StreamingPipeline:
             elif meta["workload"] == "quantile":
                 pipe.add_quantile_tenant(
                     name,
+                    eps=float(ctor["eps"]),
+                    protocol=str(ctor["protocol"]),
+                    engine=str(ctor["engine"]),
+                    policy=policy,
+                    quota=quota,
+                    **ctor["kw"],
+                )
+            elif meta["workload"] == "leverage":
+                pipe.add_leverage_tenant(
+                    name,
+                    int(ctor["d"]),
                     eps=float(ctor["eps"]),
                     protocol=str(ctor["protocol"]),
                     engine=str(ctor["engine"]),

@@ -33,7 +33,17 @@ and one registration point:
         quantile(phis)           vectorized eps-approximate phi-quantiles
         snapshot_matrix()        publishable (n, 2) encoding for the store
 
-Both interfaces also speak the pipeline checkpoint contract —
+  * ``LeverageProtocol`` — the leverage-score row-sampling interface::
+
+        step(rows, sites=None)   absorb an (n, d) batch of stream rows
+        sampled_rows()           coordinator (k, d+2) [row|score|weight] table
+        total_weight()           coordinator estimate of ||A||_F^2
+        lam()                    the live ridge lambda the sample is scored at
+        subspace_query(x)        importance-weighted ||A x||^2 estimate
+        score_batch(xs)          ridge leverage scores via ops.levscore
+        snapshot_matrix()        publishable (n, d+2) encoding for the store
+
+All interfaces also speak the pipeline checkpoint contract —
 ``state_payload()`` / ``restore_payload()`` — so a ``StreamingPipeline``
 can persist live protocol state (not just published snapshots) and resume
 ingest mid-stream after a coordinator restart.
@@ -54,6 +64,7 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.core import distributed as dist
+from repro.core import leverage as lev
 from repro.core import protocols as event
 from repro.core import quantiles as quant
 from repro.core.comm import CommReport
@@ -63,6 +74,7 @@ __all__ = [
     "SketchProtocol",
     "HHProtocol",
     "QuantileProtocol",
+    "LeverageProtocol",
     "ProtocolSpec",
     "register_protocol",
     "get_spec",
@@ -304,6 +316,85 @@ class QuantileProtocol(_StatefulStream, abc.ABC):
         return quant.encode_quantile_snapshot(self.table())
 
 
+class LeverageProtocol(_StatefulStream, abc.ABC):
+    """Uniform leverage-score row-sampling interface over every engine."""
+
+    d: int
+
+    def __init__(self, name: str, engine: str, m: int, eps: float, d: int):
+        super().__init__(name, engine, "leverage", m, eps)
+        self.d = d
+        # Live ridge factor, memoized until the next step() — repeated
+        # score_batch sweeps against unchanged state skip the O(d^3) pinv
+        # (the serving engine caches the same factor per (tenant, version)).
+        self._live_factor: np.ndarray | None = None
+
+    def check_rows(self, rows) -> np.ndarray:
+        """Normalize an ingest batch to finite f32 ``(n, d)`` rows."""
+        arr = np.asarray(rows, np.float32)
+        if arr.ndim != 2 or arr.shape[1] != self.d:
+            raise ValueError(
+                f"leverage ingest batch must be (n, {self.d}) rows, got shape "
+                f"{np.asarray(rows).shape}"
+            )
+        if arr.size and not np.all(np.isfinite(arr)):
+            raise ValueError("leverage stream rows must be finite in float32")
+        return arr
+
+    @abc.abstractmethod
+    def step(self, rows: np.ndarray, sites: np.ndarray | None = None) -> None:
+        """Absorb an (n, d) batch of stream rows (continuing prior state)."""
+
+    @abc.abstractmethod
+    def sampled_rows(self) -> np.ndarray:
+        """The coordinator's ``(k, d+2)`` [row | score | weight] table."""
+
+    @abc.abstractmethod
+    def total_weight(self) -> float:
+        """Coordinator estimate of the stream mass ``||A||_F^2``."""
+
+    @abc.abstractmethod
+    def lam(self) -> float:
+        """The live ridge ``lambda`` the sample is scored at."""
+
+    @abc.abstractmethod
+    def comm_report(self) -> CommReport:
+        """Messages spent so far, in the paper's units."""
+
+    # -- queries: the serving engine's kernel paths, shared verbatim ---------
+
+    def subspace_query_batch(self, x: np.ndarray) -> np.ndarray:
+        """Importance-weighted ``||A x_j||^2`` per (d,) direction row.
+
+        Rides ``core.leverage.serve_subspace`` — the exact code path the
+        serving engine's leverage sweeps launch, so live and published
+        answers can never diverge.
+        """
+        return lev.serve_subspace(self.sampled_rows(), np.asarray(x, np.float32))
+
+    def subspace_query(self, x: np.ndarray) -> float:
+        """Single-direction ``||A x||^2`` estimate over the shared path."""
+        return float(self.subspace_query_batch(np.asarray(x)[None, :])[0])
+
+    def score_batch(self, x: np.ndarray) -> np.ndarray:
+        """Ridge leverage score per queried vector via ``ops.levscore``."""
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import levscore
+
+        if self._live_factor is None:
+            rows, _, w = lev.decode_leverage_snapshot(self.sampled_rows())
+            self._live_factor = lev.ridge_factor(rows, w, self.lam())
+        x = np.asarray(x, np.float32)
+        return np.asarray(
+            levscore(jnp.asarray(self._live_factor, jnp.float32), jnp.asarray(x))
+        )
+
+    def snapshot_matrix(self) -> np.ndarray:
+        """Publishable ``(n, d+2)`` [row|score|weight] encoding of the state."""
+        return lev.encode_leverage_snapshot(self.sampled_rows())
+
+
 @dataclass(frozen=True)
 class ProtocolSpec:
     """One registered (kind, engine, protocol) implementation.
@@ -322,7 +413,7 @@ class ProtocolSpec:
     factory: Callable[..., _StatefulStream]
     err_factor: float = 1.0
     description: str = ""
-    kind: str = "matrix"  # "matrix" | "hh" | "quantile"
+    kind: str = "matrix"  # "matrix" | "hh" | "quantile" | "leverage"
 
 
 _REGISTRY: dict[tuple[str, str, str], ProtocolSpec] = {}
@@ -383,6 +474,8 @@ def create_protocol(
     (element, weight) pairs).
     Quantiles:     pass ``kind="quantile"`` (streams are (value, weight)
     pairs; see ``QuantileProtocol``).
+    Leverage:      pass ``kind="leverage"`` (streams are (n, d) row
+    batches like matrix tracking; see ``LeverageProtocol``).
     """
     return get_spec(name, engine, kind).factory(**kw)
 
@@ -538,6 +631,66 @@ class EventQuantileProtocol(QuantileProtocol):
         self._rr = int(meta["rr"])
         self.rows_seen = int(meta["rows_seen"])
         self._cached_result = None
+
+
+class EventLeverageProtocol(LeverageProtocol):
+    """Paper-style event-at-a-time leverage engine behind the interface."""
+
+    def __init__(self, name: str, stream_cls, *, m: int, eps: float, d: int,
+                 seed: int = 0, **kw: Any):
+        super().__init__(name, "event", m, eps, d)
+        self._rng = np.random.default_rng(seed)
+        self._stream = stream_cls(m, eps, d, self._rng, **kw)
+        self._rr = 0  # round-robin cursor for site-less feeds
+        self._cached_result: lev.LeverageResult | None = None
+
+    def step(self, rows: np.ndarray, sites: np.ndarray | None = None) -> None:
+        """Absorb an (n, d) row batch (round-robin sites if site-less)."""
+        rows = self.check_rows(rows)
+        if sites is None:
+            sites = (np.arange(rows.shape[0]) + self._rr) % self.m
+            self._rr = int((self._rr + rows.shape[0]) % self.m)
+        self._stream.step(rows, np.asarray(sites))
+        self.rows_seen += int(rows.shape[0])
+        self._cached_result = None
+        self._live_factor = None
+
+    def _result(self) -> lev.LeverageResult:
+        if self._cached_result is None:
+            self._cached_result = self._stream.result()
+        return self._cached_result
+
+    def sampled_rows(self) -> np.ndarray:
+        """The coordinator's current [row | score | weight] table."""
+        return np.asarray(self._result().table)
+
+    def total_weight(self) -> float:
+        """Coordinator estimate of the stream mass ``||A||_F^2``."""
+        return float(self._result().f_hat)
+
+    def lam(self) -> float:
+        """The live ridge ``lambda`` the sample is scored at."""
+        return float(self._result().lam)
+
+    def comm_report(self) -> CommReport:
+        """Messages spent so far, in the paper's units."""
+        return self._stream.comm.report(self.m)
+
+    def state_payload(self) -> tuple[dict[str, np.ndarray], dict]:
+        """Full stream state as JSON-able meta (leverage state is small)."""
+        return {}, {
+            "stream": self._stream.state_dict(),
+            "rr": self._rr,
+            "rows_seen": self.rows_seen,
+        }
+
+    def restore_payload(self, arrays: dict[str, np.ndarray], meta: dict) -> None:
+        """Restore a ``state_payload`` capture bit-identically."""
+        self._stream.load_state(meta["stream"])
+        self._rr = int(meta["rr"])
+        self.rows_seen = int(meta["rows_seen"])
+        self._cached_result = None
+        self._live_factor = None
 
 
 # ---------------------------------------------------------------------------
@@ -758,6 +911,59 @@ class ShardQuantileProtocol(_ShardCheckpointMixin, QuantileProtocol):
         self._cached_table = None
 
 
+class ShardLeverageProtocol(_ShardCheckpointMixin, LeverageProtocol):
+    """TPU super-step leverage engine behind the uniform interface.
+
+    ``sites`` is ignored: row placement *is* the sharding of the input
+    batch over the mesh axis.  Backed by ``core.distributed.lev_p1_step``
+    (per-shard FD residual + masked candidate gather, ``lev_merge_spill``
+    coordinator folding).
+    """
+
+    def __init__(self, name: str, *, mesh, d: int, eps: float = 0.1,
+                 axis: str = "data", lev_cap: int = 0, l_site: int = 0,
+                 l_coord: int = 0, use_pallas: bool = False):
+        m = mesh.shape[axis]
+        super().__init__(name, "shard", m, eps, d)
+        self.cfg = dist.ProtocolConfig(
+            eps=eps, m=m, d=d, axis=axis, lev_cap=lev_cap,
+            l_site=l_site, l_coord=l_coord, use_pallas=use_pallas,
+        ).resolved()
+        self.state, self._step = dist.make_protocol_runner("L" + name, self.cfg, mesh)
+        self._cached_table: np.ndarray | None = None
+
+    def step(self, rows, sites: np.ndarray | None = None) -> None:
+        """Advance one super-step on a mesh-sharded (n, d) row batch."""
+        import jax.numpy as jnp
+
+        rows = self.check_rows(rows)
+        self.state = self._step(self.state, jnp.asarray(rows))
+        self.rows_seen += int(rows.shape[0])
+        self._invalidate()
+
+    def sampled_rows(self) -> np.ndarray:
+        """The coordinator's current table (one host read per step)."""
+        if self._cached_table is None:
+            self._cached_table = dist.lev_p1_table(self.cfg, self.state)
+        return self._cached_table
+
+    def total_weight(self) -> float:
+        """Coordinator estimate of the stream mass ``||A||_F^2``."""
+        return dist.lev_p1_mass(self.state)
+
+    def lam(self) -> float:
+        """The live ridge ``lambda`` the sample is scored at."""
+        return dist.lev_p1_lambda(self.cfg, self.state)
+
+    def comm_report(self) -> CommReport:
+        """Messages spent so far, in the paper's units."""
+        return self.state.comm.report(self.cfg.m)
+
+    def _invalidate(self) -> None:
+        self._cached_table = None
+        self._live_factor = None
+
+
 # ---------------------------------------------------------------------------
 # Registrations — the one place protocol names are bound to engines.
 # ---------------------------------------------------------------------------
@@ -871,4 +1077,44 @@ register_protocol(ProtocolSpec(
     factory=_shard_quantile_factory("P1"),
     err_factor=2.0,
     description="shard_map super-step distributed quantiles P1 (summary merge)",
+))
+
+
+def _event_leverage_factory(name: str, stream_cls):
+    def make(**kw: Any) -> EventLeverageProtocol:
+        return EventLeverageProtocol(name, stream_cls, **kw)
+
+    return make
+
+
+def _shard_leverage_factory(name: str):
+    def make(**kw: Any) -> ShardLeverageProtocol:
+        return ShardLeverageProtocol(name, **kw)
+
+    return make
+
+
+# Leverage sampling: deterministic P1 (kept rows exact + FD residual) meets
+# eps via the FD envelope; the score-weighted sampling P2 and the
+# super-step shard engine carry the sampling protocols' looser slack.
+_LEV_ERR = {"P1": 1.0, "P2": 3.0}
+
+for _name, _cls in lev.LEVERAGE_STREAMS.items():
+    register_protocol(ProtocolSpec(
+        name=_name,
+        kind="leverage",
+        engine="event",
+        factory=_event_leverage_factory(_name, _cls),
+        err_factor=_LEV_ERR[_name],
+        description=f"event-driven leverage-score row sampling {_name}",
+    ))
+
+register_protocol(ProtocolSpec(
+    name="P1",
+    kind="leverage",
+    engine="shard",
+    factory=_shard_leverage_factory("P1"),
+    err_factor=1.5,
+    description="shard_map super-step leverage-score row sampling P1 "
+                "(threshold forwarding + FD residual)",
 ))

@@ -1,24 +1,53 @@
-"""docs/ARCHITECTURE.md stays truthful: its paper-to-code table and the
-protocol registry must agree in BOTH directions — every coordinate in the
-table resolves, and every registered spec appears in the table."""
+"""The mkdocs site stays truthful.
+
+Two contracts:
+
+* ``docs/protocols.md``'s paper-to-code tables and the protocol registry
+  must agree in BOTH directions — every ``kind:engine:name`` coordinate in
+  the page resolves, every registered spec appears in the page, and all
+  four workload kinds are covered.
+* every internal link on every site page resolves — relative paths point
+  at real files and ``#anchors`` match a real heading slug (what
+  ``mkdocs build --strict`` enforces in CI, checked here without needing
+  mkdocs installed).
+"""
 import os
 import re
 
 from repro.runtime import get_spec, specs
 
-DOC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                   "docs", "ARCHITECTURE.md")
-COORD = re.compile(r"`(matrix|hh|quantile):(event|shard):([A-Za-z0-9]+)`")
+DOCS_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "docs")
+PROTOCOLS = os.path.join(DOCS_DIR, "protocols.md")
+KINDS = ("matrix", "hh", "quantile", "leverage")
+COORD = re.compile(r"`(matrix|hh|quantile|leverage):(event|shard):([A-Za-z0-9]+)`")
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 
 
 def _doc_coords() -> set[tuple[str, str, str]]:
-    with open(DOC) as f:
+    with open(PROTOCOLS) as f:
         return {m.groups() for m in COORD.finditer(f.read())}
 
 
-def test_architecture_doc_exists_and_has_coords():
-    assert os.path.exists(DOC), "docs/ARCHITECTURE.md is part of the repo contract"
-    assert len(_doc_coords()) >= 10  # the full protocol family is mapped
+def _pages() -> list[str]:
+    return sorted(
+        os.path.join(DOCS_DIR, name)
+        for name in os.listdir(DOCS_DIR)
+        if name.endswith(".md")
+    )
+
+
+# ---------------------------------------------------------------------------
+# table <-> registry, both directions, all four kinds
+# ---------------------------------------------------------------------------
+
+
+def test_protocols_page_exists_and_covers_all_kinds():
+    assert os.path.exists(PROTOCOLS), "docs/protocols.md is part of the repo contract"
+    coords = _doc_coords()
+    assert len(coords) >= 13  # the full four-kind protocol family is mapped
+    assert {k for (k, _, _) in coords} == set(KINDS)
 
 
 def test_every_doc_coordinate_resolves_in_registry():
@@ -29,9 +58,87 @@ def test_every_doc_coordinate_resolves_in_registry():
 
 def test_every_registered_spec_is_documented():
     coords = _doc_coords()
+    assert {s.kind for s in specs()} == set(KINDS)
     missing = [
         f"{s.kind}:{s.engine}:{s.name}"
         for s in specs()
         if (s.kind, s.engine, s.name) not in coords
     ]
-    assert not missing, f"add to docs/ARCHITECTURE.md paper-to-code table: {missing}"
+    assert not missing, f"add to docs/protocols.md paper-to-code tables: {missing}"
+
+
+# ---------------------------------------------------------------------------
+# link checker: internal anchors + relative paths resolve on every page
+# ---------------------------------------------------------------------------
+
+
+def _slugify(heading: str) -> str:
+    """Python-Markdown toc slug (what mkdocs anchors headings with)."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)  # code spans keep their text
+    text = re.sub(r"[^\w\s-]", "", text).strip().lower()
+    return re.sub(r"[\s]+", "-", text)
+
+
+def _heading_slugs(path: str) -> set[str]:
+    with open(path) as f:
+        text = f.read()
+    # Strip fenced code blocks: '# comment' lines inside them aren't headings.
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return {_slugify(h) for h in HEADING.findall(text)}
+
+
+def _links(path: str) -> list[str]:
+    with open(path) as f:
+        text = f.read()
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return LINK.findall(text)
+
+
+def test_site_pages_internal_links_resolve():
+    pages = _pages()
+    assert len(pages) >= 4  # index, protocols, serving, extending
+    problems = []
+    for page in pages:
+        for link in _links(page):
+            if link.startswith(("http://", "https://", "mailto:")):
+                continue
+            target, _, anchor = link.partition("#")
+            target_path = (
+                os.path.normpath(os.path.join(os.path.dirname(page), target))
+                if target
+                else page
+            )
+            if not os.path.exists(target_path):
+                problems.append(f"{os.path.basename(page)}: missing file {link!r}")
+                continue
+            if anchor and target_path.endswith(".md"):
+                if anchor not in _heading_slugs(target_path):
+                    problems.append(
+                        f"{os.path.basename(page)}: dead anchor {link!r}"
+                    )
+    assert not problems, "\n".join(problems)
+
+
+def test_site_pages_do_not_link_outside_docs():
+    """mkdocs --strict warns (-> fails) on links escaping the docs dir."""
+    for page in _pages():
+        for link in _links(page):
+            if link.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            target = link.partition("#")[0]
+            resolved = os.path.normpath(os.path.join(os.path.dirname(page), target))
+            assert resolved.startswith(DOCS_DIR + os.sep), (
+                f"{os.path.basename(page)} links outside docs/: {link!r}"
+            )
+
+
+def test_mkdocs_config_lists_every_page():
+    """mkdocs.yml nav and the docs dir agree (strict mode flags orphans)."""
+    cfg = os.path.join(os.path.dirname(DOCS_DIR), "mkdocs.yml")
+    assert os.path.exists(cfg)
+    with open(cfg) as f:
+        text = f.read()
+    for page in _pages():
+        assert os.path.basename(page) in text, (
+            f"{os.path.basename(page)} missing from mkdocs.yml nav"
+        )

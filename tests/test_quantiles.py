@@ -52,7 +52,7 @@ def _assert_quantile_guarantee(values, weights, serve, eps, slack=0.0):
     """Check eps-approximate quantiles against the achievable-rank criterion.
 
     ``serve(phi)`` returns the served value; the criterion (see
-    docs/ARCHITECTURE.md "The guarantees") is ``R(v) >= phi W - eps W``
+    docs/protocols.md "The guarantees") is ``R(v) >= phi W - eps W``
     and ``R(v) - mass(v) <= phi W + eps W`` — mass sitting exactly at the
     served value can always absorb the target, so it is not error.
     """
