@@ -1,0 +1,185 @@
+"""Cluster scale-out: ingest/query throughput at 1/2/4/8 coordinator cells.
+
+Drives the same mixed-tenant workload through a ``ClusterRouter`` at each
+cluster size (``ingest_many(parallel=True)`` fans each cell onto its own
+worker thread; ``query_batch`` packs per cell), measures router overhead
+against a bare single ``StreamingPipeline`` serving the identical load,
+and reports a ``ServingReplica``'s factor-cache hit rate on a repeated
+read mix.  Emits CSV rows and writes ``BENCH_cluster_scaling.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, scale
+
+CELLS = (1, 2, 4, 8)
+D = 64
+TENANTS = 24
+QUERY_ROUNDS = 3
+
+
+def _mesh():
+    import jax
+
+    return jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+def _batches(n_batches, rows):
+    rng = np.random.default_rng(7)
+    names = [f"tenant-{i:02d}" for i in range(TENANTS)]
+    flat = [
+        (names[i % TENANTS], rng.normal(size=(rows, D)).astype(np.float32))
+        for i in range(TENANTS * n_batches)
+    ]
+    return names, flat
+
+
+def _register(target, names):
+    from repro.runtime import EveryKSteps
+
+    for t in names:
+        target.add_tenant(t, D, eps=0.2, policy=EveryKSteps(1))
+
+
+def _queries(names, rng):
+    x = rng.normal(size=(16, D)).astype(np.float32)
+    return [(t, x) for t in names]
+
+
+def _drive_cluster(n_cells, names, flat, queries):
+    from repro.cluster import ClusterRouter, PipelineCell
+    from repro.runtime import EveryKSteps
+
+    mesh = _mesh()
+    cells = [
+        PipelineCell(f"cell-{i}", mesh, eps=0.2, policy=EveryKSteps(1))
+        for i in range(n_cells)
+    ]
+    with ClusterRouter(cells) as router:
+        _register(router, names)
+        router.ingest_many(flat[:TENANTS], parallel=True)  # warm compile
+        router.query_batch(queries)  # warm query path
+
+        t0 = time.perf_counter()
+        router.ingest_many(flat[TENANTS:], parallel=True)
+        ingest_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        for _ in range(QUERY_ROUNDS):
+            out = router.query_batch(queries)
+        query_s = (time.perf_counter() - t0) / QUERY_ROUNDS
+        assert len(out) == len(queries)
+        spread = router.ring.spread(names)
+    return ingest_s, query_s, {k: spread[k] for k in sorted(spread)}
+
+
+def _drive_single(names, flat, queries):
+    from repro.query import PackedRequest
+    from repro.runtime import EveryKSteps, StreamingPipeline
+
+    pipe = StreamingPipeline(_mesh(), eps=0.2, policy=EveryKSteps(1))
+    _register(pipe, names)
+    for t, b in flat[:TENANTS]:
+        pipe.ingest(t, b)
+    requests = [PackedRequest(t, q) for t, q in queries]
+    pipe.engine.query_packed(requests)
+
+    t0 = time.perf_counter()
+    for t, b in flat[TENANTS:]:
+        pipe.ingest(t, b)
+    ingest_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for _ in range(QUERY_ROUNDS):
+        pipe.engine.query_packed(requests)
+    query_s = (time.perf_counter() - t0) / QUERY_ROUNDS
+    pipe.close()
+    return ingest_s, query_s
+
+
+def _replica_hit_rate(names, flat):
+    from repro.cluster import PipelineCell, ServingReplica
+    from repro.runtime import EveryKSteps
+
+    cell = PipelineCell("serve", _mesh(), eps=0.2, policy=EveryKSteps(1))
+    _register(cell.pipeline, names[:4])
+    for t, b in flat:
+        if t in names[:4]:
+            cell.ingest(t, b)
+    replica = ServingReplica(cell, cache_size=8)
+    replica.sync()
+    rng = np.random.default_rng(11)
+    for _ in range(8):  # repeated spectrum reads on a fixed version set
+        for t in names[:4]:
+            replica.engine.spectrum(t)
+            replica.query_batch(rng.normal(size=(4, D)).astype(np.float32), tenant=t)
+    return replica.stats()["cache"]
+
+
+def run() -> None:
+    n_batches = max(2, int(6 * scale()))
+    rows = 256
+    names, flat = _batches(n_batches, rows)
+    queries = _queries(names, np.random.default_rng(3))
+    total_rows = len(flat[TENANTS:]) * rows
+
+    by_cells: dict[str, dict] = {}
+    single_ingest, single_query = _drive_single(names, flat, queries)
+    emit("cluster/single_pipeline/ingest", single_ingest * 1e6,
+         f"rows_per_s={total_rows / single_ingest:.0f}")
+    emit("cluster/single_pipeline/query", single_query * 1e6,
+         f"qps={len(queries) / single_query:.0f}")
+
+    for n_cells in CELLS:
+        ingest_s, query_s, spread = _drive_cluster(n_cells, names, flat, queries)
+        by_cells[str(n_cells)] = {
+            "ingest_rows_per_s": total_rows / ingest_s,
+            "query_batches_per_s": len(queries) / query_s,
+            "tenant_spread": spread,
+        }
+        emit(f"cluster/cells={n_cells}/ingest", ingest_s * 1e6,
+             f"rows_per_s={total_rows / ingest_s:.0f}")
+        emit(f"cluster/cells={n_cells}/query", query_s * 1e6,
+             f"qps={len(queries) / query_s:.0f}")
+
+    one = by_cells["1"]
+    router_overhead_ingest = (total_rows / single_ingest) / one["ingest_rows_per_s"]
+    router_overhead_query = (len(queries) / single_query) / one["query_batches_per_s"]
+    emit("cluster/router_overhead/ingest", 0.0, f"x{router_overhead_ingest:.2f}")
+    emit("cluster/router_overhead/query", 0.0, f"x{router_overhead_query:.2f}")
+
+    cache = _replica_hit_rate(names, flat)
+    emit("cluster/replica_cache", 0.0, f"hit_rate={cache['hit_rate']:.2f}")
+
+    out = {
+        "workload": {
+            "tenants": TENANTS,
+            "d": D,
+            "rows_per_batch": rows,
+            "timed_batches": len(flat) - TENANTS,
+            "query_tenants": len(queries),
+        },
+        "single_pipeline": {
+            "ingest_rows_per_s": total_rows / single_ingest,
+            "query_batches_per_s": len(queries) / single_query,
+        },
+        "by_cells": by_cells,
+        "router_overhead_vs_single": {
+            "ingest": router_overhead_ingest,
+            "query": router_overhead_query,
+        },
+        "replica_cache": cache,
+    }
+    path = os.path.join(os.getcwd(), "BENCH_cluster_scaling.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -11,6 +11,7 @@ import sys
 
 def main() -> None:
     from benchmarks import (
+        cluster_scaling,
         grad_compression,
         hh_protocols,
         kernels_bench,
@@ -37,6 +38,7 @@ def main() -> None:
         kernels_bench,
         query_service,
         runtime_pipeline,
+        cluster_scaling,
         roofline_table,
     ):
         name = mod.__name__.split(".")[-1]

@@ -8,6 +8,7 @@ from repro.ckpt.checkpoint import (
     latest_step,
     read_extra,
     read_manifest,
+    read_subset,
     restore,
     save,
 )

@@ -41,6 +41,7 @@ __all__ = [
     "latest_step",
     "read_extra",
     "read_manifest",
+    "read_subset",
     "AsyncCheckpointer",
 ]
 
@@ -155,6 +156,37 @@ def read_extra(directory: str, step: int) -> dict:
     template before calling ``restore``.
     """
     return read_manifest(directory, step)["extra"]
+
+
+def read_subset(directory: str, step: int, names) -> dict[str, np.ndarray]:
+    """Read only the named leaves of a checkpoint, sha256-verified.
+
+    ``names`` is an iterable of flattened leaf names as they appear in the
+    manifest (``read_manifest(...)["leaves"]``).  This is the
+    tenant-scoped restore hook: a full pipeline checkpoint holds every
+    tenant's protocol state plus every store snapshot, but a cluster
+    rebalance (or a forensic inspection) needs exactly one tenant's
+    leaves — reading the subset skips the I/O, decompression, and hashing
+    for everything else.  Unknown names raise ``KeyError`` before any
+    leaf I/O happens.
+    """
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    codec = manifest.get("codec", "zstd")
+    names = list(names)
+    missing = [n for n in names if n not in manifest["leaves"]]
+    if missing:
+        raise KeyError(f"checkpoint {path} missing leaves {missing}")
+    out: dict[str, np.ndarray] = {}
+    for name in names:
+        meta = manifest["leaves"][name]
+        with open(os.path.join(path, meta["file"]), "rb") as f:
+            raw = _decompress(codec, f.read())
+        if hashlib.sha256(raw).hexdigest() != meta["sha256"]:
+            raise IOError(f"checkpoint corruption in leaf {name} ({path})")
+        out[name] = np.load(io.BytesIO(raw), allow_pickle=False)
+    return out
 
 
 def restore(directory: str, step: int, template, *, shardings=None):

@@ -1,0 +1,37 @@
+"""Sharded coordinator cells: the paper's m-site recursion applied to itself.
+
+The paper scales *sites* horizontally but keeps one coordinator; this
+package shards the coordinator the same way the paper shards the stream.
+Every protocol kind already proves the merge identity that makes this
+sound (``fd_merge``, ``mg_merge``, ``quant_merge``, ``lev_merge``), so a
+tenant's whole lifecycle can live on any one shard:
+
+  * ``hashring``  — deterministic consistent-hash tenant placement with
+                    virtual nodes + minimal rebalance planning.
+  * ``cell``      — ``PipelineCell``: one ``StreamingPipeline`` as a
+                    shard, plus the tenant export/import move path and
+                    the replica-facing ``versions_since`` sync API.
+  * ``router``    — ``ClusterRouter``: ring-placed registration/ingest,
+                    per-shard packed query fan-out (gathered in
+                    submission order), shed propagation, live rebalance.
+  * ``replica``   — ``ServingReplica``: read-only serving off published
+                    immutable versions with surfaced staleness bounds.
+
+See ``docs/cluster.md`` for the ring diagram, cell lifecycle, rebalance
+plan format, and staleness semantics.
+"""
+from repro.cluster.cell import PipelineCell
+from repro.cluster.hashring import HashRing, RebalancePlan, TenantMove, rebalance_plan
+from repro.cluster.replica import ReplicaResult, ServingReplica
+from repro.cluster.router import ClusterRouter
+
+__all__ = [
+    "ClusterRouter",
+    "HashRing",
+    "PipelineCell",
+    "RebalancePlan",
+    "ReplicaResult",
+    "ServingReplica",
+    "TenantMove",
+    "rebalance_plan",
+]

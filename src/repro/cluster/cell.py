@@ -1,0 +1,142 @@
+"""PipelineCell: today's ``StreamingPipeline`` as one coordinator shard.
+
+The paper's coordinator, recursed: each cell IS a full single-process
+coordinator — its own ``SketchStore``, ``QueryEngine``, packed service,
+quotas, ``ServicePump``, and ``repro.ckpt`` save/load — owning the
+disjoint tenant subset the cluster's ``HashRing`` assigns it.  The cell
+adds exactly the shard-boundary surface the router and replicas need:
+
+  * tenant migration — ``export_tenant``/``import_tenant`` ride the
+    pipeline's checkpoint contract (``state_payload``/``restore_payload``
+    plus the store's version-preserving tenant subset), so a rebalance
+    moves a *live* tenant between cells bit-identically: protocol state,
+    publish counters, and every published version number survive.
+  * replica sync — ``versions_since`` hands out the tenant's immutable
+    published snapshots newer than a high-water mark (what
+    ``ServingReplica`` pulls), and ``latest_version`` is the staleness
+    reference point.
+
+Everything else is deliberately a thin delegation: a one-cell cluster
+behaves exactly like the bare pipeline (tested), which is what makes the
+N-cell determinism argument compositional.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.query.store import SketchSnapshot
+from repro.runtime.pipeline import StreamingPipeline
+
+__all__ = ["PipelineCell"]
+
+
+class PipelineCell:
+    """One coordinator shard: a named ``StreamingPipeline`` + move/sync APIs."""
+
+    def __init__(
+        self,
+        name: str,
+        mesh: jax.sharding.Mesh,
+        *,
+        pipeline: StreamingPipeline | None = None,
+        **pipeline_kw,
+    ):
+        if not name:
+            raise ValueError("a cell needs a non-empty name")
+        self.name = name
+        self.pipeline = (
+            pipeline if pipeline is not None else StreamingPipeline(mesh, **pipeline_kw)
+        )
+
+    # -- thin delegation (the cell IS a coordinator) --------------------------
+
+    @property
+    def store(self):
+        """The cell's own versioned snapshot store."""
+        return self.pipeline.store
+
+    @property
+    def engine(self):
+        """The cell's own query engine (per-cell spectrum/factor caches)."""
+        return self.pipeline.engine
+
+    def tenants(self) -> list[str]:
+        """Tenant names this cell owns (sorted)."""
+        return self.pipeline.tenants()
+
+    def ingest(self, tenant: str, rows):
+        """Absorb one super-step batch for an owned tenant (see pipeline)."""
+        return self.pipeline.ingest(tenant, rows)
+
+    def submit(self, tenant: str, x, *, deadline_s: float | None = None):
+        """Admit one query for an owned tenant (see pipeline.submit)."""
+        return self.pipeline.submit(tenant, x, deadline_s=deadline_s)
+
+    def flush(self) -> int:
+        """Drain this cell's pending queries in packed sweeps."""
+        return self.pipeline.flush()
+
+    def poll(self) -> int:
+        """Deadline pump for this cell's packed service."""
+        return self.pipeline.poll()
+
+    def close(self) -> None:
+        """Release the cell's background resources (pump thread)."""
+        self.pipeline.close()
+
+    def __enter__(self) -> "PipelineCell":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()
+
+    # -- tenant migration (rebalance path) ------------------------------------
+
+    def export_tenant(self, tenant: str) -> dict:
+        """Capture a live owned tenant as a portable payload (drained first)."""
+        return self.pipeline.export_tenant(tenant)
+
+    def import_tenant(self, payload: dict) -> str:
+        """Install an exported tenant here; returns its name."""
+        self.pipeline.import_tenant(payload)
+        return payload["tenant"]
+
+    def remove_tenant(self, tenant: str) -> None:
+        """Deregister a moved-away tenant and drop its local versions."""
+        self.pipeline.remove_tenant(tenant)
+
+    # -- replica sync ----------------------------------------------------------
+
+    def versions_since(self, tenant: str, after: int) -> list[SketchSnapshot]:
+        """Published snapshots newer than ``after`` (ascending; [] if none)."""
+        return self.store.versions_since(tenant, after)
+
+    def latest_version(self, tenant: str) -> int | None:
+        """The tenant's newest published version here (None before first)."""
+        try:
+            return self.store.latest_version(tenant)
+        except KeyError:
+            return None
+
+    # -- persistence -----------------------------------------------------------
+
+    def save(self, directory: str, *, step: int = 0) -> str:
+        """Checkpoint the whole cell (one pipeline ckpt); returns the path."""
+        return self.pipeline.save(directory, step=step)
+
+    @classmethod
+    def load(
+        cls,
+        name: str,
+        directory: str,
+        mesh: jax.sharding.Mesh,
+        *,
+        step: int | None = None,
+        **pipeline_kw,
+    ) -> "PipelineCell":
+        """Rebuild a cell from ``save`` output (latest step by default)."""
+        pipeline = StreamingPipeline.load(directory, mesh, step=step, **pipeline_kw)
+        return cls(name, mesh, pipeline=pipeline)
+
+    def __repr__(self) -> str:
+        return f"PipelineCell({self.name!r}, tenants={self.tenants()})"

@@ -1,0 +1,161 @@
+"""ServingReplica: read-only query serving off published snapshot versions.
+
+The store is already versioned and immutable — the cluster leans into
+it: cells keep publishing, and any number of replicas pull the published
+versions and serve queries without ever touching a cell's ingest path.
+This is the classic read-replica split (database-replication /
+distributed-cache shape) built on three properties the repo already has:
+
+  * immutability — a ``SketchSnapshot`` never changes after publish, so
+    replication is "install the missing versions" (``versions_since`` on
+    the owning cell), idempotent and order-safe; the snapshot *object*
+    is shared, never copied.
+  * cache-aside factors — the replica runs its own ``QueryEngine``, so
+    spectrum/ridge-factor LRU entries are computed beside the replica
+    (keyed by the same immutable ``(tenant, version)``) and its
+    ``cache_stats`` expose the hit rate per replica.
+  * versioned staleness — every answer carries ``versions_behind``: how
+    many publishes the owning cell is ahead of the version that answered.
+    ``max_versions_behind`` turns the surfaced bound into an enforced
+    one — the replica read-through-syncs before answering staler than
+    allowed.  A miss (unknown tenant / unpulled pinned version) always
+    read-through-fetches from the owner.
+
+Replicas answer from whatever they pulled — the answer's ``error_bound``
+certificate still holds (it is the *snapshot's* certificate); staleness
+only means the stream has moved on since that version was published.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.cluster.cell import PipelineCell
+from repro.query.engine import QueryEngine, QueryResult
+from repro.query.store import SketchStore
+
+__all__ = ["ReplicaResult", "ServingReplica"]
+
+
+class ReplicaResult(NamedTuple):
+    """One replica-served batch + its per-tenant staleness bound."""
+
+    result: QueryResult  # estimates + the snapshot's own certificate
+    owner_version: int  # newest version the owning cell had published
+    versions_behind: int  # owner_version - served version (0 = fresh)
+
+
+class ServingReplica:
+    """Read-only serving node: pulls published versions, answers queries.
+
+    ``source`` is where ownership lives: a ``ClusterRouter`` (tenants
+    resolve through its ring) or a single ``PipelineCell``.  The replica
+    holds its own ``SketchStore`` + ``QueryEngine``; nothing it does can
+    write back to a cell.
+    """
+
+    def __init__(
+        self,
+        source,
+        *,
+        cache_size: int = 16,
+        interpret: bool | None = None,
+        max_versions_behind: int | None = None,
+        retain: int = 0,
+    ):
+        if max_versions_behind is not None and max_versions_behind < 0:
+            raise ValueError(
+                f"max_versions_behind must be >= 0, got {max_versions_behind}"
+            )
+        self.source = source
+        self.max_versions_behind = max_versions_behind
+        self.store = SketchStore(retain=retain)
+        self.engine = QueryEngine(self.store, cache_size=cache_size, interpret=interpret)
+        self._synced: dict[str, int] = {}  # tenant -> highest pulled version
+        self.syncs = 0  # sync() calls (explicit + read-through)
+        self.pulled = 0  # snapshot versions installed
+        self.read_throughs = 0  # queries that had to fetch before answering
+
+    def _cell_for(self, tenant: str) -> PipelineCell:
+        if isinstance(self.source, PipelineCell):
+            return self.source
+        return self.source.cell_for(tenant)
+
+    def _source_tenants(self) -> list[str]:
+        return self.source.tenants()
+
+    # -- replication -----------------------------------------------------------
+
+    def sync(self, tenant: str | None = None) -> int:
+        """Pull every published version newer than the local high-water mark.
+
+        One tenant, or (``tenant=None``) every tenant the source knows.
+        Returns the number of versions installed; pulling is idempotent
+        (``SketchStore.install`` keyed by immutable version numbers).
+        """
+        tenants = [tenant] if tenant is not None else self._source_tenants()
+        installed = 0
+        for t in tenants:
+            after = self._synced.get(t, 0)
+            for snap in self._cell_for(t).versions_since(t, after):
+                self.store.install(snap)
+                self._synced[t] = snap.version
+                installed += 1
+        self.syncs += 1
+        self.pulled += installed
+        return installed
+
+    def synced_version(self, tenant: str) -> int:
+        """The tenant's highest locally-installed version (0 = none yet)."""
+        return self._synced.get(tenant, 0)
+
+    # -- read path -------------------------------------------------------------
+
+    def query_batch(
+        self,
+        x: np.ndarray,
+        *,
+        tenant: str,
+        version: int | None = None,
+        path: str = "pallas",
+    ) -> ReplicaResult:
+        """Serve a batch from the local versions, surfacing staleness.
+
+        Cache-aside with read-through: answers come from the replica's
+        own store/engine; a miss — unknown tenant, or a pinned
+        ``version`` that was never pulled — fetches from the owning cell
+        first (counted in ``read_throughs``).  When
+        ``max_versions_behind`` is set, the replica also refreshes before
+        answering more than that many publishes behind the owner.  The
+        returned ``versions_behind`` is measured against the owner at
+        answer time, so callers always see the bound they actually got.
+        """
+        have = set(self.store.versions(tenant)) if tenant in self.store.tenants() else set()
+        miss = not have if version is None else version not in have
+        if miss:
+            self.read_throughs += 1
+            self.sync(tenant)
+        owner_latest = self._cell_for(tenant).latest_version(tenant) or 0
+        if (
+            version is None
+            and self.max_versions_behind is not None
+            and owner_latest - self._synced.get(tenant, 0) > self.max_versions_behind
+        ):
+            self.sync(tenant)
+        res = self.engine.query_batch(x, tenant=tenant, version=version, path=path)
+        return ReplicaResult(
+            result=res,
+            owner_version=max(owner_latest, res.version),
+            versions_behind=max(0, owner_latest - res.version),
+        )
+
+    def stats(self) -> dict:
+        """Replication + cache counters (cache half from the engine)."""
+        return {
+            "syncs": self.syncs,
+            "pulled": self.pulled,
+            "read_throughs": self.read_throughs,
+            "tenants": len(self.store.tenants()),
+            "cache": self.engine.cache_stats(),
+        }

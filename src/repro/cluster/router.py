@@ -1,0 +1,288 @@
+"""ClusterRouter: ring-placed ingest + per-shard packed query fan-out.
+
+The thin routing layer ROADMAP's refactor milestone asks for: tenants
+live on exactly one ``PipelineCell`` (consistent-hash placement, see
+``hashring``), and the router is the only component that knows the
+topology.  It does four things and deliberately nothing else:
+
+  * registration/ingest routing — ``add_*_tenant`` and ``ingest`` go to
+    the ring-placed owner; the cell's own ``TenantQuota`` admission still
+    applies, and a shed (``QueryShedError``) propagates to the submitter
+    *and* is counted per cell (``shed_counts``) so overload is visible at
+    the cluster edge, not just inside one shard.
+  * query fan-out — ``query_batch`` takes a mixed-tenant batch, groups
+    it per owning cell, hands each cell ONE ``query_packed`` call (so
+    the cross-tenant ``quadform_packed`` sweep the single pipeline
+    earned still fires inside every shard), and gathers results back in
+    submission order.
+  * parallel drive — ``ingest_many(..., parallel=True)`` runs each
+    cell's batch sequence on its own worker thread; cells share nothing
+    (own store/engine/service), so the only synchronization is the join.
+  * rebalance — ``scale_to(new_cells)`` computes the minimal
+    ``RebalancePlan`` between the old and new rings and applies it by
+    draining + exporting each moved tenant from its source cell and
+    importing it (bit-identically, version numbers preserved) into its
+    destination.
+
+One-cell degeneracy: a router over a single cell routes everything to
+that cell's pipeline, which is exactly the pre-cluster architecture —
+the determinism tests pin 1-cell == 4-cell == bare pipeline per tenant.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.cluster.cell import PipelineCell
+from repro.cluster.hashring import HashRing, RebalancePlan, rebalance_plan
+from repro.query.engine import PackedRequest, QueryResult
+from repro.query.service import QueryShedError, QueryTicket
+
+__all__ = ["ClusterRouter"]
+
+
+class ClusterRouter:
+    """Routes tenants, ingest, and query batches across coordinator cells."""
+
+    def __init__(self, cells: Sequence[PipelineCell], *, vnodes: int = 64):
+        names = [c.name for c in cells]
+        self.ring = HashRing(names, vnodes=vnodes)
+        self._cells: dict[str, PipelineCell] = {c.name: c for c in cells}
+        self._tenant_cell: dict[str, str] = {}
+        self._shed_by_cell: dict[str, int] = {name: 0 for name in names}
+        self.rebalances = 0
+
+    # -- topology --------------------------------------------------------------
+
+    def cells(self) -> list[str]:
+        """Cell names on the ring (sorted)."""
+        return list(self.ring.cells())
+
+    def cell(self, name: str) -> PipelineCell:
+        """The named cell."""
+        return self._cells[name]
+
+    def cell_for(self, tenant: str) -> PipelineCell:
+        """The cell that owns (or would own) ``tenant``."""
+        return self._cells[self._tenant_cell.get(tenant) or self.ring.place(tenant)]
+
+    def tenants(self) -> list[str]:
+        """All tenant names registered through this router (sorted)."""
+        return sorted(self._tenant_cell)
+
+    def placement(self) -> dict[str, str]:
+        """tenant -> owning cell name, for every registered tenant."""
+        return dict(self._tenant_cell)
+
+    # -- tenant registration (ring-placed) ------------------------------------
+
+    def _route_add(self, tenant: str):
+        if tenant in self._tenant_cell:
+            raise ValueError(f"tenant {tenant!r} already registered")
+        name = self.ring.place(tenant)
+        self._tenant_cell[tenant] = name
+        return self._cells[name]
+
+    def add_tenant(self, tenant: str, d: int, **kw):
+        """Register a matrix tenant on its ring-placed cell; returns its tracker."""
+        return self._route_add(tenant).pipeline.add_tenant(tenant, d, **kw)
+
+    def add_hh_tenant(self, tenant: str, **kw):
+        """Register a heavy-hitter tenant on its ring-placed cell."""
+        return self._route_add(tenant).pipeline.add_hh_tenant(tenant, **kw)
+
+    def add_quantile_tenant(self, tenant: str, **kw):
+        """Register a quantile tenant on its ring-placed cell."""
+        return self._route_add(tenant).pipeline.add_quantile_tenant(tenant, **kw)
+
+    def add_leverage_tenant(self, tenant: str, d: int, **kw):
+        """Register a leverage-sampling tenant on its ring-placed cell."""
+        return self._route_add(tenant).pipeline.add_leverage_tenant(tenant, d, **kw)
+
+    def _owner(self, tenant: str) -> PipelineCell:
+        try:
+            return self._cells[self._tenant_cell[tenant]]
+        except KeyError:
+            raise KeyError(
+                f"unknown tenant {tenant!r} (registered: {self.tenants()})"
+            ) from None
+
+    # -- ingest routing --------------------------------------------------------
+
+    def ingest(self, tenant: str, rows):
+        """Route one super-step batch to the tenant's owning cell."""
+        return self._owner(tenant).ingest(tenant, rows)
+
+    def ingest_many(
+        self,
+        batches: Iterable[tuple[str, "np.ndarray"]],
+        *,
+        parallel: bool = False,
+    ) -> int:
+        """Drive interleaved tenants; returns snapshots published.
+
+        ``parallel=True`` runs each cell's batch subsequence on its own
+        worker thread — per-tenant order is preserved (a tenant lives on
+        one cell, and each cell replays its subsequence in order), which
+        is all bit-identical ingest requires.  Cells share no state, so
+        the fan-out needs no locks beyond the join.
+        """
+        per_cell: dict[str, list[tuple[str, np.ndarray]]] = {}
+        for tenant, rows in batches:
+            per_cell.setdefault(self._tenant_cell[tenant], []).append((tenant, rows))
+        if not parallel or len(per_cell) <= 1:
+            return sum(
+                self._cells[name].ingest(tenant, rows) is not None
+                for name, sub in per_cell.items()
+                for tenant, rows in sub
+            )
+
+        def drive(name: str, sub: list[tuple[str, np.ndarray]]) -> int:
+            cell = self._cells[name]
+            return sum(cell.ingest(tenant, rows) is not None for tenant, rows in sub)
+
+        with ThreadPoolExecutor(max_workers=len(per_cell)) as pool:
+            futures = [pool.submit(drive, name, sub) for name, sub in per_cell.items()]
+            return sum(f.result() for f in futures)
+
+    # -- query fan-out ---------------------------------------------------------
+
+    def submit(self, tenant: str, x, *, deadline_s: float | None = None) -> QueryTicket:
+        """Admit one query on the owning cell's packed service.
+
+        A quota shed propagates to the caller unchanged (shed-and-report
+        end to end) and is additionally counted per cell — the cluster
+        edge sees which shard is saturating.
+        """
+        cell = self._owner(tenant)
+        try:
+            return cell.submit(tenant, x, deadline_s=deadline_s)
+        except QueryShedError:
+            self._shed_by_cell[cell.name] += 1
+            raise
+
+    def shed_counts(self) -> dict[str, int]:
+        """Per-cell count of sheds that propagated through this router."""
+        return dict(self._shed_by_cell)
+
+    def query_batch(
+        self, queries: Sequence[tuple[str, "np.ndarray"]]
+    ) -> list[QueryResult]:
+        """Serve a mixed-tenant batch: one packed engine call per cell.
+
+        ``queries`` is ``[(tenant, x_batch), ...]``; entries are grouped
+        by owning cell, each cell serves its group through
+        ``QueryEngine.query_packed`` (tenants sharing an (l, d) sketch
+        shape inside a cell still ride one ``quadform_packed`` launch),
+        and results come back in submission order — exactly what the
+        single pipeline would return for the same list, shard boundaries
+        invisible.
+        """
+        per_cell: dict[str, list[int]] = {}
+        for i, (tenant, _) in enumerate(queries):
+            per_cell.setdefault(self._tenant_cell[tenant], []).append(i)
+        out: list[QueryResult | None] = [None] * len(queries)
+        for name, idxs in per_cell.items():
+            requests = [
+                PackedRequest(tenant=queries[i][0], x=np.asarray(queries[i][1], np.float32))
+                for i in idxs
+            ]
+            for i, res in zip(idxs, self._cells[name].engine.query_packed(requests)):
+                out[i] = res
+        return out  # type: ignore[return-value]
+
+    def flush(self) -> int:
+        """Drain every cell's pending queries; returns total served."""
+        return sum(cell.flush() for cell in self._cells.values())
+
+    def poll(self) -> int:
+        """Deadline pump across every cell; returns total served."""
+        return sum(cell.poll() for cell in self._cells.values())
+
+    # -- rebalance -------------------------------------------------------------
+
+    def plan_scale_to(self, cell_names: Sequence[str]) -> RebalancePlan:
+        """The minimal move plan for resizing to ``cell_names`` (dry run)."""
+        return rebalance_plan(
+            self.ring, self.ring.with_cells(cell_names), self._tenant_cell
+        )
+
+    def scale_to(self, cells: Sequence[PipelineCell]) -> RebalancePlan:
+        """Resize the cluster to ``cells``, moving only the tenants that must.
+
+        ``cells`` is the *complete* new cell set; existing cells are
+        matched by name (their objects are kept — passing a fresh object
+        under an existing name replaces it only if it is the same object,
+        otherwise raises to protect live state).  Each planned move
+        drains the source cell, exports the tenant, imports it into the
+        destination, then removes it from the source — queries answered
+        after the move are bit-identical to before, version numbers
+        included.  A cell leaving the ring must end up empty; a non-empty
+        removed cell raises before anything is touched.
+        """
+        new_by_name: dict[str, PipelineCell] = {}
+        for cell in cells:
+            if cell.name in new_by_name:
+                raise ValueError(f"duplicate cell name {cell.name!r}")
+            new_by_name[cell.name] = cell
+        for name, cell in new_by_name.items():
+            if name in self._cells and cell is not self._cells[name]:
+                raise ValueError(
+                    f"cell {name!r} already exists with live state; reuse its object"
+                )
+        new_ring = self.ring.with_cells(new_by_name)
+        plan = rebalance_plan(self.ring, new_ring, self._tenant_cell)
+        removed = set(self._cells) - set(new_by_name)
+        stranded = {
+            t: c for t, c in self._tenant_cell.items()
+            if c in removed and not any(m.tenant == t for m in plan.moves)
+        }
+        if stranded:  # cannot happen with a consistent plan; belt-and-braces
+            raise RuntimeError(f"tenants stranded on removed cells: {stranded}")
+
+        for move in plan.moves:
+            src, dst = self._cells[move.src], new_by_name[move.dst]
+            src.flush()
+            payload = src.export_tenant(move.tenant)
+            dst.import_tenant(payload)
+            src.remove_tenant(move.tenant)
+            self._tenant_cell[move.tenant] = move.dst
+
+        self.ring = new_ring
+        self._cells = new_by_name
+        for name in new_by_name:
+            self._shed_by_cell.setdefault(name, 0)
+        for name in removed:
+            self._shed_by_cell.pop(name, None)
+        self.rebalances += 1
+        return plan
+
+    # -- accounting / lifecycle ------------------------------------------------
+
+    def stats(self) -> dict[str, dict]:
+        """Per-cell snapshot: tenants, pending queries, sheds, cache hit rate."""
+        out = {}
+        for name in self.cells():
+            cell = self._cells[name]
+            cache = cell.engine.cache_stats()
+            out[name] = {
+                "tenants": len(cell.tenants()),
+                "pending": cell.pipeline.service.pending(),
+                "shed": self._shed_by_cell.get(name, 0),
+                "cache_hit_rate": cache["hit_rate"],
+                "cache_evictions": cache["evictions"],
+            }
+        return out
+
+    def close(self) -> None:
+        """Release every cell's background resources."""
+        for cell in self._cells.values():
+            cell.close()
+
+    def __enter__(self) -> "ClusterRouter":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()

@@ -121,6 +121,16 @@ def _levscore_padded(m, x, *, block_n, block_d, interpret):
     return levscore_pallas(m, x, block_n=block_n, block_d=block_d, interpret=interpret)
 
 
+@jax.jit
+def _levscore_xla(m, x):
+    from repro.kernels.ref import ref_levscore
+
+    return ref_levscore(m, x)
+
+
+LEVSCORE_PATHS = ("auto", "pallas", "xla")
+
+
 def levscore(
     m: jax.Array,
     x: jax.Array,
@@ -128,14 +138,27 @@ def levscore(
     block_n: int = 0,
     block_d: int = 0,
     interpret: bool | None = None,
+    path: str = "auto",
 ) -> jax.Array:
-    """Batched ``x_j^T M x_j`` via the Pallas kernel, (d, d) x (N, d) -> (N,).
+    """Batched ``x_j^T M x_j``, backend-dispatched, (d, d) x (N, d) -> (N,).
 
-    Pads N/d to block multiples; zero pad rows/cols of M and X contribute
-    zero to every quadratic form, so padding is exact.
+    ``path="auto"`` picks per backend: the fused Pallas kernel on a real
+    accelerator, the jit'd XLA reference contraction wherever the kernel
+    would run in interpret mode — on CPU the interpreted kernel
+    measurably *loses* to XLA (BENCH_leverage_protocols.json: ~100ms vs
+    ~9ms for the same sweep), so falling back is the fast path, and both
+    paths agree to 1e-5 (regression-tested).  ``path="pallas"`` /
+    ``"xla"`` force one implementation (kernel tests, benchmarks).
+
+    The Pallas path pads N/d to block multiples; zero pad rows/cols of M
+    and X contribute zero to every quadratic form, so padding is exact.
     """
+    if path not in LEVSCORE_PATHS:
+        raise ValueError(f"unknown levscore path {path!r}; choose from {LEVSCORE_PATHS}")
     if interpret is None:
         interpret = not _on_tpu()
+    if path == "xla" or (path == "auto" and interpret):
+        return _levscore_xla(m, x)
     d = m.shape[0]
     n = x.shape[0]
     if block_n <= 0:

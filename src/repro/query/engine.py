@@ -107,8 +107,14 @@ class QueryEngine:
         self._cache: OrderedDict[tuple[str, int], Spectrum] = OrderedDict()
         # Leverage tenants' ridge factors, same LRU discipline as _cache.
         self._factor_cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
-        self.cache_hits = 0
-        self.cache_misses = 0
+        # Per-cache keyed counters: evictions were previously silent, so a
+        # thrashing cache (cache_size too small for the live tenant set)
+        # looked identical to a healthy one.  Routers and replicas read
+        # these to report hit rates per cell.
+        self._cache_counters: dict[str, dict[str, int]] = {
+            "spectrum": {"hits": 0, "misses": 0, "evictions": 0},
+            "factor": {"hits": 0, "misses": 0, "evictions": 0},
+        }
         self.packed_launches = 0  # kernel launches spent by query_packed
         self.packed_pad_slots = 0  # zero-filled query slots added while packing
 
@@ -122,22 +128,24 @@ class QueryEngine:
         """
         return self._spectrum_for(self.store.get(tenant, version))
 
-    def _lru_get(self, cache: OrderedDict, key, compute):
+    def _lru_get(self, cache: OrderedDict, key, compute, which: str):
         """One LRU discipline for every per-version cache (spectra, ridge
-        factors): shared hit/miss counters, move-to-end on hit, evict the
-        oldest past ``cache_size``.  Versions are immutable, so a hit can
-        never be stale; publishing changes the key, which IS the
-        invalidation."""
+        factors): keyed hit/miss/eviction counters (``which`` names the
+        cache), move-to-end on hit, evict the oldest past ``cache_size``.
+        Versions are immutable, so a hit can never be stale; publishing
+        changes the key, which IS the invalidation."""
+        counters = self._cache_counters[which]
         hit = cache.get(key)
         if hit is not None:
             cache.move_to_end(key)
-            self.cache_hits += 1
+            counters["hits"] += 1
             return hit
-        self.cache_misses += 1
+        counters["misses"] += 1
         value = compute()
         cache[key] = value
         while len(cache) > self.cache_size:
             cache.popitem(last=False)
+            counters["evictions"] += 1
         return value
 
     def _spectrum_for(self, snap: SketchSnapshot) -> Spectrum:
@@ -145,20 +153,40 @@ class QueryEngine:
             self._cache,
             (snap.tenant, snap.version),
             lambda: _svd_spectrum(snap.matrix),
+            "spectrum",
         )
 
-    def cache_stats(self) -> dict[str, int]:
-        """Hit/miss/entry counters for the per-version caches.
+    @property
+    def cache_hits(self) -> int:
+        """Total cache hits across both per-version caches."""
+        return sum(c["hits"] for c in self._cache_counters.values())
 
-        ``hits``/``misses`` cover both caches (matrix spectra and leverage
-        ridge factors share one counter pair); ``entries`` is the spectrum
-        cache, ``factor_entries`` the leverage factor cache.
+    @property
+    def cache_misses(self) -> int:
+        """Total cache misses across both per-version caches."""
+        return sum(c["misses"] for c in self._cache_counters.values())
+
+    def cache_stats(self) -> dict:
+        """Keyed counters for the per-version caches.
+
+        ``hits``/``misses``/``evictions`` aggregate both caches;
+        ``spectrum`` and ``factor`` break the same counters out per cache
+        (evictions were previously untracked, so cache thrash was
+        invisible); ``entries`` is the spectrum cache's resident count,
+        ``factor_entries`` the leverage factor cache's; ``hit_rate`` is
+        the aggregate fraction of lookups served from cache — what the
+        cluster router and serving replicas report per cell.
         """
+        hits, misses = self.cache_hits, self.cache_misses
         return {
-            "hits": self.cache_hits,
-            "misses": self.cache_misses,
+            "hits": hits,
+            "misses": misses,
+            "evictions": sum(c["evictions"] for c in self._cache_counters.values()),
             "entries": len(self._cache),
             "factor_entries": len(self._factor_cache),
+            "spectrum": dict(self._cache_counters["spectrum"]),
+            "factor": dict(self._cache_counters["factor"]),
+            "hit_rate": hits / max(hits + misses, 1),
         }
 
     # -- batched quadratic forms --------------------------------------------
@@ -415,7 +443,7 @@ class QueryEngine:
             return ridge_factor(rows, w, lam)
 
         return self._lru_get(
-            self._factor_cache, (snap.tenant, snap.version), compute
+            self._factor_cache, (snap.tenant, snap.version), compute, "factor"
         )
 
     def _cached_batch(self, snap: SketchSnapshot, x: np.ndarray) -> np.ndarray:

@@ -294,6 +294,11 @@ class PackedQueryService:
         with self._lock:
             return self._quotas.get(tenant, (0, 0))
 
+    def clear_quota(self, tenant: str) -> None:
+        """Forget a tenant's quota/priority (tenant removal; no-op if unset)."""
+        with self._lock:
+            self._quotas.pop(tenant, None)
+
     def shed_counts(self) -> dict[str, int]:
         """Per-tenant count of submits rejected by the quota."""
         with self._lock:

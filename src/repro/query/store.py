@@ -132,6 +132,132 @@ class SketchStore:
         with self._lock:
             return sorted(self._snaps.get(tenant, {}))
 
+    def versions_since(self, tenant: str, after: int) -> list[SketchSnapshot]:
+        """Retained snapshots newer than version ``after`` (ascending).
+
+        The replica-sync API: a ``ServingReplica`` tracks the last version
+        it pulled per tenant and asks the owning cell for everything
+        published since.  ``after=0`` returns every retained version; an
+        unknown tenant returns ``[]`` (replicas poll ahead of the first
+        publish).  Snapshots are immutable, so handing them across the
+        cell boundary shares, never copies.
+        """
+        with self._lock:
+            shelf = self._snaps.get(tenant, {})
+            return [shelf[v] for v in sorted(shelf) if v > after]
+
+    def install(self, snap: SketchSnapshot) -> SketchSnapshot:
+        """Install an already-versioned snapshot (replica sync / tenant import).
+
+        Unlike ``publish`` the version number is *preserved* — the cell
+        that built the snapshot owns the tenant's version sequence and
+        this store mirrors it.  Installing an existing ``(tenant,
+        version)`` pair is a no-op returning the resident snapshot
+        (idempotent sync); the per-tenant ``retain`` bound still applies.
+        """
+        with self._lock:
+            shelf = self._snaps.setdefault(snap.tenant, {})
+            if snap.version in shelf:
+                return shelf[snap.version]
+            shelf[snap.version] = snap
+            nxt = self._next_version.get(snap.tenant, 1)
+            self._next_version[snap.tenant] = max(nxt, snap.version + 1)
+            if self.retain:
+                for old in sorted(shelf)[: -self.retain]:
+                    del shelf[old]
+            return snap
+
+    def drop_tenant(self, tenant: str) -> int:
+        """Forget a tenant's snapshots *and* its version counter.
+
+        Returns the number of snapshots dropped.  Used by the cluster
+        rebalancer after a tenant export: the destination cell now owns
+        the version sequence, so the source must not retain a counter
+        that could fork it.
+        """
+        with self._lock:
+            dropped = len(self._snaps.pop(tenant, {}))
+            self._next_version.pop(tenant, None)
+            return dropped
+
+    def export_tenant(self, tenant: str) -> tuple[dict, dict]:
+        """One tenant's snapshots as ``(tree, extra)`` checkpoint halves.
+
+        The tenant-scoped subset of ``state_tree``: same leaf/extra format
+        (``kind: "sketch_store"``), restricted to one tenant's versions
+        and version counter.  ``import_tenant`` on another store installs
+        it bit-identically — the cluster rebalancer's payload for moving
+        a live tenant between cells.
+        """
+        with self._lock:
+            shelf = self._snaps.get(tenant, {})
+            snaps = [shelf[v] for v in sorted(shelf)]
+            next_version = {tenant: self._next_version.get(tenant, 1)}
+        tree = {f"snap_{i:05d}": snap.matrix for i, snap in enumerate(snaps)}
+        extra = {
+            "kind": "sketch_store",
+            "retain": self.retain,
+            "next_version": next_version,
+            "snapshots": [
+                {
+                    "key": f"snap_{i:05d}",
+                    "tenant": snap.tenant,
+                    "version": snap.version,
+                    "shape": list(snap.matrix.shape),
+                    "frob": snap.frob,
+                    "eps": snap.eps,
+                    "delta_sum": snap.delta_sum,
+                    "n_seen": snap.n_seen,
+                    "meta": dict(snap.meta),
+                }
+                for i, snap in enumerate(snaps)
+            ],
+        }
+        return tree, extra
+
+    def import_tenant(self, tree: dict, extra: dict) -> list[int]:
+        """Install an ``export_tenant`` payload; returns installed versions.
+
+        Refuses to overwrite: importing a tenant that already has
+        snapshots (or a version counter) here raises — a rebalance must
+        move a tenant onto a cell that does not serve it yet.
+        """
+        if extra.get("kind") != "sketch_store":
+            raise ValueError(
+                f"tenant payload is not a sketch store export: {extra.get('kind')!r}"
+            )
+        tenants = {e["tenant"] for e in extra["snapshots"]} | set(extra["next_version"])
+        if len(tenants) > 1:
+            raise ValueError(f"tenant payload spans multiple tenants: {sorted(tenants)}")
+        with self._lock:
+            for t in tenants:
+                if t in self._snaps or t in self._next_version:
+                    raise ValueError(
+                        f"tenant {t!r} already present in this store; "
+                        "drop_tenant it before importing"
+                    )
+        installed = []
+        for e in extra["snapshots"]:
+            b = np.asarray(tree[e["key"]], np.float32)
+            b.setflags(write=False)
+            self.install(
+                SketchSnapshot(
+                    tenant=e["tenant"],
+                    version=int(e["version"]),
+                    matrix=b,
+                    frob=float(e["frob"]),
+                    eps=float(e["eps"]),
+                    delta_sum=None if e["delta_sum"] is None else float(e["delta_sum"]),
+                    n_seen=int(e["n_seen"]),
+                    meta=dict(e["meta"]),
+                )
+            )
+            installed.append(int(e["version"]))
+        with self._lock:
+            for t, v in extra["next_version"].items():
+                self._next_version[t] = max(self._next_version.get(t, 1), int(v))
+        return installed
+
     def tenants(self) -> list[str]:
         """All tenant namespaces with at least one published snapshot."""
         with self._lock:

@@ -525,6 +525,224 @@ class StreamingPipeline:
         self._register(tenant, _LeverageAdapter(proto, kw), policy, quota)
         return proto
 
+    def _add_from_ctor(
+        self,
+        tenant: str,
+        workload: str,
+        ctor: dict,
+        policy: PublishPolicy | None,
+        quota: TenantQuota | None,
+    ) -> None:
+        """Rebuild one tenant from its recorded ``ctor_meta`` (load/import)."""
+        if workload == "hh":
+            self.add_hh_tenant(
+                tenant,
+                eps=float(ctor["eps"]),
+                protocol=str(ctor["protocol"]),
+                engine=str(ctor["engine"]),
+                policy=policy,
+                quota=quota,
+                **ctor["kw"],
+            )
+        elif workload == "quantile":
+            self.add_quantile_tenant(
+                tenant,
+                eps=float(ctor["eps"]),
+                protocol=str(ctor["protocol"]),
+                engine=str(ctor["engine"]),
+                policy=policy,
+                quota=quota,
+                **ctor["kw"],
+            )
+        elif workload == "leverage":
+            self.add_leverage_tenant(
+                tenant,
+                int(ctor["d"]),
+                eps=float(ctor["eps"]),
+                protocol=str(ctor["protocol"]),
+                engine=str(ctor["engine"]),
+                policy=policy,
+                quota=quota,
+                **ctor["kw"],
+            )
+        elif workload == "matrix":
+            self.add_tenant(
+                tenant,
+                int(ctor["d"]),
+                eps=float(ctor["eps"]),
+                protocol=str(ctor["protocol"]),
+                policy=policy,
+                quota=quota,
+            )
+        else:
+            raise ValueError(f"unknown tenant workload {workload!r}")
+
+    # -- cell-facing tenant migration (repro.cluster) -------------------------
+
+    def export_tenant(self, tenant: str) -> dict:
+        """Capture one live tenant as a portable payload (cluster rebalance).
+
+        The payload holds everything ``import_tenant`` on *another*
+        pipeline needs to continue the tenant bit-identically: the
+        construction recipe (``ctor_meta``), live protocol state
+        (``state_payload`` — the same halves the checkpoint writes),
+        publish policy/quota/counters, and the tenant's published store
+        versions (``SketchStore.export_tenant``, version numbers
+        preserved).  The tenant must have no queries pending here — a
+        live move drains (``flush``) first, because tickets cannot cross
+        pipelines.  The tenant stays registered; callers remove it with
+        ``remove_tenant`` once the importing cell has it.
+        """
+        t = self._tenant(tenant)
+        if self.service.pending(tenant):
+            raise RuntimeError(
+                f"tenant {tenant!r} has {self.service.pending(tenant)} queries "
+                "pending; flush() before exporting"
+            )
+        arrays, proto_meta = t.adapter.state_payload()
+        store_tree, store_extra = self.store.export_tenant(tenant)
+        return {
+            "format": "tenant-export-v1",
+            "tenant": tenant,
+            "workload": t.adapter.workload,
+            "ctor": t.adapter.ctor_meta(),
+            "policy": policy_to_config(t.policy),
+            "quota": None if t.quota is None else list(t.quota),
+            "steps": t.steps,
+            "steps_since_publish": t.steps_since_publish,
+            "publishes": t.publishes,
+            "published_frob": t.published_frob,
+            "latest_version": t.latest_version,
+            "proto_meta": proto_meta,
+            "arrays": {k: np.asarray(v) for k, v in dict(arrays).items()},
+            "store_tree": store_tree,
+            "store_extra": store_extra,
+        }
+
+    def import_tenant(self, payload: dict) -> None:
+        """Install an ``export_tenant`` payload as a live tenant here.
+
+        Restores the protocol state, counters, and published store
+        versions bit-identically — answers after the move match answers
+        before it, version numbers included.  Raises if the tenant name
+        is already registered (or has snapshots) on this pipeline.
+        """
+        if payload.get("format") != "tenant-export-v1":
+            raise ValueError(
+                f"not a tenant export payload: format={payload.get('format')!r}"
+            )
+        name = payload["tenant"]
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        # Store first: import_tenant refuses resident tenants, so a
+        # half-applied payload cannot leave a registered tenant whose
+        # snapshots never arrived.
+        self.store.import_tenant(payload["store_tree"], payload["store_extra"])
+        policy = policy_from_config(payload["policy"])
+        quota = None if payload["quota"] is None else TenantQuota(*payload["quota"])
+        self._add_from_ctor(name, payload["workload"], payload["ctor"], policy, quota)
+        t = self._tenants[name]
+        t.adapter.restore_payload(
+            {k: np.asarray(v) for k, v in payload["arrays"].items()},
+            payload["proto_meta"],
+        )
+        t.steps = int(payload["steps"])
+        t.steps_since_publish = int(payload["steps_since_publish"])
+        t.publishes = int(payload["publishes"])
+        t.published_frob = (
+            None if payload["published_frob"] is None else float(payload["published_frob"])
+        )
+        t.latest_version = (
+            None if payload["latest_version"] is None else int(payload["latest_version"])
+        )
+
+    def remove_tenant(self, tenant: str) -> None:
+        """Deregister a tenant and drop its published versions.
+
+        The rebalancer's final step after a successful export/import.
+        Refuses while queries are pending (flush first); the quota entry
+        is cleared so a later re-add starts clean.
+        """
+        self._tenant(tenant)  # raise KeyError with the registered list
+        if self.service.pending(tenant):
+            raise RuntimeError(
+                f"tenant {tenant!r} has {self.service.pending(tenant)} queries "
+                "pending; flush() before removing"
+            )
+        del self._tenants[tenant]
+        self.service.clear_quota(tenant)
+        self.store.drop_tenant(tenant)
+
+    @staticmethod
+    def read_tenant_export(directory: str, tenant: str, *, step: int | None = None) -> dict:
+        """Build an ``import_tenant`` payload straight from a saved checkpoint.
+
+        Reads only the tenant's leaves (``ckpt.read_subset`` over the
+        manifest's tenant-scoped subset: its ``tenant_NNNN__*`` protocol
+        state plus the store snapshots whose manifest entry names this
+        tenant) — a rebalance from a dead cell's checkpoint never pays
+        for the other tenants' I/O.
+        """
+        from repro import ckpt
+
+        if step is None:
+            step = ckpt.latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(f"no pipeline checkpoint under {directory!r}")
+        manifest = ckpt.read_manifest(directory, step)
+        extra = manifest["extra"]
+        if extra.get("kind") != "streaming_pipeline":
+            raise ValueError(
+                f"checkpoint at {directory!r} step {step} is not a streaming pipeline"
+            )
+        meta = extra["tenants"].get(tenant)
+        if meta is None:
+            raise KeyError(
+                f"tenant {tenant!r} not in checkpoint "
+                f"(has: {sorted(extra['tenants'])})"
+            )
+        prefix = meta["key"] + "__"
+        proto_names = [n for n in manifest["leaves"] if n.startswith(prefix)]
+        snap_entries = sorted(
+            (e for e in extra["store"]["snapshots"] if e["tenant"] == tenant),
+            key=lambda e: e["version"],
+        )
+        snap_names = [f"store__{e['key']}" for e in snap_entries]
+        leaves = ckpt.read_subset(directory, step, proto_names + snap_names)
+        # renumber the snapshot keys from 0 so the payload is byte-for-byte
+        # the same shape a live ``SketchStore.export_tenant`` produces
+        store_tree = {}
+        renumbered = []
+        for i, e in enumerate(snap_entries):
+            key = f"snap_{i:05d}"
+            store_tree[key] = leaves[f"store__{e['key']}"]
+            renumbered.append({**e, "key": key})
+        store_extra = {
+            "kind": "sketch_store",
+            "retain": extra["store"].get("retain", 0),
+            "next_version": {
+                tenant: extra["store"]["next_version"].get(tenant, 1)
+            },
+            "snapshots": renumbered,
+        }
+        return {
+            "format": "tenant-export-v1",
+            "tenant": tenant,
+            "workload": meta["workload"],
+            "ctor": meta["ctor"],
+            "policy": meta["policy"],
+            "quota": meta["quota"],
+            "steps": meta["steps"],
+            "steps_since_publish": meta["steps_since_publish"],
+            "publishes": meta["publishes"],
+            "published_frob": meta["published_frob"],
+            "latest_version": meta["latest_version"],
+            "proto_meta": meta["proto_meta"],
+            "arrays": {n[len(prefix):]: leaves[n] for n in proto_names},
+            "store_tree": store_tree,
+            "store_extra": store_extra,
+        }
+
     def tenants(self) -> list[str]:
         """Registered tenant names (sorted)."""
         return sorted(self._tenants)
@@ -821,49 +1039,9 @@ class StreamingPipeline:
             **pipeline_kw,
         )
         for name, meta in sorted(extra["tenants"].items()):
-            ctor = meta["ctor"]
             policy = policy_from_config(meta["policy"])
             quota = None if meta["quota"] is None else TenantQuota(*meta["quota"])
-            if meta["workload"] == "hh":
-                pipe.add_hh_tenant(
-                    name,
-                    eps=float(ctor["eps"]),
-                    protocol=str(ctor["protocol"]),
-                    engine=str(ctor["engine"]),
-                    policy=policy,
-                    quota=quota,
-                    **ctor["kw"],
-                )
-            elif meta["workload"] == "quantile":
-                pipe.add_quantile_tenant(
-                    name,
-                    eps=float(ctor["eps"]),
-                    protocol=str(ctor["protocol"]),
-                    engine=str(ctor["engine"]),
-                    policy=policy,
-                    quota=quota,
-                    **ctor["kw"],
-                )
-            elif meta["workload"] == "leverage":
-                pipe.add_leverage_tenant(
-                    name,
-                    int(ctor["d"]),
-                    eps=float(ctor["eps"]),
-                    protocol=str(ctor["protocol"]),
-                    engine=str(ctor["engine"]),
-                    policy=policy,
-                    quota=quota,
-                    **ctor["kw"],
-                )
-            else:
-                pipe.add_tenant(
-                    name,
-                    int(ctor["d"]),
-                    eps=float(ctor["eps"]),
-                    protocol=str(ctor["protocol"]),
-                    policy=policy,
-                    quota=quota,
-                )
+            pipe._add_from_ctor(name, meta["workload"], meta["ctor"], policy, quota)
             t = pipe._tenants[name]
             t.adapter.restore_payload(
                 {k: np.asarray(v) for k, v in tree[meta["key"]].items()},

@@ -1,0 +1,412 @@
+"""Cluster layer: hash ring placement, cell migration, router fan-out,
+rebalance determinism, and replica staleness.
+
+The load-bearing property pinned here is bit-identity: a tenant answers
+the same packed query with the same bytes whether it lives on a bare
+``StreamingPipeline``, a 1-cell cluster, a 4-cell cluster, or has been
+moved between cells mid-stream.  Each tenant lives wholly on one cell
+and ``quadform_packed`` per-tenant output slices are independent of pack
+composition, so sharding must be invisible to answers.
+"""
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro import ckpt
+from repro.cluster import (
+    ClusterRouter,
+    HashRing,
+    PipelineCell,
+    ServingReplica,
+    rebalance_plan,
+)
+from repro.core.leverage import score_query, subspace_query
+from repro.core.quantiles import quantile_query
+from repro.query import PackedRequest, QueryShedError
+from repro.runtime import EveryKSteps, StreamingPipeline, TenantQuota
+
+D = 16
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+def _matrix_batches(seed, n_batches=3, rows=32):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=(rows, D)).astype(np.float32) for _ in range(n_batches)]
+
+
+def _weighted_pairs(seed, n_batches=3, rows=100, vocab=30):
+    rng = np.random.default_rng(seed)
+    return [
+        np.stack(
+            [rng.integers(0, vocab, rows), rng.uniform(0.5, 2.0, rows)], axis=1
+        ).astype(np.float32)
+        for _ in range(n_batches)
+    ]
+
+
+def _build_mixed(target):
+    """Register + drive the same four-kind tenant load on any target that
+    exposes the pipeline add/ingest surface (pipeline, cell, or router)."""
+    for i in range(4):
+        target.add_tenant(f"mat-{i}", D, eps=0.2, policy=EveryKSteps(1))
+    target.add_hh_tenant("hh-a", eps=0.05, policy=EveryKSteps(1))
+    target.add_quantile_tenant("qq-a", eps=0.05, policy=EveryKSteps(1))
+    target.add_leverage_tenant("lev-a", D, eps=0.2, policy=EveryKSteps(1))
+    for i in range(4):
+        for b in _matrix_batches(seed=10 + i):
+            target.ingest(f"mat-{i}", b)
+    for b in _weighted_pairs(seed=20):
+        target.ingest("hh-a", b)
+    qrng = np.random.default_rng(21)
+    for _ in range(3):
+        vals = qrng.normal(size=100).astype(np.float32)
+        target.ingest("qq-a", np.stack([vals, np.ones(100, np.float32)], axis=1))
+    for b in _matrix_batches(seed=22):
+        target.ingest("lev-a", b)
+
+
+def _mixed_queries():
+    rng = np.random.default_rng(99)
+    x = rng.normal(size=(5, D)).astype(np.float32)
+    return [(f"mat-{i}", x) for i in range(4)] + [
+        ("hh-a", np.arange(6, dtype=np.float32)[:, None]),
+        ("qq-a", np.stack([quantile_query(0.25), quantile_query(0.9)])),
+        ("lev-a", np.stack([subspace_query(x[0]), score_query(x[1])])),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# hash ring
+# ---------------------------------------------------------------------------
+
+
+def test_ring_is_deterministic_and_balanced():
+    tenants = [f"tenant-{i}" for i in range(200)]
+    r1 = HashRing(["a", "b", "c", "d"])
+    r2 = HashRing(["d", "c", "b", "a"])  # order-insensitive
+    assert r1 == r2
+    assert [r1.place(t) for t in tenants] == [r2.place(t) for t in tenants]
+    spread = r1.spread(tenants)
+    assert sum(spread.values()) == 200
+    assert all(v > 0 for v in spread.values())  # no starved cell at 64 vnodes
+
+
+def test_grow_by_one_moves_tenants_only_onto_the_new_cell():
+    tenants = {f"tenant-{i}": None for i in range(200)}
+    old = HashRing(["a", "b", "c"])
+    placement = {t: old.place(t) for t in tenants}
+    plan = rebalance_plan(old, old.with_cells(["a", "b", "c", "d"]), placement)
+    assert plan.moves  # a new cell always claims some arcs at 64 vnodes
+    assert all(m.dst == "d" for m in plan.moves)
+    assert 0 < plan.moved_fraction < 1
+    assert len(plan.moves) + plan.unmoved == 200
+    # shrink back: exactly the same tenants return, each to its old owner
+    back = rebalance_plan(
+        old.with_cells(["a", "b", "c", "d"]),
+        old,
+        {t: ("d" if any(m.tenant == t for m in plan.moves) else c)
+         for t, c in placement.items()},
+    )
+    assert {m.tenant for m in back.moves} == {m.tenant for m in plan.moves}
+    assert all(placement[m.tenant] == m.dst for m in back.moves)
+
+
+def test_ring_rejects_empty_and_duplicate_cells():
+    with pytest.raises(ValueError):
+        HashRing([])
+    with pytest.raises(ValueError):
+        HashRing(["a", "a"])
+
+
+# ---------------------------------------------------------------------------
+# determinism: bare pipeline == 1-cell == 4-cell, per tenant, bit-identical
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_matches_single_pipeline_bit_identically(mesh):
+    single = StreamingPipeline(mesh, eps=0.2, policy=EveryKSteps(1))
+    _build_mixed(single)
+    queries = _mixed_queries()
+    base = single.engine.query_packed([PackedRequest(t, q) for t, q in queries])
+
+    for n_cells in (1, 4):
+        cells = [
+            PipelineCell(f"cell-{i}", mesh, eps=0.2, policy=EveryKSteps(1))
+            for i in range(n_cells)
+        ]
+        with ClusterRouter(cells) as router:
+            _build_mixed(router)
+            if n_cells == 4:  # the load must actually shard to mean anything
+                assert len({c for c in router.placement().values()}) > 1
+            got = router.query_batch(queries)
+            assert [r.tenant for r in got] == [t for t, _ in queries]
+            for b, g in zip(base, got):
+                assert b.version == g.version
+                assert b.error_bound == g.error_bound
+                np.testing.assert_array_equal(b.estimates, g.estimates)
+
+
+def test_rebalance_round_trip_preserves_answers(mesh):
+    cells = [PipelineCell(f"cell-{i}", mesh, eps=0.2, policy=EveryKSteps(1))
+             for i in range(2)]
+    router = ClusterRouter(cells)
+    _build_mixed(router)
+    queries = _mixed_queries()
+    before = router.query_batch(queries)
+    placement_before = router.placement()
+
+    grown = cells + [PipelineCell("cell-2", mesh, eps=0.2, policy=EveryKSteps(1))]
+    plan = router.scale_to(grown)
+    assert all(m.dst == "cell-2" for m in plan.moves)
+    mid = router.query_batch(queries)
+    shrunk_plan = router.scale_to(cells)  # round trip: back to the old ring
+    assert {m.tenant for m in shrunk_plan.moves} == {m.tenant for m in plan.moves}
+    after = router.query_batch(queries)
+
+    assert router.placement() == placement_before
+    assert router.rebalances == 2
+    for b, m, a in zip(before, mid, after):
+        assert b.version == m.version == a.version
+        np.testing.assert_array_equal(b.estimates, m.estimates)
+        np.testing.assert_array_equal(b.estimates, a.estimates)
+    # moved tenants keep ingesting and publishing after the round trip
+    snap = router.ingest("mat-0", _matrix_batches(seed=77, n_batches=1)[0])
+    assert snap is not None and snap.version == before[0].version + 1
+    router.close()
+
+
+def test_scale_to_refuses_name_collision_with_different_object(mesh):
+    cell = PipelineCell("cell-0", mesh, eps=0.2)
+    router = ClusterRouter([cell])
+    impostor = PipelineCell("cell-0", mesh, eps=0.2)
+    with pytest.raises(ValueError, match="live state"):
+        router.scale_to([impostor])
+    with pytest.raises(ValueError, match="duplicate"):
+        router.scale_to([cell, cell])
+
+
+# ---------------------------------------------------------------------------
+# cell migration mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_export_import_moves_live_tenant_bit_identically(mesh):
+    src = PipelineCell("src", mesh, eps=0.2, policy=EveryKSteps(1))
+    dst = PipelineCell("dst", mesh, eps=0.2, policy=EveryKSteps(1))
+    src.pipeline.add_tenant("t", D, eps=0.2, policy=EveryKSteps(2))
+    batches = _matrix_batches(seed=3, n_batches=5)
+    for b in batches[:3]:
+        src.ingest("t", b)
+
+    payload = src.export_tenant("t")
+    assert payload["format"] == "tenant-export-v1"
+    dst.import_tenant(payload)
+    src.remove_tenant("t")
+    assert src.tenants() == [] and dst.tenants() == ["t"]
+    assert src.store.tenants() == []
+
+    # mid-policy state (steps_since_publish with EveryKSteps(2)) survived:
+    # continuing the same stream publishes the same versions with the same bytes
+    ref = StreamingPipeline(mesh, eps=0.2)
+    ref.add_tenant("t", D, eps=0.2, policy=EveryKSteps(2))
+    for b in batches:
+        ref_snap = ref.ingest("t", b)
+    for b in batches[3:]:
+        moved_snap = dst.ingest("t", b)
+    assert (moved_snap is None) == (ref_snap is None)
+    np.testing.assert_array_equal(
+        dst.store.get("t").matrix, ref.store.get("t").matrix
+    )
+    assert dst.store.versions("t") == ref.store.versions("t")
+
+
+def test_export_refuses_pending_and_import_refuses_duplicates(mesh):
+    cell = PipelineCell("c", mesh, eps=0.2, policy=EveryKSteps(1))
+    cell.pipeline.add_tenant("t", D, eps=0.2)
+    cell.ingest("t", _matrix_batches(seed=4, n_batches=1)[0])
+    cell.submit("t", np.ones(D, np.float32))
+    with pytest.raises(RuntimeError, match="pending"):
+        cell.export_tenant("t")
+    cell.flush()
+    payload = cell.export_tenant("t")
+    with pytest.raises(ValueError, match="already registered"):
+        cell.import_tenant(payload)
+    cell.submit("t", np.ones(D, np.float32))
+    with pytest.raises(RuntimeError, match="pending"):
+        cell.remove_tenant("t")
+    cell.flush()
+
+
+def test_read_tenant_export_from_checkpoint(mesh):
+    cell = PipelineCell("c", mesh, eps=0.2, policy=EveryKSteps(1))
+    _build_mixed(cell.pipeline)
+    with tempfile.TemporaryDirectory() as tmp:
+        cell.save(tmp, step=7)
+        payload = StreamingPipeline.read_tenant_export(tmp, "lev-a")
+        live = cell.export_tenant("lev-a")
+        assert payload["workload"] == live["workload"] == "leverage"
+        assert payload["ctor"] == live["ctor"]
+        assert payload["latest_version"] == live["latest_version"]
+        for k, v in live["arrays"].items():
+            np.testing.assert_array_equal(payload["arrays"][k], v)
+        assert payload["store_extra"] == live["store_extra"]
+
+        fresh = PipelineCell("fresh", mesh, eps=0.2)
+        fresh.import_tenant(payload)
+        q = np.stack([subspace_query(np.ones(D, np.float32))])
+        a = cell.engine.query_batch(q, tenant="lev-a")
+        b = fresh.engine.query_batch(q, tenant="lev-a")
+        np.testing.assert_array_equal(a.estimates, b.estimates)
+
+        with pytest.raises(KeyError, match="ghost"):
+            StreamingPipeline.read_tenant_export(tmp, "ghost")
+
+
+def test_ckpt_read_subset_verifies_and_rejects_missing(tmp_path):
+    tree = {"a": np.arange(6, dtype=np.float32), "b": np.ones((2, 3), np.int32)}
+    ckpt.save(str(tmp_path), 1, tree)
+    sub = ckpt.read_subset(str(tmp_path), 1, ["b"])
+    assert list(sub) == ["b"]
+    np.testing.assert_array_equal(sub["b"], tree["b"])
+    with pytest.raises(KeyError, match="nope"):
+        ckpt.read_subset(str(tmp_path), 1, ["a", "nope"])
+
+
+# ---------------------------------------------------------------------------
+# router: routing, fan-out, shed propagation, parallel ingest
+# ---------------------------------------------------------------------------
+
+
+def test_router_routes_by_ring_and_rejects_unknown(mesh):
+    cells = [PipelineCell(f"cell-{i}", mesh, eps=0.2) for i in range(3)]
+    router = ClusterRouter(cells)
+    router.add_tenant("t", D, eps=0.2, policy=EveryKSteps(1))
+    assert router.placement()["t"] == router.ring.place("t")
+    assert router.cell_for("t").tenants() == ["t"]
+    with pytest.raises(ValueError, match="already registered"):
+        router.add_tenant("t", D, eps=0.2)
+    with pytest.raises(KeyError, match="unknown tenant"):
+        router.ingest("ghost", np.ones((1, D), np.float32))
+
+
+def test_router_shed_propagates_and_is_counted_per_cell(mesh):
+    cells = [PipelineCell(f"cell-{i}", mesh, eps=0.2, policy=EveryKSteps(1))
+             for i in range(2)]
+    router = ClusterRouter(cells)
+    router.add_tenant("t", D, eps=0.2, quota=TenantQuota(max_pending=1))
+    router.ingest("t", _matrix_batches(seed=5, n_batches=1)[0])
+    router.submit("t", np.ones(D, np.float32))
+    with pytest.raises(QueryShedError):
+        router.submit("t", np.ones(D, np.float32))
+    owner = router.placement()["t"]
+    assert router.shed_counts()[owner] == 1
+    assert sum(router.shed_counts().values()) == 1
+    assert router.flush() == 1
+    stats = router.stats()
+    assert stats[owner]["shed"] == 1 and stats[owner]["tenants"] == 1
+
+
+def test_ingest_many_parallel_matches_sequential(mesh):
+    def build():
+        cells = [PipelineCell(f"cell-{i}", mesh, eps=0.2, policy=EveryKSteps(1))
+                 for i in range(4)]
+        router = ClusterRouter(cells)
+        for i in range(6):
+            router.add_tenant(f"mat-{i}", D, eps=0.2, policy=EveryKSteps(1))
+        return router
+
+    batches = [
+        (f"mat-{i}", b)
+        for i in range(6)
+        for b in _matrix_batches(seed=30 + i, n_batches=2)
+    ]
+    seq, par = build(), build()
+    n_seq = seq.ingest_many(batches)
+    n_par = par.ingest_many(batches, parallel=True)
+    assert n_seq == n_par == len(batches)
+    for i in range(6):
+        t = f"mat-{i}"
+        np.testing.assert_array_equal(
+            seq.cell_for(t).store.get(t).matrix,
+            par.cell_for(t).store.get(t).matrix,
+        )
+
+
+# ---------------------------------------------------------------------------
+# serving replica: pull-based sync, read-through, staleness bounds
+# ---------------------------------------------------------------------------
+
+
+def test_replica_read_through_and_staleness_accounting(mesh):
+    cell = PipelineCell("c", mesh, eps=0.2, policy=EveryKSteps(1))
+    cell.pipeline.add_tenant("t", D, eps=0.2, policy=EveryKSteps(1))
+    batches = _matrix_batches(seed=6, n_batches=4)
+    for b in batches[:2]:
+        cell.ingest("t", b)
+
+    replica = ServingReplica(cell)
+    x = np.ones((2, D), np.float32)
+    res = replica.query_batch(x, tenant="t")  # cold: read-through then answer
+    assert replica.read_throughs == 1 and replica.pulled == 2
+    assert res.versions_behind == 0 and res.owner_version == 2
+    np.testing.assert_array_equal(
+        res.result.estimates, cell.engine.query_batch(x, tenant="t").estimates
+    )
+
+    cell.ingest("t", batches[2])  # owner moves ahead; replica serves stale
+    stale = replica.query_batch(x, tenant="t")
+    assert stale.versions_behind == 1 and stale.result.version == 2
+    assert replica.read_throughs == 1  # no refetch: staleness is unbounded here
+
+    assert replica.sync() == 1  # explicit pull catches up
+    fresh = replica.query_batch(x, tenant="t")
+    assert fresh.versions_behind == 0 and fresh.result.version == 3
+
+    pinned = replica.query_batch(x, tenant="t", version=1)  # pulled already: local hit
+    assert pinned.result.version == 1 and replica.read_throughs == 1
+    assert pinned.versions_behind == 2  # staleness measured vs the owner, not local
+
+    late = ServingReplica(cell)  # pinned miss on a cold replica read-through-fetches
+    late_pinned = late.query_batch(x, tenant="t", version=2)
+    assert late_pinned.result.version == 2 and late.read_throughs == 1
+    stats = replica.stats()
+    assert stats["tenants"] == 1 and stats["pulled"] == 3
+    assert set(stats["cache"]) >= {"hits", "misses", "evictions", "hit_rate"}
+
+
+def test_replica_enforces_max_versions_behind(mesh):
+    cell = PipelineCell("c", mesh, eps=0.2, policy=EveryKSteps(1))
+    cell.pipeline.add_tenant("t", D, eps=0.2, policy=EveryKSteps(1))
+    cell.ingest("t", _matrix_batches(seed=7, n_batches=1)[0])
+    replica = ServingReplica(cell, max_versions_behind=0)
+    x = np.ones((1, D), np.float32)
+    replica.query_batch(x, tenant="t")
+    for b in _matrix_batches(seed=8, n_batches=2):
+        cell.ingest("t", b)
+    res = replica.query_batch(x, tenant="t")  # bound forces a refresh
+    assert res.versions_behind == 0
+    assert res.result.version == cell.latest_version("t") == 3
+    with pytest.raises(ValueError, match="max_versions_behind"):
+        ServingReplica(cell, max_versions_behind=-1)
+
+
+def test_replica_follows_router_across_rebalance(mesh):
+    cells = [PipelineCell(f"cell-{i}", mesh, eps=0.2, policy=EveryKSteps(1))
+             for i in range(2)]
+    router = ClusterRouter(cells)
+    _build_mixed(router)
+    replica = ServingReplica(router)
+    x = np.ones((2, D), np.float32)
+    before = replica.query_batch(x, tenant="mat-1")
+    router.scale_to(cells + [PipelineCell("cell-2", mesh, eps=0.2,
+                                          policy=EveryKSteps(1))])
+    after = replica.query_batch(x, tenant="mat-1")  # owner may have moved cells
+    assert after.versions_behind == 0
+    np.testing.assert_array_equal(before.result.estimates, after.result.estimates)
+    router.close()

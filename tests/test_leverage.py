@@ -159,11 +159,32 @@ def test_levscore_kernel_matches_reference(d, n):
     m = rng.normal(size=(d, d)).astype(np.float32)
     m = m @ m.T / d + np.eye(d, dtype=np.float32)
     x = rng.normal(size=(n, d)).astype(np.float32)
-    got = np.asarray(levscore(jnp.asarray(m), jnp.asarray(x)))
+    got = np.asarray(levscore(jnp.asarray(m), jnp.asarray(x), path="pallas"))
     want = np.asarray(ref_levscore(jnp.asarray(m), jnp.asarray(x)))
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
     # and the reference agrees with the numpy oracle the protocols use
     np.testing.assert_allclose(want, ridge_scores(m, x), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("d,n", [(16, 64), (130, 257)])
+def test_levscore_backend_dispatch_paths_agree(d, n):
+    """The backend-aware dispatch: forced pallas and forced xla agree to
+    1e-5, and auto on CPU serves the XLA path bit-identically (the fused
+    kernel is kept for real accelerators, where interpret=False)."""
+    from repro.kernels.ops import levscore
+
+    rng = np.random.default_rng(7 * d + n)
+    m = rng.normal(size=(d, d)).astype(np.float32)
+    m = m @ m.T / d + np.eye(d, dtype=np.float32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    via_pallas = np.asarray(levscore(jnp.asarray(m), jnp.asarray(x), path="pallas"))
+    via_xla = np.asarray(levscore(jnp.asarray(m), jnp.asarray(x), path="xla"))
+    np.testing.assert_allclose(via_pallas, via_xla, rtol=1e-5, atol=1e-6)
+    # auto == xla on CPU (interpret mode): exact, not just close
+    auto = np.asarray(levscore(jnp.asarray(m), jnp.asarray(x)))
+    np.testing.assert_array_equal(auto, via_xla)
+    with pytest.raises(ValueError, match="levscore path"):
+        levscore(jnp.asarray(m), jnp.asarray(x), path="fused")
 
 
 def test_levscore_kernel_shape_validation():

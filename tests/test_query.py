@@ -141,11 +141,16 @@ def test_spectrum_cache_hits_and_version_invalidation(published):
     x = _unit_directions(rng, 8, D)
     engine = QueryEngine(store)
     engine.query_batch(x, tenant="run", path="cached")
-    assert engine.cache_stats() == {"hits": 0, "misses": 1, "entries": 1, "factor_entries": 0}
+    stats = engine.cache_stats()
+    assert (stats["hits"], stats["misses"], stats["entries"]) == (0, 1, 1)
+    assert stats["spectrum"] == {"hits": 0, "misses": 1, "evictions": 0}
     engine.query_batch(x, tenant="run", path="cached")
     engine.top_directions(4, tenant="run")
     engine.stable_rank(tenant="run")
-    assert engine.cache_stats() == {"hits": 3, "misses": 1, "entries": 1, "factor_entries": 0}
+    stats = engine.cache_stats()
+    assert (stats["hits"], stats["misses"], stats["entries"]) == (3, 1, 1)
+    assert stats["hit_rate"] == 0.75
+    assert stats["factor"] == {"hits": 0, "misses": 0, "evictions": 0}
     # a new version is a new cache key: the old entry can never be served
     v2 = store.publish("run", snap.matrix * 2.0, frob=4 * frob, eps=EPS)
     res = engine.query_batch(x, tenant="run", path="cached")
@@ -166,8 +171,12 @@ def test_spectrum_cache_lru_eviction(rng):
     engine = QueryEngine(store, cache_size=2)
     for v in (1, 2, 3, 1):
         engine.spectrum("t", v)
-    # v1 was evicted by v3 and had to be refactored
-    assert engine.cache_stats() == {"hits": 0, "misses": 4, "entries": 2, "factor_entries": 0}
+    # v1 was evicted by v3 and had to be refactored — and the evictions
+    # are *counted* (a thrashing cache must not look healthy)
+    stats = engine.cache_stats()
+    assert (stats["hits"], stats["misses"], stats["entries"]) == (0, 4, 2)
+    assert stats["spectrum"]["evictions"] == 2
+    assert stats["evictions"] == 2
 
 
 def test_top_directions_match_dense_pca(published):
