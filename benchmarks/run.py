@@ -3,13 +3,28 @@
 Prints ``name,us_per_call,derived`` CSV rows.  BENCH_SCALE env var scales
 stream sizes toward the paper's full 1e7-element runs (default 1.0 keeps
 the whole suite to a few minutes on one CPU core).
+
+``--smoke`` shrinks every stream via ``BENCH_SCALE=0.25`` and runs only
+the modules CI gates on (kernels, runtime pipeline, cluster scaling) —
+a couple of minutes that still exercises every launch path end to end,
+including the packed-ingest shootouts, without blessing their numbers.
+An optional positional substring still filters module names.
 """
 from __future__ import annotations
 
+import os
 import sys
+
+SMOKE_MODULES = ("kernels_bench", "runtime_pipeline", "cluster_scaling")
 
 
 def main() -> None:
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    if smoke:
+        args = [a for a in args if a != "--smoke"]
+        os.environ.setdefault("BENCH_SCALE", "0.25")
+
     from benchmarks import (
         cluster_scaling,
         grad_compression,
@@ -26,7 +41,7 @@ def main() -> None:
     )
 
     print("name,us_per_call,derived")
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only = args[0] if args else None
     for mod in (
         hh_protocols,
         quantile_protocols,
@@ -42,6 +57,8 @@ def main() -> None:
         roofline_table,
     ):
         name = mod.__name__.split(".")[-1]
+        if smoke and name not in SMOKE_MODULES:
+            continue
         if only and only not in name:
             continue
         mod.run()

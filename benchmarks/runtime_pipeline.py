@@ -1,17 +1,25 @@
-"""Streaming runtime throughput: packed cross-tenant serving vs per-tenant
-serial dispatch, plus publish latency.
+"""Streaming runtime throughput: packed cross-tenant ingest and serving vs
+per-tenant serial dispatch, plus publish latency.
 
 Drives a ``StreamingPipeline`` with many tenants end to end — policy-driven
 ingest→publish, then a query storm served two ways:
 
   * serial — one ``quadform`` engine call per tenant (T kernel dispatches),
   * packed — one ``query_packed`` call for all tenants whose sketches share
-    (l, d) (a single ``quadform_packed`` launch).
+    (l, d) (a single ``quadform_packed`` launch),
+
+and an ingest shootout over the same fleet shape:
+
+  * serial — one protocol super-step per tenant per wave (T dispatches),
+  * packed — ``ingest_many`` stacking the wave into ONE
+    ``dist.make_packed_runner`` launch whose stacked state stays resident
+    between waves.
 
 This is the heavy multi-user regime the runtime layer exists for: many
 tenants, modest per-tenant batches, where per-dispatch overhead dominates.
 Emits CSV rows and writes ``BENCH_runtime_pipeline.json`` with packed /
-serial queries-per-sec, their speedup, and mean publish latency.
+serial queries-per-sec and ingest rows-per-sec, their speedups, and mean
+publish latency.
 """
 from __future__ import annotations
 
@@ -28,6 +36,56 @@ TENANTS = 8
 QUERIES_PER_TENANT = 64
 D, EPS = 128, 0.2
 ITERS = 10
+INGEST_BATCH = 64  # modest per-tenant rows/wave: the dispatch-bound regime
+INGEST_WAVES = 30
+
+
+def _ingest_shootout(mesh) -> dict:
+    """Packed vs serial ingest over TENANTS same-shape P2 tenants.
+
+    Fresh fleet per path; two warm waves first (the packed path compiles
+    ``from_states`` on wave one and the steady resident-stack program on
+    wave two), then ``INGEST_WAVES`` timed waves.  Returns the BENCH dict
+    with rows/sec both ways plus the pipeline's own ingest counters.
+    """
+    import numpy as np
+
+    from repro.runtime import OnDemand, StreamingPipeline
+
+    rng = np.random.default_rng(7)
+    data = [
+        rng.normal(size=(INGEST_BATCH, D)).astype(np.float32)
+        for _ in range(TENANTS)
+    ]
+    wave = [(f"t{i}", data[i]) for i in range(TENANTS)]
+    out: dict = {}
+    for packed in (True, False):
+        pipe = StreamingPipeline(mesh, eps=EPS, policy=OnDemand())
+        for i in range(TENANTS):
+            pipe.add_tenant(f"t{i}", D, protocol="P2")
+        pipe.ingest_many(wave, packed=packed)
+        pipe.ingest_many(wave, packed=packed)
+        t0 = time.perf_counter()
+        for _ in range(INGEST_WAVES):
+            pipe.ingest_many(wave, packed=packed)
+        dt = time.perf_counter() - t0
+        rows = INGEST_WAVES * TENANTS * INGEST_BATCH
+        key = "packed" if packed else "per_tenant_serial"
+        out[key] = rows / dt
+        if packed:
+            s = pipe.stats()
+            out["packed_counters"] = {
+                k: s[k]
+                for k in (
+                    "packed_launches",
+                    "restacks",
+                    "retraces",
+                    "pack_occupancy",
+                    "shrink_launches",
+                )
+            }
+        pipe.close()
+    return out
 
 
 def run() -> None:
@@ -95,6 +153,20 @@ def run() -> None:
     emit(f"runtime/serve_packed/q={total_q}", packed_s / total_q * 1e6, f"qps={packed_qps:.0f}")
     emit("runtime/speedup_packed_vs_serial", 0.0, f"x{speedup:.2f}")
 
+    ingest = _ingest_shootout(mesh)
+    ingest_speedup = ingest["packed"] / ingest["per_tenant_serial"]
+    emit(
+        f"runtime/ingest_serial/t={TENANTS}",
+        1e6 / ingest["per_tenant_serial"],
+        f"rows_per_sec={ingest['per_tenant_serial']:.0f}",
+    )
+    emit(
+        f"runtime/ingest_packed/t={TENANTS}",
+        1e6 / ingest["packed"],
+        f"rows_per_sec={ingest['packed']:.0f}",
+    )
+    emit("runtime/ingest_speedup_packed_vs_serial", 0.0, f"x{ingest_speedup:.2f}")
+
     out = {
         "tenants": TENANTS,
         "queries_per_tenant": QUERIES_PER_TENANT,
@@ -103,6 +175,16 @@ def run() -> None:
         "publish_latency_s_mean": publish_mean_s,
         "queries_per_sec": {"packed": packed_qps, "per_tenant_serial": serial_qps},
         "speedup_packed_vs_serial": speedup,
+        "ingest": {
+            "rows_per_wave": INGEST_BATCH,
+            "waves": INGEST_WAVES,
+            "counters": ingest["packed_counters"],
+        },
+        "ingest_rows_per_sec": {
+            "packed": ingest["packed"],
+            "per_tenant_serial": ingest["per_tenant_serial"],
+        },
+        "ingest_speedup_packed_vs_serial": ingest_speedup,
     }
     path = os.path.join(os.getcwd(), "BENCH_runtime_pipeline.json")
     with open(path, "w") as f:

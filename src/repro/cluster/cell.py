@@ -68,6 +68,11 @@ class PipelineCell:
         """Absorb one super-step batch for an owned tenant (see pipeline)."""
         return self.pipeline.ingest(tenant, rows)
 
+    def ingest_many(self, batches, *, packed: bool = True) -> int:
+        """Drive owned tenants' interleaved batches, packing same-shape
+        shard tenants per wave (see ``StreamingPipeline.ingest_many``)."""
+        return self.pipeline.ingest_many(batches, packed=packed)
+
     def submit(self, tenant: str, x, *, deadline_s: float | None = None):
         """Admit one query for an owned tenant (see pipeline.submit)."""
         return self.pipeline.submit(tenant, x, deadline_s=deadline_s)

@@ -120,28 +120,31 @@ class ClusterRouter:
         batches: Iterable[tuple[str, "np.ndarray"]],
         *,
         parallel: bool = False,
+        packed: bool = True,
     ) -> int:
         """Drive interleaved tenants; returns snapshots published.
 
-        ``parallel=True`` runs each cell's batch subsequence on its own
-        worker thread — per-tenant order is preserved (a tenant lives on
-        one cell, and each cell replays its subsequence in order), which
-        is all bit-identical ingest requires.  Cells share no state, so
-        the fan-out needs no locks beyond the join.
+        Each cell receives its tenants' batch subsequence as ONE
+        ``StreamingPipeline.ingest_many`` call, so in-cell packing (same
+        pack-key shard tenants stacked into one super-step launch, see
+        ``runtime.ingest_packed``) fires behind every shard boundary;
+        ``packed=False`` forces the strict serial loop inside every cell.
+        ``parallel=True`` additionally runs each cell's call on its own
+        worker thread (thread-per-cell x in-cell packing) — per-tenant
+        order is preserved (a tenant lives on one cell, and each cell
+        replays its subsequence in order), which is all bit-identical
+        ingest requires.  Cells share no state, so the fan-out needs no
+        locks beyond the join.
         """
         per_cell: dict[str, list[tuple[str, np.ndarray]]] = {}
         for tenant, rows in batches:
             per_cell.setdefault(self._tenant_cell[tenant], []).append((tenant, rows))
-        if not parallel or len(per_cell) <= 1:
-            return sum(
-                self._cells[name].ingest(tenant, rows) is not None
-                for name, sub in per_cell.items()
-                for tenant, rows in sub
-            )
 
         def drive(name: str, sub: list[tuple[str, np.ndarray]]) -> int:
-            cell = self._cells[name]
-            return sum(cell.ingest(tenant, rows) is not None for tenant, rows in sub)
+            return self._cells[name].pipeline.ingest_many(sub, packed=packed)
+
+        if not parallel or len(per_cell) <= 1:
+            return sum(drive(name, sub) for name, sub in per_cell.items())
 
         with ThreadPoolExecutor(max_workers=len(per_cell)) as pool:
             futures = [pool.submit(drive, name, sub) for name, sub in per_cell.items()]
@@ -262,7 +265,11 @@ class ClusterRouter:
     # -- accounting / lifecycle ------------------------------------------------
 
     def stats(self) -> dict[str, dict]:
-        """Per-cell snapshot: tenants, pending queries, sheds, cache hit rate."""
+        """Per-cell snapshot: tenants, pending queries, sheds, cache hit
+        rate, plus the cell pipeline's ingest-side counters
+        (``StreamingPipeline.stats()`` with no tenant: rows_per_sec,
+        shrink_launches, pack_occupancy, retraces, ...) under
+        ``"ingest"``."""
         out = {}
         for name in self.cells():
             cell = self._cells[name]
@@ -273,6 +280,7 @@ class ClusterRouter:
                 "shed": self._shed_by_cell.get(name, 0),
                 "cache_hit_rate": cache["hit_rate"],
                 "cache_evictions": cache["evictions"],
+                "ingest": cell.pipeline.stats(),
             }
         return out
 

@@ -30,7 +30,8 @@ All three matrix protocols are provided with fixed-shape jit-able states:
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import functools
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +75,10 @@ __all__ = [
     "protocol_matrix",
     "protocol_frob",
     "make_protocol_runner",
+    "make_packed_runner",
+    "unstack_packed",
+    "PackedRunner",
+    "PACKABLE_PROTOCOLS",
 ]
 
 
@@ -239,13 +244,21 @@ def p2_step(cfg: ProtocolConfig, st: P2State, rows: jax.Array) -> P2State:
     # -- direction sends (Algorithm 5.3 second half) --
     # After fd_update the buffer rows are orthogonal sigma_i v_i: the svd in
     # Algorithm 5.3 is already materialised; the send set is a row mask.
+    # Only the first l_site buffer rows can be non-zero post-shrink (the
+    # shrink weights vanish past l), so the gather ships (l_site, d) per
+    # site and the coordinator absorbs m*l_site rows — half the chunked
+    # shrinks of gathering the raw 2l buffer, with no phantom all-zero
+    # chunks spending shrink mass at the coordinator.
     site_fd = fdlib.fd_update_stream(st.site_fd, rows, use_pallas=cfg.use_pallas)
     buf = site_fd.buf
-    sq = _row_sq(buf)
+    live = buf[: cfg.l_site]
+    sq = _row_sq(live)
     mask = sq >= (cfg.eps / cfg.m) * f_hat
-    payload = jnp.where(mask[:, None], buf, 0.0)
-    site_fd = site_fd._replace(buf=jnp.where(mask[:, None], 0.0, buf))
-    gathered = lax.all_gather(payload, cfg.axis)  # (m, 2*l_site, d)
+    payload = jnp.where(mask[:, None], live, 0.0)
+    site_fd = site_fd._replace(
+        buf=buf.at[: cfg.l_site].set(jnp.where(mask[:, None], 0.0, live))
+    )
+    gathered = lax.all_gather(payload, cfg.axis)  # (m, l_site, d)
     coord_fd = fdlib.fd_update_stream(
         st.coord_fd, gathered.reshape(-1, cfg.d), use_pallas=cfg.use_pallas
     )
@@ -761,6 +774,32 @@ def protocol_frob(protocol: str, state, matrix=None) -> float:
     return float(jnp.sum(b * b))
 
 
+# Per-site state leaves (leading m axis sharded over cfg.axis) per protocol;
+# every other leaf is replicated.  Shared by both runner factories.
+_PER_SITE_LEAVES = {
+    "P1": ("site_fd", "f_i"),
+    "P2": ("site_fd", "f_j"),
+    "P3": ("rng",),
+    "HHP1": ("site_mg", "w_i"),
+    "QP1": ("site_q", "w_i", "w_pushed"),
+    "LP1": ("site_fd", "f_i"),
+}
+
+# Protocols safe to advance as a stacked multi-tenant pack: their step is a
+# deterministic function of (state, rows) for which appended zero rows are
+# exact no-ops on every served quantity (zero-norm rows add nothing to site
+# sketches, masses, thresholds, or candidate sets).  P3 is excluded — its
+# per-step PRNG draw shape follows the padded row count, so padding would
+# change the sample — as are the pair-input protocols (HHP1/QP1), whose
+# weighted items cannot be zero-padded without perturbing the summaries.
+PACKABLE_PROTOCOLS = ("P1", "P2", "LP1")
+
+# Jitted (state0, step) runners keyed on (protocol, cfg, mesh): the T-th
+# same-shape tenant reuses the first tenant's trace instead of re-tracing.
+_RUNNER_CACHE: dict = {}
+_PACKED_RUNNER_CACHE: dict = {}
+
+
 def make_protocol_runner(protocol: str, cfg: ProtocolConfig, mesh: jax.sharding.Mesh):
     """Return ``(init_state, step)``: one jitted shard_map super-step.
 
@@ -771,22 +810,22 @@ def make_protocol_runner(protocol: str, cfg: ProtocolConfig, mesh: jax.sharding.
     arrays sharded the same way.  ``state``
     leaves that are per-site carry a leading ``m`` axis sharded over
     ``cfg.axis``; replicated leaves are replicated.
+
+    Runners are cached on ``(protocol, cfg, mesh)``: protocol state is
+    immutable and the step function pure, so same-shape tenants share one
+    jitted callable (and its traces) instead of paying a retrace each.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
     cfg = cfg.resolved()
+    cached = _RUNNER_CACHE.get((protocol, cfg, mesh))
+    if cached is not None:
+        return cached
     init_fn = _INITS[protocol]
     step_fn = _STEPS[protocol]
 
-    per_site_leaves = {
-        "P1": ("site_fd", "f_i"),
-        "P2": ("site_fd", "f_j"),
-        "P3": ("rng",),
-        "HHP1": ("site_mg", "w_i"),
-        "QP1": ("site_q", "w_i", "w_pushed"),
-        "LP1": ("site_fd", "f_i"),
-    }[protocol]
+    per_site_leaves = _PER_SITE_LEAVES[protocol]
     # HH and quantile streams arrive as a (keys/values, weights) pair of
     # 1-D arrays; matrix and leverage streams as one (n, d) row block.
     if protocol in ("HHP1", "QP1"):
@@ -850,4 +889,128 @@ def make_protocol_runner(protocol: str, cfg: ProtocolConfig, mesh: jax.sharding.
             check_rep=False,
         )
     )
+    _RUNNER_CACHE[(protocol, cfg, mesh)] = (state0, step)
     return state0, step
+
+
+class PackedRunner(NamedTuple):
+    """The two jitted entry points of one packed super-step program.
+
+    ``stacked(stacked_state, rows)`` advances a resident ``(T, ...)``
+    stacked state — the steady-state path: leaves stay on device in
+    their pack layout between waves, nothing restacks.
+    ``from_states(states_tuple, rows)`` additionally stacks a tuple of T
+    per-tenant states inside the same jit first — the (re)pack path for
+    a group's first wave or after a member stepped serially.  Both
+    return the advanced *stacked* state; slice a tenant out lazily with
+    ``unstack_packed`` only when its state is actually read.
+    """
+
+    stacked: Callable
+    from_states: Callable
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def unstack_packed(stacked_state, t: int):
+    """Materialize tenant ``t``'s per-tenant state from a pack's stacked state.
+
+    Jitted (one trace per (state structure, t)) so slicing a tenant out is
+    ONE dispatch, not one per leaf — publish-heavy fleets read a member's
+    state every wave, and an eager per-leaf tree.map would hand back most
+    of the dispatch savings packing bought.
+    """
+    return jax.tree.map(lambda a: a[t], stacked_state)
+
+
+def make_packed_runner(
+    protocol: str, cfg: ProtocolConfig, mesh: jax.sharding.Mesh
+) -> PackedRunner:
+    """Return a ``PackedRunner`` advancing T tenants in one launch.
+
+    The multi-tenant ingest megakernel: T per-tenant protocol states
+    (same packable protocol, equal ``cfg``) stack along a leading tenant
+    axis — per-site leaves become ``(T, m, ...)`` sharded
+    ``P(None, axis)``, replicated leaves ``(T, ...)``, the tenants'
+    zero-padded row batches one ``(T, n, d)`` block ``P(None, axis,
+    None)`` — and a ``shard_map`` whose body ``vmap``s the per-site
+    super-step over the tenant axis advances the whole pack in ONE
+    dispatch (collectives batch over ``vmap``; the named site axis is
+    orthogonal to the tenant axis).  The advanced state STAYS stacked:
+    ``PackedRunner.stacked`` feeds it straight into the next wave with
+    zero per-tenant host dispatches, and ``unstack_packed`` slices a
+    tenant out only when something actually reads its state (publish,
+    query, checkpoint) — restacking 14 leaves x T tenants per wave is
+    what made an early packed path *slower* than serial on CPU.
+
+    Ragged packs zero-pad each tenant's rows *per site block* up to the
+    common ``n`` (see ``runtime.ingest_packed``); zero rows are exact
+    no-ops for every ``PACKABLE_PROTOCOLS`` member, so the packed advance
+    matches T serial ``make_protocol_runner`` steps on every served
+    answer.  Cached on ``(protocol, cfg, mesh)`` like the serial runner
+    (each jit retraces per distinct (T, n) launch shape).
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    cfg = cfg.resolved()
+    if protocol not in PACKABLE_PROTOCOLS:
+        raise ValueError(
+            f"protocol {protocol!r} is not packable; choose from {PACKABLE_PROTOCOLS}"
+        )
+    cached = _PACKED_RUNNER_CACHE.get((protocol, cfg, mesh))
+    if cached is not None:
+        return cached
+    step_fn = _STEPS[protocol]
+    per_site_leaves = _PER_SITE_LEAVES[protocol]
+    one = _INITS[protocol](cfg)  # structure only: specs mirror the state tree
+
+    def _specs(state) -> object:
+        specs = {}
+        for name in state._fields:
+            leaf = getattr(state, name)
+            if name in per_site_leaves:
+                spec = jax.tree.map(lambda _: P(None, cfg.axis), leaf)
+            else:
+                spec = jax.tree.map(lambda _: P(), leaf)
+            specs[name] = spec
+        return type(state)(**specs)
+
+    def _inner(state, rows):
+        # Inside shard_map: per-site leaves arrive (T, 1, ...); drop the
+        # site axis, vmap the per-site step over the tenant axis, rebatch.
+        def unbatch(name, leaf):
+            if name in per_site_leaves:
+                return jax.tree.map(lambda a: a[:, 0], leaf)
+            return leaf
+
+        local = type(state)(**{n: unbatch(n, getattr(state, n)) for n in state._fields})
+        new = jax.vmap(lambda st, r: step_fn(cfg, st, r))(local, rows)
+
+        def rebatch(name, leaf):
+            if name in per_site_leaves:
+                return jax.tree.map(lambda a: a[:, None], leaf)
+            return leaf
+
+        return type(new)(**{n: rebatch(n, getattr(new, n)) for n in new._fields})
+
+    specs = _specs(one)
+    sharded = shard_map(
+        _inner,
+        mesh=mesh,
+        in_specs=(specs, P(None, cfg.axis, None)),
+        out_specs=specs,
+        check_rep=False,
+    )
+
+    @jax.jit
+    def step_stacked(stacked, rows):
+        return sharded(stacked, rows)
+
+    @jax.jit
+    def step_from_states(states, rows):
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        return sharded(stacked, rows)
+
+    runner = PackedRunner(stacked=step_stacked, from_states=step_from_states)
+    _PACKED_RUNNER_CACHE[(protocol, cfg, mesh)] = runner
+    return runner

@@ -24,6 +24,7 @@ callers get the *instance-specific* bound, usually far tighter).
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -39,8 +40,37 @@ __all__ = [
     "fd_query",
     "fd_matrix",
     "fd_shrink",
+    "jit_cache_stats",
     "FDSketch",
 ]
+
+
+# Jitted FD callables, keyed on (op, l, d, dtype, use_pallas[, n_chunks]).
+# Per-tenant ingest used to build a fresh trace per tracker instance for
+# identical shapes; the cache makes the T-th tenant a dict hit.  ``misses``
+# is the retrace count pipeline ingest observability surfaces.
+_JIT_CACHE: dict = {}
+_JIT_STATS = {"hits": 0, "misses": 0}
+
+
+def jit_cache_stats() -> dict:
+    """Counters for the shared jitted-callable cache.
+
+    ``misses`` counts distinct (shape, dtype, backend) signatures traced —
+    the retrace count; ``hits`` counts calls served by an already-built
+    callable.  Read by ``StreamingPipeline.stats()``.
+    """
+    return dict(_JIT_STATS)
+
+
+def _cached_jit(key: tuple, build):
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        _JIT_STATS["misses"] += 1
+        fn = _JIT_CACHE[key] = build()
+    else:
+        _JIT_STATS["hits"] += 1
+    return fn
 
 
 class FDState(NamedTuple):
@@ -122,15 +152,8 @@ def fd_shrink(buf: jax.Array, *, use_pallas: bool = False) -> tuple[jax.Array, j
     return new_buf, delta
 
 
-def fd_update(state: FDState, chunk: jax.Array, *, use_pallas: bool = False) -> FDState:
-    """Absorb a chunk of exactly ``l`` rows (zero-pad short chunks).
-
-    Zero rows are free: they do not perturb the sketch and are excluded from
-    ``frob`` / ``n_seen`` automatically (norm 0, count via non-zero test).
-    """
+def _fd_update_impl(state: FDState, chunk: jax.Array, *, use_pallas: bool) -> FDState:
     l = state.l
-    if chunk.shape != (l, state.d):
-        raise ValueError(f"fd_update wants a ({l}, {state.d}) chunk, got {chunk.shape}")
     row_sq = jnp.sum(chunk.astype(jnp.float32) ** 2, axis=1)
     buf = state.buf.at[l:].set(chunk.astype(state.buf.dtype))
     new_buf, delta = fd_shrink(buf, use_pallas=use_pallas)
@@ -142,20 +165,49 @@ def fd_update(state: FDState, chunk: jax.Array, *, use_pallas: bool = False) -> 
     )
 
 
+def fd_update(state: FDState, chunk: jax.Array, *, use_pallas: bool = False) -> FDState:
+    """Absorb a chunk of exactly ``l`` rows (zero-pad short chunks).
+
+    Zero rows are free: they do not perturb the sketch and are excluded from
+    ``frob`` / ``n_seen`` automatically (norm 0, count via non-zero test).
+    The jitted callable is cached on ``(l, d, dtype, use_pallas)`` so every
+    same-shape tenant shares one trace.
+    """
+    l = state.l
+    if chunk.shape != (l, state.d):
+        raise ValueError(f"fd_update wants a ({l}, {state.d}) chunk, got {chunk.shape}")
+    fn = _cached_jit(
+        ("update", l, state.d, str(state.buf.dtype), bool(use_pallas)),
+        lambda: jax.jit(functools.partial(_fd_update_impl, use_pallas=use_pallas)),
+    )
+    return fn(state, chunk)
+
+
+def _fd_stream_impl(state: FDState, chunks: jax.Array, *, use_pallas: bool) -> FDState:
+    def body(st, ch):
+        return _fd_update_impl(st, ch, use_pallas=use_pallas), None
+
+    state, _ = jax.lax.scan(body, state, chunks)
+    return state
+
+
 def fd_update_stream(state: FDState, rows: jax.Array, *, use_pallas: bool = False) -> FDState:
-    """Absorb ``(n, d)`` rows via a scan of l-row chunks (n padded up)."""
+    """Absorb ``(n, d)`` rows via a scan of l-row chunks (n padded up).
+
+    The jitted scan is cached on ``(l, d, dtype, use_pallas, n_chunks)`` —
+    per-tenant ingest of a common batch shape stops re-tracing per tenant.
+    """
     l, d = state.l, state.d
     n = rows.shape[0]
     n_chunks = -(-n // l)
     pad = n_chunks * l - n
     rows = jnp.pad(rows, ((0, pad), (0, 0)))
     chunks = rows.reshape(n_chunks, l, d)
-
-    def body(st, ch):
-        return fd_update(st, ch, use_pallas=use_pallas), None
-
-    state, _ = jax.lax.scan(body, state, chunks)
-    return state
+    fn = _cached_jit(
+        ("stream", l, d, str(state.buf.dtype), bool(use_pallas), n_chunks),
+        lambda: jax.jit(functools.partial(_fd_stream_impl, use_pallas=use_pallas)),
+    )
+    return fn(state, chunks)
 
 
 def fd_merge(a: FDState, b: FDState, *, use_pallas: bool = False) -> FDState:

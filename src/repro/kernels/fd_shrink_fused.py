@@ -1,0 +1,110 @@
+"""Pallas TPU kernels: batched FD shrink over a stacked tenant axis.
+
+The multi-tenant ingest path stacks T same-shape FD buffers into one
+``(T, L, d)`` array (``runtime/ingest_packed.py``); the shrink that used to
+run per tenant — Gram, eigh, projection, three dispatches each — becomes
+three *batched* stages over the whole pack:
+
+  * ``fd_gram_batched_pallas``    — ``G_t = B_t @ B_t.T`` for every tenant in
+    one launch: ``grid = (T, d / BLOCK_D)`` with d innermost, so each
+    tenant's ``(L, L)`` accumulator lives exactly one d-sweep, the same
+    lifetime trick ``quadform_packed`` uses.
+  * (batched ``eigh`` over the stacked Grams — XLA's ``jnp.linalg.eigh``
+    batches over leading axes natively; no kernel needed.)
+  * ``fd_project_batched_pallas`` — ``B'_t = diag(w_t) @ (U_t.T @ B_t)`` with
+    the rescale fused into the matmul epilogue, one launch for all T.
+
+VMEM working set per step matches the single-tenant kernels (the leading
+block axis is 1): L*BLOCK_D streamed block + L*L resident accumulator /
+eigenvectors + L*1 weights.  ``ops.fd_shrink`` wraps the three stages with
+padding + backend dispatch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_D = 512
+
+
+def _gram_batched_kernel(b_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    blk = b_ref[0].astype(jnp.float32)
+    o_ref[...] += jax.lax.dot_general(
+        blk,
+        blk,
+        dimension_numbers=(((1,), (1,)), ((), ())),  # B_t_blk @ B_t_blk.T
+        preferred_element_type=jnp.float32,
+    )[None]
+
+
+def fd_gram_batched_pallas(
+    b: jax.Array,
+    *,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+) -> jax.Array:
+    """Stacked FD Gram products ``G_t = B_t @ B_t.T`` in one launch.
+
+    b: (T, L, d) -> (T, L, L) f32.  L % 8 == 0, d % block_d == 0 (pad
+    upstream — ``ops.fd_shrink`` does; zero rows/cols are exact no-ops).
+    """
+    t, l, d = b.shape
+    if d % block_d != 0:
+        raise ValueError(f"d={d} must be a multiple of block_d={block_d}")
+    grid = (t, d // block_d)  # d innermost: one accumulator lifetime per tenant
+    return pl.pallas_call(
+        _gram_batched_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, l, block_d), lambda t, i: (t, 0, i))],
+        out_specs=pl.BlockSpec((1, l, l), lambda t, i: (t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, l, l), jnp.float32),
+        interpret=interpret,
+    )(b)
+
+
+def _project_batched_kernel(w_ref, u_ref, b_ref, o_ref):
+    ut_b = jax.lax.dot_general(
+        u_ref[0].astype(jnp.float32),
+        b_ref[0].astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),  # U_t.T @ B_t_blk
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = (w_ref[0] * ut_b).astype(o_ref.dtype)[None]
+
+
+def fd_project_batched_pallas(
+    w: jax.Array,
+    u: jax.Array,
+    b: jax.Array,
+    *,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+) -> jax.Array:
+    """Stacked shrink projections ``diag(w_t) @ (U_t.T @ B_t)`` in one launch.
+
+    w: (T, L), u: (T, L, L), b: (T, L, d) -> (T, L, d) in b's dtype.  Each
+    tenant's U and w stay VMEM-resident across its d-sweep; B streams.
+    """
+    t, l, d = b.shape
+    if u.shape != (t, l, l) or w.shape != (t, l):
+        raise ValueError(f"shape mismatch: w{w.shape} u{u.shape} b{b.shape}")
+    if d % block_d != 0:
+        raise ValueError(f"d={d} must be a multiple of block_d={block_d}")
+    grid = (t, d // block_d)
+    return pl.pallas_call(
+        _project_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, l, 1), lambda t, i: (t, 0, 0)),  # w_t, resident
+            pl.BlockSpec((1, l, l), lambda t, i: (t, 0, 0)),  # U_t, resident
+            pl.BlockSpec((1, l, block_d), lambda t, i: (t, 0, i)),  # B_t, streamed
+        ],
+        out_specs=pl.BlockSpec((1, l, block_d), lambda t, i: (t, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((t, l, d), b.dtype),
+        interpret=interpret,
+    )(w[:, :, None], u, b)

@@ -26,6 +26,63 @@ def ref_fd_project(w: jax.Array, u: jax.Array, b: jax.Array) -> jax.Array:
     return out.astype(b.dtype)
 
 
+def ref_fd_gram_batched(b: jax.Array) -> jax.Array:
+    """Stacked FD Grams ``G_t = B_t @ B_t.T``.  b: (T, L, d) -> (T, L, L)."""
+    return jax.vmap(ref_fd_gram)(b)
+
+
+def ref_fd_project_batched(w: jax.Array, u: jax.Array, b: jax.Array) -> jax.Array:
+    """Stacked shrink projections ``diag(w_t) @ (U_t.T @ B_t)``.
+
+    w: (T, L), u: (T, L, L), b: (T, L, d) -> (T, L, d) in b's dtype.
+    """
+    return jax.vmap(ref_fd_project)(w, u, b)
+
+
+def ref_fd_shrink(b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One full FD shrink of a stacked buffer: (T, 2l, d) -> (B', delta).
+
+    The oracle for ``ops.fd_shrink``: Gram -> eigh (descending) -> clamp ->
+    ``delta_t = lam_t[l]`` -> guarded ``w`` -> projection, all batched over
+    the leading tenant axis.  Returns ``(B', delta)`` with B' (T, 2l, d)
+    and delta (T,) f32.  Also accepts unstacked (2l, d) -> ((2l, d), ()).
+    """
+    squeeze = b.ndim == 2
+    bs = b[None] if squeeze else b
+    g = ref_fd_gram_batched(bs)
+    lam, u = jnp.linalg.eigh(g)  # ascending
+    lam = jnp.flip(lam, axis=-1)
+    u = jnp.flip(u, axis=-1)
+    lam = jnp.maximum(lam, 0.0)
+    half = bs.shape[1] // 2
+    delta = lam[:, half]
+    shifted = jnp.maximum(lam - delta[:, None], 0.0)
+    w = jnp.sqrt(shifted / jnp.maximum(lam, 1e-30))
+    w = jnp.where(lam <= 1e-30, 0.0, w)
+    out = ref_fd_project_batched(w, u, bs)
+    if squeeze:
+        return out[0], delta[0]
+    return out, delta
+
+
+def ref_fd_spectra(b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Stacked sketch spectra via the Gram trick: (T, l, d) -> (s, vt).
+
+    The oracle for ``ops.fd_spectra``: ``s`` (T, l) descending singular
+    values, ``vt`` (T, l, d) right singular directions (rows below
+    ``1e-7 * s_max`` zeroed).  Matches a per-matrix SVD up to per-row sign.
+    """
+    g = ref_fd_gram_batched(b)
+    lam, u = jnp.linalg.eigh(g)
+    lam = jnp.maximum(jnp.flip(lam, axis=-1), 0.0)
+    u = jnp.flip(u, axis=-1)
+    s = jnp.sqrt(lam)
+    tol = s[:, :1] * 1e-7
+    w = jnp.where(s > tol, 1.0 / jnp.maximum(s, 1e-30), 0.0)
+    vt = ref_fd_project_batched(w, u, b)
+    return s, vt
+
+
 def ref_levscore(m: jax.Array, x: jax.Array) -> jax.Array:
     """Batched quadratic form ``tau_j = x_j^T M x_j``.  m: (d, d), x: (N, d) -> (N,)."""
     xf = x.astype(jnp.float32)

@@ -156,6 +156,52 @@ class QueryEngine:
             "spectrum",
         )
 
+    def refresh_spectra(self, snaps: list) -> int:
+        """Warm the spectrum cache for freshly published matrix snapshots.
+
+        Groups the snapshots' sketches by (l, d) shape (wide sketches
+        only, ``l <= d``) and factors each group with ONE stacked Gram
+        eigendecomposition (``kernels.ops.fd_spectra``) instead of one
+        SVD per tenant — the publish-time half of packed multi-tenant
+        ingest.  Per-row signs may differ from the SVD path; every
+        consumer (cached quadforms, ``top_directions``, ``stable_rank``)
+        is sign-invariant or inherits the same inherent ambiguity.
+        Entries land in the LRU the query paths read; hits/misses are
+        not counted (this is a prefill, not a lookup), evictions are.
+        Non-matrix, tall, empty, or already-cached snapshots are
+        skipped.  Returns the number of spectra warmed.
+        """
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import fd_spectra
+
+        by_shape: dict[tuple[int, int], list[SketchSnapshot]] = {}
+        for snap in snaps:
+            mat = np.asarray(snap.matrix)
+            if (
+                _workload(snap) != "matrix"
+                or (snap.tenant, snap.version) in self._cache
+                or mat.ndim != 2
+                or not 0 < mat.shape[0] <= mat.shape[1]
+            ):
+                continue
+            by_shape.setdefault(mat.shape, []).append(snap)
+        warmed = 0
+        counters = self._cache_counters["spectrum"]
+        for group in by_shape.values():
+            b = jnp.asarray(np.stack([np.asarray(s.matrix) for s in group]))
+            s_all, vt_all = fd_spectra(b, interpret=self.interpret)
+            s_all, vt_all = np.asarray(s_all), np.asarray(vt_all)
+            for t, snap in enumerate(group):
+                self._cache[(snap.tenant, snap.version)] = Spectrum(
+                    s=s_all[t], vt=vt_all[t]
+                )
+                warmed += 1
+                while len(self._cache) > self.cache_size:
+                    self._cache.popitem(last=False)
+                    counters["evictions"] += 1
+        return warmed
+
     @property
     def cache_hits(self) -> int:
         """Total cache hits across both per-version caches."""

@@ -14,7 +14,11 @@ runtime substrate:
   * pipeline.py — ``StreamingPipeline``: many tenants' ingest → publish →
                   serve lifecycle in one object, with cross-tenant packed
                   query admission and ``repro.ckpt`` persistence.
+  * ingest_packed.py — stacked multi-tenant ingest: same-shape shard
+                  tenants advance in one ``(T, ...)`` super-step launch
+                  (``ingest_many``'s fast path).
 """
+from repro.runtime.ingest_packed import ingest_packed, pack_signature
 from repro.runtime.pipeline import StreamingPipeline, TenantStats
 from repro.runtime.policies import (
     EveryKSteps,
@@ -53,6 +57,8 @@ __all__ = [
     "TenantStats",
     "create_protocol",
     "get_spec",
+    "ingest_packed",
+    "pack_signature",
     "policy_from_config",
     "policy_to_config",
     "protocol_names",

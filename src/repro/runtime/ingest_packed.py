@@ -1,0 +1,169 @@
+"""Packed multi-tenant ingest: one stacked super-step for same-shape tenants.
+
+A ``StreamingPipeline`` fleet often holds many tenants with identical
+protocol configs — same ``(l, d, dtype)`` sketch shapes on the same mesh.
+Serially each ingest batch pays its own Python dispatch, its own shard_map
+launch, and its own FD shrink; packed ingest stacks the group's protocol
+states into ``(T, ...)`` pytrees, coalesces their row batches into one
+zero-padded ``(T, n_pad, d)`` array, and advances every tenant with ONE
+``dist.make_packed_runner`` launch (``jit(shard_map(vmap(step)))``).
+
+Zero padding is exact for the packable protocols (``dist.
+PACKABLE_PROTOCOLS``): zero rows contribute nothing to any Gram, mass, or
+threshold, so a ragged batch or a cold tenant rides the same launch as a
+full one — equivalence on served answers is regression-tested against
+serial ingest for every protocol kind.
+
+Padding layout: the packed runner shards the row axis over the mesh with
+``P(None, axis, None)``, so site ``j`` reads the contiguous block
+``rows[:, j*n_pad/m : (j+1)*n_pad/m]``.  To preserve the serial
+``P(axis, None)`` row→site assignment, each tenant's batch is split into
+its ``m`` per-site blocks and each block is zero-padded independently
+(``_pad_rows``).  Per-site lengths are bucketed to powers of two so the
+jitted launch retraces O(log n) times, not once per distinct batch size.
+
+The pack's stacked state stays RESIDENT between waves: the first launch
+for a group restacks the members' states inside the jit
+(``PackedRunner.from_states``) and every later wave feeds the cached
+stacked output straight back in (``PackedRunner.stacked``), so the
+steady state moves zero per-tenant leaves per wave.  Each member holds a
+lazy ``(stacked, index)`` slot and only slices its own state out when a
+publish, query, or checkpoint actually reads it; per-member ``_epoch``
+counters detect out-of-band writes (a serial step, a restore) and force
+a restack for the next wave.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import distributed as dist
+
+__all__ = ["ingest_packed", "pack_signature", "pack_target", "shape_cache_stats"]
+
+# Distinct (pack_key, T, n_pad) launch shapes seen — each is one XLA trace
+# of the packed step; the pipeline surfaces len() as its retrace counter.
+_SHAPES_SEEN: set = set()
+
+
+def shape_cache_stats() -> dict:
+    """Packed-launch trace stats: ``retraces`` = distinct shapes compiled."""
+    return {"retraces": len(_SHAPES_SEEN)}
+
+
+def pack_target(adapter):
+    """The shard protocol behind a pipeline adapter, or None.
+
+    Matrix adapters wrap a ``DistributedMatrixTracker`` whose ``_proto``
+    is the registry ``ShardProtocol``; leverage/hh/quantile adapters hold
+    the registry protocol directly.  Event-engine protocols (no
+    ``pack_key``) return None — they always ingest serially.
+    """
+    target = adapter.target
+    proto = getattr(target, "_proto", target)
+    return proto if hasattr(proto, "pack_key") else None
+
+
+def pack_signature(adapter):
+    """The tenant's pack grouping key, or None when it must go serial."""
+    proto = pack_target(adapter)
+    return None if proto is None else proto.pack_key()
+
+
+def _bucket(n: int) -> int:
+    """Next power of two >= n (>= 1): bounds retraces to O(log n) shapes."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def _pad_rows(rows: np.ndarray, m: int, per_pad: int) -> np.ndarray:
+    """Zero-pad an (n, d) batch to (m * per_pad, d), per-site block-wise.
+
+    Preserves the serial row→site assignment: site ``j``'s rows land in
+    the ``j``-th contiguous ``per_pad`` block, front-aligned, zeros after.
+    """
+    n, d = rows.shape
+    per = n // m
+    out = np.zeros((m * per_pad, d), rows.dtype)
+    out.reshape(m, per_pad, d)[:, :per] = rows.reshape(m, per, d)
+    return out
+
+
+def ingest_packed(entries: list) -> dict:
+    """Advance a group of same-key shard protocols in one stacked launch.
+
+    ``entries`` is a list of ``(proto, rows)`` pairs whose ``pack_key()``
+    values are all equal (the caller groups by ``pack_signature``); rows
+    are (n_t, d) float32 with ``n_t % m == 0`` (the same shardability the
+    serial path requires).  Each protocol is pointed at its slot in the
+    stacked result via ``apply_packed`` — afterwards its state, row
+    counter, and host caches look exactly as if it had stepped serially,
+    but the per-tenant slice is deferred until something reads it.
+
+    Steady state is restack-free: the group's stacked output is cached on
+    the first member as ``_pack_group = (members, stacked, epochs)`` and
+    reused whenever the same members arrive with unchanged epochs;
+    otherwise the launch restacks the members' current states inside the
+    jit.
+
+    Returns launch counters: ``tenants``, ``rows`` (real rows absorbed),
+    ``pad_rows`` (zero-filled slots), ``new_shape`` (True when this
+    launch shape had not been traced before), ``restacked`` (True when
+    the launch could not reuse a cached stacked state).
+    """
+    import jax.numpy as jnp
+
+    if not entries:
+        return {
+            "tenants": 0, "rows": 0, "pad_rows": 0,
+            "new_shape": False, "restacked": False,
+        }
+    protos = tuple(p for p, _ in entries)
+    key = protos[0].pack_key()
+    for p in protos[1:]:
+        if p.pack_key() != key:
+            raise ValueError("ingest_packed entries must share one pack_key")
+    name, cfg, mesh = key
+    d, m = cfg.d, cfg.m
+    batches = []
+    for p, rows in entries:
+        rows = np.asarray(rows, np.float32)
+        if rows.ndim != 2 or rows.shape[1] != d:
+            raise ValueError(
+                f"packed ingest batches must be (n, {d}) rows, got {rows.shape}"
+            )
+        if rows.shape[0] % m:
+            raise ValueError(
+                f"packed ingest batch of {rows.shape[0]} rows does not shard "
+                f"over {m} sites"
+            )
+        batches.append(rows)
+
+    runner = dist.make_packed_runner(name, cfg, mesh)
+    per_pad = _bucket(max(b.shape[0] // m for b in batches))
+    packed = jnp.asarray(np.stack([_pad_rows(b, m, per_pad) for b in batches]))
+
+    shape = (key, len(entries), per_pad * m)
+    new_shape = shape not in _SHAPES_SEEN
+    _SHAPES_SEEN.add(shape)
+
+    group = getattr(protos[0], "_pack_group", None)
+    hit = (
+        group is not None
+        and group[0] == protos
+        and all(p._epoch == e for p, e in zip(protos, group[2]))
+    )
+    if hit:
+        stacked = runner.stacked(group[1], packed)
+    else:
+        stacked = runner.from_states(tuple(p.state for p in protos), packed)
+    for i, (p, b) in enumerate(zip(protos, batches)):
+        p.apply_packed(stacked, i, b.shape[0])
+    protos[0]._pack_group = (protos, stacked, tuple(p._epoch for p in protos))
+
+    rows_real = sum(b.shape[0] for b in batches)
+    return {
+        "tenants": len(entries),
+        "rows": rows_real,
+        "pad_rows": len(entries) * per_pad * m - rows_real,
+        "new_shape": new_shape,
+        "restacked": not hit,
+    }

@@ -325,6 +325,25 @@ class StreamingPipeline:
         )
         self._tenants: dict[str, _Tenant] = {}
         self._publish_s = 0.0
+        # Ingest-side observability (see stats() with no tenant): every
+        # counter is lifetime-cumulative; ingest_s is wall time inside
+        # protocol steps (packed launches + serial steps), excluding
+        # publishes and query pumping.
+        self._ingest = {
+            "rows": 0,  # real stream rows / weighted items absorbed
+            "batches": 0,  # ingest batches absorbed (serial + packed slices)
+            "waves": 0,  # ingest_many waves driven
+            "packed_launches": 0,  # stacked super-step launches
+            "packed_tenants": 0,  # tenant-batches that rode a packed launch
+            "packed_rows": 0,  # real rows absorbed via packed launches
+            "pad_rows": 0,  # zero-filled slots added while packing
+            "serial_steps": 0,  # per-tenant serial protocol steps
+            "retraces": 0,  # packed launch shapes compiled (XLA traces)
+            "restacks": 0,  # packed launches that could not reuse a resident
+            # stacked state (first wave of a group, or a member stepped /
+            # restored out-of-band since the last wave)
+            "ingest_s": 0.0,
+        }
         # Deadline executor: None means cooperative pumping (every ingest
         # calls service.poll()); an interval starts a ServicePump thread
         # the pipeline owns, and ingest stops pumping cooperatively.
@@ -787,10 +806,29 @@ class StreamingPipeline:
         (deadline enforcement must never fail silently).
         """
         t = self._tenant(tenant)
+        t0 = time.perf_counter()
         t.adapter.ingest(rows)
+        self._ingest["ingest_s"] += time.perf_counter() - t0
+        self._ingest["serial_steps"] += 1
+        self._ingest["batches"] += 1
+        self._ingest["rows"] += self._batch_len(rows)
+        snap = self._post_ingest(tenant, t)
+        self._pump_or_poll()
+        return snap
+
+    @staticmethod
+    def _batch_len(rows) -> int:
+        """Items in one ingest batch ((n, ...) array or (keys, weights))."""
+        if isinstance(rows, tuple):
+            rows = rows[0]
+        return int(np.asarray(rows).shape[0])
+
+    def _post_ingest(self, tenant: str, t: _Tenant):
+        """Per-batch bookkeeping shared by serial and packed ingest:
+        advance the step counters and publish if the tenant's policy
+        fires.  Returns the new snapshot or None."""
         t.steps += 1
         t.steps_since_publish += 1
-        snap = None
         # Only pay for the mass estimate when the policy reads it (for
         # matrix P3 it materializes the whole estimator matrix).
         live = t.adapter.live_mass() if t.policy.needs_live_frob else 0.0
@@ -799,7 +837,15 @@ class StreamingPipeline:
             live_frob=live,
             published_frob=t.published_frob,
         ):
-            snap = self._publish(tenant, t)
+            return self._publish(tenant, t)
+        return None
+
+    def _pump_or_poll(self) -> None:
+        """Pump deadlines cooperatively unless a live executor owns them.
+
+        A pump that died on an exception is detected here and surfaced as
+        ``ServicePumpError`` (deadline enforcement must never fail
+        silently)."""
         if self.pump is None:
             self.service.poll()
         elif not self.pump.running:
@@ -808,15 +854,101 @@ class StreamingPipeline:
             # so deadlines never silently stop being enforced.
             self.stop_pump()
             self.service.poll()
-        return snap
 
-    def ingest_many(self, batches: Iterable[tuple[str, "np.ndarray"]]) -> int:
+    def ingest_many(
+        self, batches: Iterable[tuple[str, "np.ndarray"]], *, packed: bool = True
+    ) -> int:
         """Drive interleaved tenants: ``[(tenant, rows), ...]``; returns
-        the number of snapshots published."""
-        published = 0
+        the number of snapshots published.
+
+        With ``packed=True`` (the default) the batches are regrouped into
+        waves — wave ``i`` holds each tenant's ``i``-th batch — and every
+        wave's shard tenants that share a pack key (same protocol config
+        and mesh; see ``runtime.ingest_packed``) advance in ONE stacked
+        super-step launch instead of one launch per tenant.  Per-tenant
+        batch order is preserved, so each tenant's final state matches
+        the serial path to fp tolerance (zero padding is exact for the
+        packable protocols); only the cross-tenant interleaving — and
+        therefore the order snapshots publish within a wave — changes.
+        Deadlines are pumped once per wave rather than once per batch.
+        ``packed=False`` restores the strict one-``ingest``-per-batch
+        serial loop.
+        """
+        batches = list(batches)
+        if not packed:
+            published = 0
+            for tenant, rows in batches:
+                published += self.ingest(tenant, rows) is not None
+            return published
+        per_tenant: dict[str, list] = {}
         for tenant, rows in batches:
-            published += self.ingest(tenant, rows) is not None
+            per_tenant.setdefault(tenant, []).append(rows)
+        published = 0
+        n_waves = max((len(v) for v in per_tenant.values()), default=0)
+        for w in range(n_waves):
+            wave = [(name, v[w]) for name, v in per_tenant.items() if w < len(v)]
+            published += self._ingest_wave(wave)
         return published
+
+    def _ingest_wave(self, wave: list) -> int:
+        """One wave of ``ingest_many``: pack what groups, step the rest.
+
+        Tenants whose adapters expose equal pack signatures (>= 2 of
+        them, shardable batches) ride one ``ingest_packed`` launch; all
+        others take the serial adapter path.  Publishes fire per tenant
+        exactly as serial ingest would; the wave's fresh matrix
+        snapshots then warm the query engine's spectrum cache with one
+        batched ``refresh_spectra`` pass.
+        """
+        from repro.runtime.ingest_packed import (
+            ingest_packed,
+            pack_signature,
+            pack_target,
+        )
+
+        self._ingest["waves"] += 1
+        groups: dict = {}
+        serial: list = []
+        for name, rows in wave:
+            t = self._tenant(name)
+            sig = pack_signature(t.adapter)
+            n = self._batch_len(rows)
+            if sig is not None and n and n % sig[1].m == 0:
+                groups.setdefault(sig, []).append((name, t, rows))
+            else:
+                serial.append((name, t, rows))
+        snaps: list = []
+        t0 = time.perf_counter()
+        for members in groups.values():
+            if len(members) < 2:  # a pack of one gains nothing
+                serial.extend(members)
+                continue
+            stats = ingest_packed(
+                [(pack_target(t.adapter), rows) for _, t, rows in members]
+            )
+            self._ingest["packed_launches"] += 1
+            self._ingest["packed_tenants"] += stats["tenants"]
+            self._ingest["packed_rows"] += stats["rows"]
+            self._ingest["rows"] += stats["rows"]
+            self._ingest["batches"] += stats["tenants"]
+            self._ingest["pad_rows"] += stats["pad_rows"]
+            self._ingest["retraces"] += bool(stats["new_shape"])
+            self._ingest["restacks"] += bool(stats["restacked"])
+            for name, t, _ in members:
+                snaps.append(self._post_ingest(name, t))
+        for name, t, rows in serial:
+            t.adapter.ingest(rows)
+            self._ingest["serial_steps"] += 1
+            self._ingest["batches"] += 1
+            self._ingest["rows"] += self._batch_len(rows)
+            snaps.append(self._post_ingest(name, t))
+        self._ingest["ingest_s"] += time.perf_counter() - t0
+        fresh = [s for s in snaps if s is not None]
+        if fresh:
+            # One stacked eigh warms every same-shape matrix publish.
+            self.engine.refresh_spectra(fresh)
+        self._pump_or_poll()
+        return len(fresh)
 
     def publish(self, tenant: str):
         """Force-publish a tenant's live state now (OnDemand's trigger)."""
@@ -1062,8 +1194,33 @@ class StreamingPipeline:
         """Total wall time spent publishing (store copies + host sync)."""
         return self._publish_s
 
-    def stats(self, tenant: str) -> TenantStats:
-        """The tenant's lifetime counters (see ``TenantStats``)."""
+    def stats(self, tenant: str | None = None):
+        """Lifetime counters: one tenant's ``TenantStats``, or — with no
+        tenant — the pipeline's ingest-side observability dict.
+
+        The pipeline-wide dict carries the raw ingest counters (rows,
+        batches, waves, packed launches/tenants/rows, pad slots, serial
+        steps, retraces, ingest seconds) plus the derived gauges packed
+        ingest is judged by: ``rows_per_sec`` (real rows over ingest wall
+        time), ``shrink_launches`` (packed launches + serial steps — the
+        number of protocol super-steps actually dispatched),
+        ``pack_occupancy`` (real-row fraction of packed launch slots;
+        1.0 means no padding waste), ``retraces`` (distinct packed
+        launch shapes compiled), and ``restacks`` (packed launches that
+        had to restack member states instead of reusing the resident
+        stacked pack).  ``ClusterRouter.stats`` surfaces the same dict
+        per cell.
+        """
+        if tenant is None:
+            c = dict(self._ingest)
+            c["rows_per_sec"] = (
+                c["rows"] / c["ingest_s"] if c["ingest_s"] > 0 else 0.0
+            )
+            c["shrink_launches"] = c["packed_launches"] + c["serial_steps"]
+            c["pack_occupancy"] = c["packed_rows"] / max(
+                c["packed_rows"] + c["pad_rows"], 1
+            )
+            return c
         t = self._tenant(tenant)
         return TenantStats(
             tenant=tenant,

@@ -755,7 +755,43 @@ class _ShardCheckpointMixin:
     Flattens the protocol's jax state into checkpoint leaves (PRNG keys
     tagged for rewrapping) and restores bit-identically; subclasses supply
     ``_invalidate()`` to drop their host-side caches after a restore.
+
+    Also the packed-ingest contract: shard protocols whose distributed
+    step is in ``dist.PACKABLE_PROTOCOLS`` expose a ``pack_key`` so the
+    pipeline can stack same-shape tenants into one
+    ``dist.make_packed_runner`` launch, and ``apply_packed`` installs one
+    tenant's stake in the stacked result with the same bookkeeping a
+    serial ``step`` performs.  The install is LAZY: ``state`` is a
+    property backed by either a materialized per-tenant tree or a
+    ``(stacked, index)`` slot into the pack's resident stacked state, and
+    the slice only happens when something actually reads the state
+    (publish, query, checkpoint).  ``_epoch`` counts every state write so
+    ``runtime.ingest_packed`` can tell whether a cached stacked state is
+    still current for the whole group or a member stepped out-of-band.
     """
+
+    # Set by each shard protocol __init__: the core.distributed step name
+    # ("P1", "LP1", ...) and the mesh the runner was built for.
+    _dist_key: str = ""
+    _mesh = None
+    _state = None
+    _pack_slot: tuple | None = None
+    _epoch: int = 0
+
+    @property
+    def state(self):
+        """The protocol's jit state, slicing it out of a pack on first read."""
+        if self._pack_slot is not None:
+            stacked, index = self._pack_slot
+            self._state = dist.unstack_packed(stacked, index)
+            self._pack_slot = None
+        return self._state
+
+    @state.setter
+    def state(self, value) -> None:
+        self._state = value
+        self._pack_slot = None
+        self._epoch += 1
 
     def state_payload(self) -> tuple[dict[str, np.ndarray], dict]:
         """Flatten the jit-able protocol state into checkpoint leaves."""
@@ -766,6 +802,32 @@ class _ShardCheckpointMixin:
         """Restore a ``state_payload`` capture bit-identically."""
         self.state = _unflatten_state(self.state, arrays, list(meta["leaves"]))
         self.rows_seen = int(meta["rows_seen"])
+        self._invalidate()
+
+    def pack_key(self):
+        """Grouping key for packed multi-tenant ingest, or None.
+
+        Tenants with equal keys — same distributed step, same resolved
+        ``ProtocolConfig`` (hence same (l, d, dtype) state shapes), same
+        mesh — may be stacked into one ``(T, ...)`` super-step launch.
+        Protocols outside ``dist.PACKABLE_PROTOCOLS`` return None and
+        always ingest serially.
+        """
+        if self._dist_key not in dist.PACKABLE_PROTOCOLS:
+            return None
+        return (self._dist_key, self.cfg, self._mesh)
+
+    def apply_packed(self, stacked_state, index: int, n_rows: int) -> None:
+        """Point this tenant at its slot in a packed super-step result.
+
+        No per-tenant slice happens here — the pack's stacked state stays
+        resident on device and the ``state`` property materializes slot
+        ``index`` only if something reads it before the next wave.
+        """
+        self._state = None
+        self._pack_slot = (stacked_state, index)
+        self._epoch += 1
+        self.rows_seen += int(n_rows)
         self._invalidate()
 
 
@@ -785,6 +847,7 @@ class ShardProtocol(_ShardCheckpointMixin, SketchProtocol):
             eps=eps, m=m, d=d, axis=axis, l_site=l_site, l_coord=l_coord,
             s=s, use_pallas=use_pallas,
         ).resolved()
+        self._dist_key, self._mesh = name, mesh
         self.state, self._step = dist.make_protocol_runner(name, self.cfg, mesh)
         self._cached_matrix: np.ndarray | None = None
 
@@ -830,6 +893,7 @@ class ShardHHProtocol(_ShardCheckpointMixin, HHProtocol):
         m = mesh.shape[axis]
         super().__init__(name, "shard", m, eps)
         self.cfg = dist.ProtocolConfig(eps=eps, m=m, d=2, axis=axis, k=k).resolved()
+        self._dist_key, self._mesh = "HH" + name, mesh
         self.state, self._step = dist.make_protocol_runner("HH" + name, self.cfg, mesh)
         self._cached_estimates: dict[int, float] | None = None
 
@@ -878,6 +942,7 @@ class ShardQuantileProtocol(_ShardCheckpointMixin, QuantileProtocol):
         self.cfg = dist.ProtocolConfig(
             eps=eps, m=m, d=2, axis=axis, q_cap=q_cap
         ).resolved()
+        self._dist_key, self._mesh = "Q" + name, mesh
         self.state, self._step = dist.make_protocol_runner("Q" + name, self.cfg, mesh)
         self._cached_table: np.ndarray | None = None
 
@@ -929,6 +994,7 @@ class ShardLeverageProtocol(_ShardCheckpointMixin, LeverageProtocol):
             eps=eps, m=m, d=d, axis=axis, lev_cap=lev_cap,
             l_site=l_site, l_coord=l_coord, use_pallas=use_pallas,
         ).resolved()
+        self._dist_key, self._mesh = "L" + name, mesh
         self.state, self._step = dist.make_protocol_runner("L" + name, self.cfg, mesh)
         self._cached_table: np.ndarray | None = None
 

@@ -1,0 +1,222 @@
+"""Packed multi-tenant ingest == serial ingest, on served answers.
+
+The stacked super-step (``runtime.ingest_packed`` over
+``dist.make_packed_runner``) must be invisible to everything downstream:
+same publishes, same served answers (to fp tolerance; eigh rotation
+freedom means raw buffers may differ), same checkpoint round-trips —
+including mid-pack, while members' states still live inside the resident
+stacked pack.  Multi-site coverage runs out of process (the in-process
+suite must keep exactly one visible device); the single-device mesh
+covers the unit seams in process.
+"""
+import numpy as np
+import pytest
+
+from conftest import run_multidevice
+
+
+def _mesh():
+    import jax
+
+    return jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+@pytest.fixture
+def mesh():
+    return _mesh()
+
+
+def _fleet(mesh, policy=None):
+    from repro.runtime import EveryKSteps, StreamingPipeline
+
+    pipe = StreamingPipeline(mesh, eps=0.2, policy=policy or EveryKSteps(2))
+    for i, _n in enumerate((32, 16, 8)):
+        pipe.add_tenant(f"m{i}", 32, protocol="P2")
+    return pipe
+
+
+def _waves(rng, waves=4, cold=None):
+    sizes = {"m0": 32, "m1": 16, "m2": 8}
+    batches = []
+    for w in range(waves):
+        for name, n in sizes.items():
+            if name == cold and w == 0:
+                continue  # cold tenant joins the pack a wave late
+            batches.append((name, rng.normal(size=(n, 32)).astype(np.float32)))
+    return batches
+
+
+def test_packed_matches_serial_ragged_cold(mesh, rng):
+    """Ragged batch sizes + a cold tenant: identical served answers."""
+    from repro.runtime import StreamingPipeline  # noqa: F401  (import check)
+
+    pa, pb = _fleet(mesh), _fleet(mesh)
+    batches = _waves(rng, cold="m1")
+    na = pa.ingest_many(batches, packed=True)
+    nb = pb.ingest_many(batches, packed=False)
+    assert na == nb
+    sa = pa.stats()
+    assert sa["packed_launches"] > 0
+    assert sa["restacks"] <= sa["packed_launches"]
+    assert pb.stats()["packed_launches"] == 0
+    xs = rng.normal(size=(5, 32)).astype(np.float32)
+    for name in ("m0", "m1", "m2"):
+        for x in xs:
+            ta, tb = pa.submit(name, x), pb.submit(name, x)
+            pa.flush()
+            pb.flush()
+            np.testing.assert_allclose(
+                ta.result()[0], tb.result()[0], rtol=1e-5, atol=1e-5
+            )
+    pa.close()
+    pb.close()
+
+
+def test_resident_stack_reused_and_invalidated(mesh, rng):
+    """Steady waves reuse the stacked state; a serial step forces a restack."""
+    pipe = _fleet(mesh)
+    for _ in range(3):
+        pipe.ingest_many(_waves(rng, waves=1), packed=True)
+    s = pipe.stats()
+    assert s["packed_launches"] == 3
+    assert s["restacks"] == 1  # only the first wave stacked member states
+    # an out-of-band serial step bumps that tenant's epoch ...
+    pipe.ingest("m0", rng.normal(size=(16, 32)).astype(np.float32))
+    pipe.ingest_many(_waves(rng, waves=1), packed=True)
+    s = pipe.stats()
+    assert s["restacks"] == 2  # ... so the next packed wave restacks
+    pipe.ingest_many(_waves(rng, waves=1), packed=True)
+    assert pipe.stats()["restacks"] == 2  # and the wave after is resident again
+    pipe.close()
+
+
+def test_mid_pack_save_load_round_trip(mesh, rng, tmp_path):
+    """Checkpointing while states live in the pack slot loses nothing."""
+    from repro.runtime import StreamingPipeline
+
+    pipe = _fleet(mesh)
+    pipe.ingest_many(_waves(rng, waves=3), packed=True)
+    # No queries between the wave and save(): every member's state is
+    # still a lazy (stacked, index) slot when state_payload reads it.
+    ckdir = str(tmp_path / "ck")
+    pipe.save(ckdir)
+    restored = StreamingPipeline.load(ckdir, mesh)
+    tail = _waves(rng, waves=1)
+    pipe.ingest_many(tail, packed=True)
+    restored.ingest_many(tail, packed=True)
+    xs = rng.normal(size=(4, 32)).astype(np.float32)
+    for name in ("m0", "m1", "m2"):
+        for x in xs:
+            ta, tb = pipe.submit(name, x), restored.submit(name, x)
+            pipe.flush()
+            restored.flush()
+            np.testing.assert_allclose(
+                ta.result()[0], tb.result()[0], rtol=1e-5, atol=1e-6
+            )
+    pipe.close()
+    restored.close()
+
+
+def test_ingest_packed_validates(mesh, rng):
+    """Mixed pack keys and unshardable batches are rejected loudly."""
+    import sys
+
+    import repro.runtime.ingest_packed  # noqa: F401
+    ipm = sys.modules["repro.runtime.ingest_packed"]
+
+    pipe = _fleet(mesh)
+    pipe.add_tenant("other", 64, protocol="P2")  # different d => different key
+    pipe.ingest_many(_waves(rng, waves=1), packed=True)
+    protos = {
+        name: ipm.pack_target(pipe._tenant(name).adapter)
+        for name in ("m0", "m1", "other")
+    }
+    good = rng.normal(size=(8, 32)).astype(np.float32)
+    with pytest.raises(ValueError, match="share one pack_key"):
+        ipm.ingest_packed(
+            [(protos["m0"], good), (protos["other"], rng.normal(size=(8, 64)).astype(np.float32))]
+        )
+    with pytest.raises(ValueError, match="rows"):
+        ipm.ingest_packed([(protos["m0"], rng.normal(size=(8, 64)).astype(np.float32))])
+    assert ipm.ingest_packed([]) == {
+        "tenants": 0,
+        "rows": 0,
+        "pad_rows": 0,
+        "new_shape": False,
+        "restacked": False,
+    }
+    pipe.close()
+
+
+def test_packed_matches_serial_all_kinds_multisite():
+    """All four protocol kinds, 4 paper sites: packed == serial answers.
+
+    Matrix (P2 pack of three + a lone P1) and leverage (LP1 pair, one cold)
+    tenants ride stacked launches; HH and quantile shard tenants are
+    unpackable by design (weighted pairs can't be zero-padded) and take the
+    serial lane of the same waves — every served answer must agree with the
+    all-serial pipeline either way.
+    """
+    script = """
+import numpy as np
+import jax
+
+from repro.runtime import StreamingPipeline, EveryKSteps
+from repro.core.leverage import subspace_query
+
+mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+rng = np.random.default_rng(0)
+D = 32
+
+def build():
+    pipe = StreamingPipeline(mesh, policy=EveryKSteps(2), eps=0.2)
+    for i in range(3):
+        pipe.add_tenant(f"m{i}", D, protocol="P2")
+    pipe.add_tenant("p1", D, protocol="P1")
+    pipe.add_leverage_tenant("lev0", D, engine="shard", protocol="P1", eps=0.3)
+    pipe.add_leverage_tenant("lev1", D, engine="shard", protocol="P1", eps=0.3)
+    pipe.add_hh_tenant("hh", engine="shard", eps=0.1)
+    pipe.add_quantile_tenant("qt", engine="shard", eps=0.1)
+    return pipe
+
+sizes = {"m0": 32, "m1": 16, "m2": 8, "p1": 32, "lev0": 16, "lev1": 16}
+batches = []
+for w in range(3):
+    for name, n in sizes.items():
+        if name == "lev1" and w == 0:
+            continue
+        batches.append((name, rng.normal(size=(n, D)).astype(np.float32)))
+    ew = np.stack([rng.integers(0, 50, 64).astype(np.float32),
+                   rng.random(64).astype(np.float32) + 0.1], axis=1)
+    batches.append(("hh", ew))
+    vw = np.stack([rng.normal(size=64).astype(np.float32),
+                   np.ones(64, np.float32)], axis=1)
+    batches.append(("qt", vw))
+
+pa, pb = build(), build()
+na = pa.ingest_many(batches, packed=True)
+nb = pb.ingest_many(batches, packed=False)
+assert na == nb, (na, nb)
+assert pa.stats()["packed_launches"] > 0
+
+xs = rng.normal(size=(4, D)).astype(np.float32)
+for name in ["m0", "m1", "m2", "p1"]:
+    for x in xs:
+        ta, tb = pa.submit(name, x), pb.submit(name, x)
+        pa.flush(); pb.flush()
+        np.testing.assert_allclose(ta.result()[0], tb.result()[0],
+                                   rtol=1e-5, atol=1e-5)
+for x in xs:
+    for name in ("lev0", "lev1"):
+        ta, tb = pa.submit(name, subspace_query(x)), pb.submit(name, subspace_query(x))
+        pa.flush(); pb.flush()
+        np.testing.assert_allclose(ta.result()[0], tb.result()[0],
+                                   rtol=1e-5, atol=1e-5)
+np.testing.assert_allclose(pa.quantiles("qt", [0.1, 0.5, 0.9]),
+                           pb.quantiles("qt", [0.1, 0.5, 0.9]), rtol=1e-5)
+assert pa.heavy_hitters("hh", 0.05) == pb.heavy_hitters("hh", 0.05)
+pa.close(); pb.close()
+print("PACKED_EQ_OK")
+"""
+    out = run_multidevice(script, n_devices=4)
+    assert "PACKED_EQ_OK" in out

@@ -9,7 +9,14 @@ try:  # property-based tests skip gracefully on minimal installs
 except ModuleNotFoundError:
     hypothesis = None
 
-from repro.kernels.ops import fd_gram, fd_project, flash_attention, quadform
+from repro.kernels.ops import (
+    fd_gram,
+    fd_project,
+    fd_shrink,
+    fd_spectra,
+    flash_attention,
+    quadform,
+)
 from repro.kernels.ref import ref_attention, ref_fd_gram, ref_fd_project, ref_quadform
 
 RNG = np.random.default_rng(0)
@@ -19,7 +26,7 @@ RNG = np.random.default_rng(0)
 @pytest.mark.parametrize("l,d", [(8, 128), (16, 256), (32, 512), (17, 300), (64, 1024), (128, 2048)])
 def test_fd_gram_sweep(l, d, dtype):
     b = jnp.asarray(RNG.normal(size=(l, d)), dtype)
-    got = np.asarray(fd_gram(b))
+    got = np.asarray(fd_gram(b, path="pallas"))
     want = np.asarray(ref_fd_gram(b))
     tol = 1e-4 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol * d)
@@ -31,7 +38,7 @@ def test_fd_project_sweep(l, d, dtype):
     b = jnp.asarray(RNG.normal(size=(l, d)), dtype)
     w = jnp.asarray(RNG.uniform(size=(l,)), jnp.float32)
     u = jnp.asarray(RNG.normal(size=(l, l)), jnp.float32)
-    got = np.asarray(fd_project(w, u, b).astype(jnp.float32))
+    got = np.asarray(fd_project(w, u, b, path="pallas").astype(jnp.float32))
     want = np.asarray(ref_fd_project(w, u, b).astype(jnp.float32))
     tol = 1e-4 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol * np.sqrt(l * d))
@@ -79,6 +86,71 @@ def test_quadform_sweep(l, d, n, dtype):
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol * d)
 
 
+@pytest.mark.parametrize("t,l,d", [(1, 8, 64), (4, 16, 128), (3, 17, 100)])
+def test_fd_shrink_paths_agree(t, l, d):
+    """Fused-pallas and XLA fd_shrink agree to 1e-5 on B'^T B' and delta."""
+    b = jnp.asarray(RNG.normal(size=(t, 2 * l, d)), jnp.float32)
+    out_p, delta_p = fd_shrink(b, path="pallas")
+    out_x, delta_x = fd_shrink(b, path="xla")
+    # eigh sign/rotation freedom means rows can differ; the sketch Gram
+    # and the shrink offset are the served quantities and must match.
+    for gp, gx in zip(out_p, out_x):
+        np.testing.assert_allclose(
+            np.asarray(gp.T @ gp), np.asarray(gx.T @ gx), rtol=1e-4, atol=1e-3
+        )
+    np.testing.assert_allclose(np.asarray(delta_p), np.asarray(delta_x), rtol=1e-4, atol=1e-5)
+
+
+def test_fd_shrink_matches_core_single():
+    """Batched fd_shrink reproduces core.fd.fd_shrink on an unstacked buffer."""
+    from repro.core.fd import fd_shrink as core_shrink
+
+    b = jnp.asarray(RNG.normal(size=(32, 96)), jnp.float32)
+    out, delta = fd_shrink(b, path="xla")
+    want, want_delta = core_shrink(b)
+    np.testing.assert_allclose(
+        np.asarray(out.T @ out), np.asarray(want.T @ want), rtol=1e-4, atol=1e-3
+    )
+    np.testing.assert_allclose(float(delta), float(want_delta), rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("t,l,d", [(1, 8, 64), (4, 20, 128)])
+def test_fd_spectra_vs_svd(t, l, d):
+    """Batched spectrum refresh matches per-sketch SVD singular values/dirs."""
+    b = jnp.asarray(RNG.normal(size=(t, l, d)), jnp.float32)
+    for path in ("pallas", "xla"):
+        s, vt = fd_spectra(b, path=path)
+        for i in range(t):
+            u_, s_, vt_ = np.linalg.svd(np.asarray(b[i]), full_matrices=False)
+            np.testing.assert_allclose(np.asarray(s[i]), s_, rtol=1e-4, atol=1e-4)
+            # directions match up to per-row sign
+            dots = np.abs(np.sum(np.asarray(vt[i]) * vt_, axis=1))
+            np.testing.assert_allclose(dots, 1.0, atol=1e-3)
+
+
+def test_fd_spectra_rejects_fat():
+    with pytest.raises(ValueError):
+        fd_spectra(jnp.zeros((2, 64, 32)))
+
+
+@pytest.mark.parametrize("l,d", [(8, 128), (17, 300)])
+def test_fd_gram_project_path_dispatch(l, d):
+    """path="auto"|"pallas"|"xla" agree to 1e-5; bad path raises."""
+    b = jnp.asarray(RNG.normal(size=(l, d)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(size=(l,)), jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(l, l)), jnp.float32)
+    g = {p: np.asarray(fd_gram(b, path=p)) for p in ("auto", "pallas", "xla")}
+    np.testing.assert_allclose(g["pallas"], g["xla"], rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(g["auto"], g["xla"], rtol=1e-6, atol=1e-6)
+    pr = {p: np.asarray(fd_project(w, u, b, path=p)) for p in ("auto", "pallas", "xla")}
+    np.testing.assert_allclose(pr["pallas"], pr["xla"], rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(pr["auto"], pr["xla"], rtol=1e-6, atol=1e-6)
+    with pytest.raises(ValueError):
+        fd_gram(b, path="cuda")
+    with pytest.raises(ValueError):
+        fd_shrink(jnp.zeros((2, 16, 64)), path="cuda")
+
+
 def test_fd_gram_property():
     """Gram kernel is exact-psd and scale-consistent for any (L, d)."""
     pytest.importorskip("hypothesis")
@@ -91,7 +163,7 @@ def test_fd_gram_property():
     @hypothesis.settings(max_examples=20, deadline=None)
     def check(l, d, scale):
         b = jnp.asarray(RNG.normal(size=(l, d)) * scale, jnp.float32)
-        g = np.asarray(fd_gram(b))
+        g = np.asarray(fd_gram(b, path="pallas"))
         np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-3 * scale**2)
         want = np.asarray(ref_fd_gram(b))
         np.testing.assert_allclose(g, want, rtol=1e-4, atol=1e-3 * scale**2 * d)
