@@ -182,7 +182,15 @@ def read_subset(directory: str, step: int, names) -> dict[str, np.ndarray]:
     for name in names:
         meta = manifest["leaves"][name]
         with open(os.path.join(path, meta["file"]), "rb") as f:
-            raw = _decompress(codec, f.read())
+            try:
+                raw = _decompress(codec, f.read())
+            except Exception as exc:
+                # A truncated payload usually dies in the decompressor
+                # before the sha check can name the culprit; keep the
+                # leaf/path attribution either way.
+                raise IOError(
+                    f"checkpoint corruption in leaf {name} ({path}): {exc}"
+                ) from exc
         if hashlib.sha256(raw).hexdigest() != meta["sha256"]:
             raise IOError(f"checkpoint corruption in leaf {name} ({path})")
         out[name] = np.load(io.BytesIO(raw), allow_pickle=False)

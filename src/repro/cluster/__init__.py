@@ -15,23 +15,60 @@ tenant's whole lifecycle can live on any one shard:
                     per-shard packed query fan-out (gathered in
                     submission order), shed propagation, live rebalance.
   * ``replica``   — ``ServingReplica``: read-only serving off published
-                    immutable versions with surfaced staleness bounds.
+                    immutable versions with surfaced staleness bounds,
+                    including owner-blind degraded serving for cells
+                    whose circuit breaker is open.
+  * ``transport`` — the fault-injectable message boundary: typed
+                    envelopes with ``(tenant, site, seq)``-stamped
+                    idempotent ingest, scripted/seeded ``FaultPlan``
+                    chaos injection, ``CircuitBreaker``, and the typed
+                    loss/crash errors the router's retry loop handles.
 
 See ``docs/cluster.md`` for the ring diagram, cell lifecycle, rebalance
-plan format, and staleness semantics.
+plan format, and staleness semantics, and ``docs/resilience.md`` for the
+failure-mode/retry/breaker/staleness contract and how to script a
+``FaultPlan``.
 """
 from repro.cluster.cell import PipelineCell
 from repro.cluster.hashring import HashRing, RebalancePlan, TenantMove, rebalance_plan
 from repro.cluster.replica import ReplicaResult, ServingReplica
 from repro.cluster.router import ClusterRouter
+from repro.cluster.transport import (
+    CellDownError,
+    CircuitBreaker,
+    Export,
+    FaultPlan,
+    Heartbeat,
+    HeartbeatAck,
+    Ingest,
+    IngestAck,
+    IngestShedError,
+    Query,
+    StalenessExceededError,
+    Transport,
+    TransportTimeout,
+)
 
 __all__ = [
+    "CellDownError",
+    "CircuitBreaker",
     "ClusterRouter",
+    "Export",
+    "FaultPlan",
     "HashRing",
+    "Heartbeat",
+    "HeartbeatAck",
+    "Ingest",
+    "IngestAck",
+    "IngestShedError",
     "PipelineCell",
+    "Query",
     "RebalancePlan",
     "ReplicaResult",
     "ServingReplica",
+    "StalenessExceededError",
     "TenantMove",
+    "Transport",
+    "TransportTimeout",
     "rebalance_plan",
 ]

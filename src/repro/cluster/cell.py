@@ -16,6 +16,16 @@ adds exactly the shard-boundary surface the router and replicas need:
     ``ServingReplica`` pulls), and ``latest_version`` is the staleness
     reference point.
 
+The transport boundary (``repro.cluster.transport``) lands here as the
+``deliver`` endpoint: every ``Ingest`` envelope carries ``(tenant, site,
+seq)`` and the cell keeps a per-``(tenant, site)`` dedup window — seq
+below the window is acknowledged but NOT re-applied (idempotence: a
+retried batch whose ack was lost cannot double-count rows), seq ahead of
+the window is parked in a bounded reassembly buffer until the gap fills
+(delayed/reordered deliveries apply in stream order).  The window's
+horizons ride the pipeline checkpoint as an attachment, so a
+crash-restarted cell keeps refusing batches that are already durable.
+
 Everything else is deliberately a thin delegation: a one-cell cluster
 behaves exactly like the bare pipeline (tested), which is what makes the
 N-cell determinism argument compositional.
@@ -24,6 +34,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.cluster import transport as tp
 from repro.query.store import SketchSnapshot
 from repro.runtime.pipeline import StreamingPipeline
 
@@ -39,14 +50,29 @@ class PipelineCell:
         mesh: jax.sharding.Mesh,
         *,
         pipeline: StreamingPipeline | None = None,
+        park_bound: int = 64,
         **pipeline_kw,
     ):
         if not name:
             raise ValueError("a cell needs a non-empty name")
+        if park_bound < 1:
+            raise ValueError(f"park_bound must be >= 1, got {park_bound}")
         self.name = name
         self.pipeline = (
             pipeline if pipeline is not None else StreamingPipeline(mesh, **pipeline_kw)
         )
+        self.park_bound = park_bound
+        # transport dedup window: (tenant, site) -> next expected seq (from 1)
+        self._next_seq: dict[tuple[str, str], int] = {}
+        # out-of-order reassembly: (tenant, site) -> {seq: rows}, bounded
+        self._parked: dict[tuple[str, str], dict[int, object]] = {}
+        self.transport_counts = {
+            "applied": 0,  # Ingest envelopes absorbed (first delivery)
+            "duplicate": 0,  # acknowledged without re-applying
+            "parked": 0,  # held for reassembly (gap ahead of them)
+            "queries": 0,  # Query envelopes served
+            "heartbeats": 0,  # Heartbeat probes answered
+        }
 
     # -- thin delegation (the cell IS a coordinator) --------------------------
 
@@ -72,6 +98,116 @@ class PipelineCell:
         """Drive owned tenants' interleaved batches, packing same-shape
         shard tenants per wave (see ``StreamingPipeline.ingest_many``)."""
         return self.pipeline.ingest_many(batches, packed=packed)
+
+    # -- transport endpoint (idempotent ingest + packed serve) -----------------
+
+    def deliver(self, envelope):
+        """Dispatch one typed transport envelope (the cell's wire surface).
+
+        ``Ingest`` goes through the dedup/reassembly window
+        (``ingest_from``), ``Query`` through the packed engine sweep,
+        ``Export`` through the rebalance export, ``Heartbeat`` answers
+        with the tenant count.  This is what the router registers with
+        the ``Transport`` — and re-registers on ``revive`` after a
+        crash-restart rebuild.
+        """
+        if isinstance(envelope, tp.Ingest):
+            return self.ingest_from(
+                envelope.tenant, envelope.site, envelope.seq, envelope.rows
+            )
+        if isinstance(envelope, tp.Query):
+            self.transport_counts["queries"] += 1
+            return self.engine.query_packed(list(envelope.requests))
+        if isinstance(envelope, tp.Export):
+            return self.export_tenant(envelope.tenant)
+        if isinstance(envelope, tp.Heartbeat):
+            self.transport_counts["heartbeats"] += 1
+            return tp.HeartbeatAck(envelope.seq, len(self.tenants()))
+        raise TypeError(f"unknown envelope type {type(envelope).__name__}")
+
+    def ingest_from(self, tenant: str, site: str, seq: int, rows) -> "tp.IngestAck":
+        """Idempotent, order-restoring ingest: apply exactly once, in seq order.
+
+        seq below the window: already absorbed — ack ``"duplicate"``, do
+        NOT re-apply (this is what makes sender retries safe).  seq ahead
+        of the window: park in the bounded reassembly buffer and ack
+        ``"parked"`` (an overflowing gap raises — the sender's replay
+        queue still holds the batch).  seq == window: apply, then drain
+        any contiguously-parked successors, so a delayed-then-flushed
+        batch lands in exactly the order the stream produced it.
+        """
+        key = (tenant, site)
+        expected = self._next_seq.get(key, 1)
+        if seq < expected:
+            self.transport_counts["duplicate"] += 1
+            return tp.IngestAck("duplicate", seq, None)
+        if seq > expected:
+            parked = self._parked.setdefault(key, {})
+            if seq not in parked:
+                if len(parked) >= self.park_bound:
+                    raise tp.IngestShedError(tenant, len(parked), self.park_bound)
+                parked[seq] = rows
+            self.transport_counts["parked"] += 1
+            return tp.IngestAck("parked", seq, None)
+        version = self._apply(tenant, key, rows)
+        # gap just filled: absorb contiguous parked successors in order
+        parked = self._parked.get(key)
+        while parked:
+            nxt = self._next_seq[key]
+            if nxt not in parked:
+                break
+            v = self._apply(tenant, key, parked.pop(nxt))
+            version = v if v is not None else version
+        self.transport_counts["applied"] += 1
+        return tp.IngestAck("applied", seq, version)
+
+    def _apply(self, tenant: str, key: tuple[str, str], rows) -> int | None:
+        snap = self.pipeline.ingest(tenant, rows)
+        self._next_seq[key] = self._next_seq.get(key, 1) + 1
+        return None if snap is None else snap.version
+
+    # -- dedup window persistence / migration ----------------------------------
+
+    def dedup_state(self) -> dict:
+        """The durable half of the window: ``{tenant: {site: next_seq}}``.
+
+        Parked (not-yet-applied) batches are deliberately volatile —
+        the router's replay queue still owns them until they apply.
+        """
+        out: dict[str, dict[str, int]] = {}
+        for (tenant, site), nxt in sorted(self._next_seq.items()):
+            out.setdefault(tenant, {})[site] = nxt
+        return out
+
+    def restore_dedup(self, state: dict) -> None:
+        """Install checkpointed dedup horizons (crash-restart path)."""
+        for tenant, sites in state.items():
+            for site, nxt in sites.items():
+                self._next_seq[(tenant, site)] = int(nxt)
+
+    def dedup_for(self, tenant: str) -> dict[str, int]:
+        """One tenant's ``{site: next_seq}`` horizons (rebalance handoff)."""
+        return {s: n for (t, s), n in self._next_seq.items() if t == tenant}
+
+    def adopt_dedup(self, tenant: str, horizons: dict[str, int]) -> None:
+        """Take over a moved-in tenant's seq horizons from its old owner."""
+        for site, nxt in horizons.items():
+            self._next_seq[(tenant, site)] = int(nxt)
+
+    def drop_dedup(self, tenant: str) -> None:
+        """Forget a moved-away tenant's window (horizons and parked gaps)."""
+        for key in [k for k in self._next_seq if k[0] == tenant]:
+            del self._next_seq[key]
+        for key in [k for k in self._parked if k[0] == tenant]:
+            del self._parked[key]
+
+    def parked_count(self, tenant: str | None = None) -> int:
+        """Batches held for reassembly (one tenant, or all)."""
+        return sum(
+            len(v)
+            for (t, _), v in self._parked.items()
+            if tenant is None or t == tenant
+        )
 
     def submit(self, tenant: str, x, *, deadline_s: float | None = None):
         """Admit one query for an owned tenant (see pipeline.submit)."""
@@ -126,8 +262,18 @@ class PipelineCell:
     # -- persistence -----------------------------------------------------------
 
     def save(self, directory: str, *, step: int = 0) -> str:
-        """Checkpoint the whole cell (one pipeline ckpt); returns the path."""
-        return self.pipeline.save(directory, step=step)
+        """Checkpoint the whole cell (one pipeline ckpt); returns the path.
+
+        The transport dedup horizons ride the same atomic step as a
+        manifest attachment, so recovery restores the exactly-once
+        window together with the state it protects: a replayed batch
+        that is already durable here stays refused after a crash.
+        """
+        return self.pipeline.save(
+            directory,
+            step=step,
+            attachments={"cell": {"name": self.name, "dedup": self.dedup_state()}},
+        )
 
     @classmethod
     def load(
@@ -139,9 +285,22 @@ class PipelineCell:
         step: int | None = None,
         **pipeline_kw,
     ) -> "PipelineCell":
-        """Rebuild a cell from ``save`` output (latest step by default)."""
+        """Rebuild a cell from ``save`` output (latest step by default).
+
+        Restores the pipeline *and* the checkpoint's dedup horizons, so
+        the reloaded cell refuses replays of batches that were durable
+        at save time.
+        """
+        from repro import ckpt
+
+        if step is None:
+            step = ckpt.latest_step(directory)
         pipeline = StreamingPipeline.load(directory, mesh, step=step, **pipeline_kw)
-        return cls(name, mesh, pipeline=pipeline)
+        cell = cls(name, mesh, pipeline=pipeline)
+        if step is not None:
+            attachments = ckpt.read_extra(directory, step).get("attachments", {})
+            cell.restore_dedup(attachments.get("cell", {}).get("dedup", {}))
+        return cell
 
     def __repr__(self) -> str:
         return f"PipelineCell({self.name!r}, tenants={self.tenants()})"

@@ -32,10 +32,11 @@ from typing import NamedTuple
 import numpy as np
 
 from repro.cluster.cell import PipelineCell
+from repro.cluster.transport import StalenessExceededError
 from repro.query.engine import QueryEngine, QueryResult
 from repro.query.store import SketchStore
 
-__all__ = ["ReplicaResult", "ServingReplica"]
+__all__ = ["ReplicaResult", "ServingReplica", "StalenessExceededError"]
 
 
 class ReplicaResult(NamedTuple):
@@ -73,9 +74,11 @@ class ServingReplica:
         self.store = SketchStore(retain=retain)
         self.engine = QueryEngine(self.store, cache_size=cache_size, interpret=interpret)
         self._synced: dict[str, int] = {}  # tenant -> highest pulled version
+        self._owner_seen: dict[str, int] = {}  # newest owner version ever observed
         self.syncs = 0  # sync() calls (explicit + read-through)
         self.pulled = 0  # snapshot versions installed
         self.read_throughs = 0  # queries that had to fetch before answering
+        self.degraded = 0  # owner-blind answers served (query_degraded)
 
     def _cell_for(self, tenant: str) -> PipelineCell:
         if isinstance(self.source, PipelineCell):
@@ -102,6 +105,7 @@ class ServingReplica:
                 self.store.install(snap)
                 self._synced[t] = snap.version
                 installed += 1
+            self._owner_seen[t] = max(self._owner_seen.get(t, 0), self._synced.get(t, 0))
         self.syncs += 1
         self.pulled += installed
         return installed
@@ -143,11 +147,43 @@ class ServingReplica:
             and owner_latest - self._synced.get(tenant, 0) > self.max_versions_behind
         ):
             self.sync(tenant)
+        self._owner_seen[tenant] = max(self._owner_seen.get(tenant, 0), owner_latest)
         res = self.engine.query_batch(x, tenant=tenant, version=version, path=path)
         return ReplicaResult(
             result=res,
             owner_version=max(owner_latest, res.version),
             versions_behind=max(0, owner_latest - res.version),
+        )
+
+    def query_degraded(
+        self, x: np.ndarray, *, tenant: str, path: str = "pallas"
+    ) -> ReplicaResult:
+        """Serve purely from local versions — the owner is NOT contacted.
+
+        The open-circuit path: when a cell's breaker is open (or it is
+        crashed outright), the router answers from whatever this replica
+        already pulled.  ``versions_behind`` is measured against the last
+        owner version this replica ever *observed* (recorded at sync /
+        read-through time — the owner may have published more since, but
+        an unreachable owner cannot be asked), and the declared
+        ``max_versions_behind`` bound is enforced: a replica that has
+        fallen beyond it raises ``StalenessExceededError`` instead of
+        silently serving an answer staler than promised.  Raises
+        ``KeyError`` when the tenant was never synced here at all.
+        """
+        if tenant not in self.store.tenants():
+            raise KeyError(
+                f"tenant {tenant!r} has no local versions on this replica; "
+                "degraded serving needs at least one pre-outage sync"
+            )
+        res = self.engine.query_batch(x, tenant=tenant, path=path)
+        owner_latest = max(self._owner_seen.get(tenant, 0), res.version)
+        behind = owner_latest - res.version
+        if self.max_versions_behind is not None and behind > self.max_versions_behind:
+            raise StalenessExceededError(tenant, behind, self.max_versions_behind)
+        self.degraded += 1
+        return ReplicaResult(
+            result=res, owner_version=owner_latest, versions_behind=behind
         )
 
     def stats(self) -> dict:
@@ -156,6 +192,7 @@ class ServingReplica:
             "syncs": self.syncs,
             "pulled": self.pulled,
             "read_throughs": self.read_throughs,
+            "degraded": self.degraded,
             "tenants": len(self.store.tenants()),
             "cache": self.engine.cache_stats(),
         }

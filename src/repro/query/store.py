@@ -236,6 +236,22 @@ class SketchStore:
                         f"tenant {t!r} already present in this store; "
                         "drop_tenant it before importing"
                     )
+        # Validate the whole payload BEFORE installing anything: a truncated
+        # tree or a manifest/leaf mismatch must raise with the store
+        # untouched, never leave a half-imported tenant behind.
+        for e in extra["snapshots"]:
+            if e["key"] not in tree:
+                raise ValueError(
+                    f"truncated tenant payload: snapshot entry {e['key']!r} "
+                    f"(version {e['version']}) has no matrix in the tree"
+                )
+            got = np.shape(tree[e["key"]])
+            want = tuple(e.get("shape", got))
+            if tuple(got) != want:
+                raise ValueError(
+                    f"tenant payload mismatch: snapshot {e['key']!r} has shape "
+                    f"{tuple(got)}, manifest says {want}"
+                )
         installed = []
         for e in extra["snapshots"]:
             b = np.asarray(tree[e["key"]], np.float32)

@@ -1052,7 +1052,9 @@ class StreamingPipeline:
 
     # -- persistence / accounting -------------------------------------------
 
-    def save(self, directory: str, *, step: int = 0) -> str:
+    def save(
+        self, directory: str, *, step: int = 0, attachments: dict | None = None
+    ) -> str:
         """Checkpoint the whole pipeline atomically; returns the path.
 
         One ``repro.ckpt`` step holds both halves of the coordinator: the
@@ -1063,17 +1065,25 @@ class StreamingPipeline:
         A running ``ServicePump`` is stopped for the duration of the write
         and restarted after (its interval is recorded, so ``load`` revives
         it on the restored pipeline too).
+
+        ``attachments`` is a JSON-able dict stored verbatim under the
+        manifest's ``extra["attachments"]`` — the hook wrapping layers
+        (e.g. a ``PipelineCell``'s transport dedup horizons) use to make
+        their own state crash-durable in the same atomic step.  ``load``
+        ignores it; owners read it back via ``ckpt.read_extra``.
         """
         pump = self.pump
         if pump is not None:
             pump.stop()
         try:
-            return self._save(directory, step=step)
+            return self._save(directory, step=step, attachments=attachments)
         finally:
             if pump is not None:
                 pump.start()
 
-    def _save(self, directory: str, *, step: int = 0) -> str:
+    def _save(
+        self, directory: str, *, step: int = 0, attachments: dict | None = None
+    ) -> str:
         from repro import ckpt
 
         store_tree, store_extra = self.store.state_tree()
@@ -1111,6 +1121,8 @@ class StreamingPipeline:
                 "pump_interval_s": None if self.pump is None else self.pump.interval_s,
             },
         }
+        if attachments is not None:
+            extra["attachments"] = attachments
         return ckpt.save(directory, step, tree, extra=extra)
 
     @classmethod

@@ -28,6 +28,7 @@ __all__ = [
     "FrobDrift",
     "OnDemand",
     "TenantQuota",
+    "RetryPolicy",
     "policy_to_config",
     "policy_from_config",
 ]
@@ -133,6 +134,43 @@ class TenantQuota(NamedTuple):
 
     max_pending: int = 0
     priority: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Transport resilience (consumed by repro.cluster's router/transport layer)
+# ---------------------------------------------------------------------------
+
+
+class RetryPolicy(NamedTuple):
+    """Capped exponential backoff with deterministic jitter.
+
+    A message gets ``max_attempts`` total sends; retry ``k`` (1-based)
+    waits ``min(cap_s, base_s * 2**(k-1))``, reduced by up to ``jitter``
+    fraction via a caller-supplied uniform draw (the router feeds a
+    seeded PRNG so the whole backoff schedule is reproducible).  The
+    spent budget — retries issued and seconds slept — is surfaced in
+    ``ClusterRouter.stats()``.
+    """
+
+    max_attempts: int = 4
+    base_s: float = 0.01
+    cap_s: float = 1.0
+    jitter: float = 0.5
+
+    def validate(self) -> "RetryPolicy":
+        """Raise on nonsensical parameters; returns self for chaining."""
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {self.max_attempts}")
+        if self.base_s < 0 or self.cap_s < 0:
+            raise ValueError("backoff delays must be >= 0")
+        if not 0.0 <= self.jitter <= 1.0:
+            raise ValueError(f"jitter must be in [0, 1], got {self.jitter}")
+        return self
+
+    def backoff_s(self, attempt: int, u: float = 0.0) -> float:
+        """Sleep before retry ``attempt`` (1-based); ``u`` in [0, 1) jitters."""
+        raw = min(self.cap_s, self.base_s * (2.0 ** (attempt - 1)))
+        return raw * (1.0 - self.jitter * u)
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,40 @@ def rng():
     return np.random.default_rng(0)
 
 
+def run_property(check, *, given, cases, max_examples=100):
+    """Run a property check under hypothesis, or over a seeded sweep.
+
+    The tier-1 suite must exercise its property tests on minimal installs
+    too (hypothesis is an extra, not a requirement), so every property
+    test supplies both halves and runs the SAME ``check`` either way:
+
+    given:        zero-arg callable returning the ``hypothesis.given``
+                  strategy dict.  Lazy on purpose — strategies cannot be
+                  built when hypothesis is absent.  Pass ``None`` when the
+                  case family has no natural strategy encoding (e.g. a
+                  coupled random construction): the seeded sweep then runs
+                  even when hypothesis is installed.
+    cases:        iterable of kwargs dicts — the deterministic fallback
+                  sweep (seeded numpy, so failures reproduce exactly).
+    max_examples: hypothesis example budget (ignored by the fallback).
+    """
+    try:
+        import hypothesis
+    except ModuleNotFoundError:
+        hypothesis = None
+    if hypothesis is not None and given is not None:
+        wrapped = hypothesis.settings(max_examples=max_examples, deadline=None)(
+            hypothesis.given(**given())(check)
+        )
+        wrapped()
+        return
+    ran = 0
+    for kw in cases:
+        check(**kw)
+        ran += 1
+    assert ran > 0, "seeded fallback produced no cases"
+
+
 def run_multidevice(script: str, n_devices: int = 8, timeout: int = 420) -> str:
     """Run a python snippet in a subprocess with n fake CPU devices.
 

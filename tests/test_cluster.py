@@ -278,6 +278,85 @@ def test_ckpt_read_subset_verifies_and_rejects_missing(tmp_path):
         ckpt.read_subset(str(tmp_path), 1, ["a", "nope"])
 
 
+def test_ckpt_read_subset_raises_on_corrupt_or_truncated_leaf(tmp_path):
+    import io
+    import os
+
+    tree = {"a": np.arange(64, dtype=np.float32), "b": np.ones((2, 3), np.int32)}
+    path = ckpt.save(str(tmp_path), 1, tree)
+    manifest = ckpt.read_manifest(str(tmp_path), 1)
+    a_file = os.path.join(path, manifest["leaves"]["a"]["file"])
+
+    # silent substitution: validly-compressed bytes of the WRONG content —
+    # only the per-leaf sha256 can catch this, and it must name the leaf
+    buf = io.BytesIO()
+    np.save(buf, np.zeros(64, np.float32), allow_pickle=False)
+    raw = buf.getvalue()
+    if manifest["codec"] == "zstd":
+        import zstandard
+
+        forged = zstandard.ZstdCompressor(level=3).compress(raw)
+    else:
+        import zlib
+
+        forged = zlib.compress(raw, 6)
+    with open(a_file, "wb") as f:
+        f.write(forged)
+    with pytest.raises(IOError, match="corruption in leaf a"):
+        ckpt.read_subset(str(tmp_path), 1, ["a"])
+
+    # truncation: dies inside the decompressor, still attributed to the leaf
+    with open(a_file, "wb") as f:
+        f.write(forged[: len(forged) // 2])
+    with pytest.raises(IOError, match="corruption in leaf a"):
+        ckpt.read_subset(str(tmp_path), 1, ["a"])
+
+    # the untouched leaf is unaffected by its corrupt sibling
+    sub = ckpt.read_subset(str(tmp_path), 1, ["b"])
+    np.testing.assert_array_equal(sub["b"], tree["b"])
+
+
+def test_import_tenant_validates_payload_before_mutating_state(mesh):
+    from repro.query.store import SketchStore
+
+    src = PipelineCell("src", mesh, eps=0.2, policy=EveryKSteps(1))
+    src.pipeline.add_tenant("t", D, eps=0.2, policy=EveryKSteps(1))
+    for b in _matrix_batches(seed=6, n_batches=2):
+        src.ingest("t", b)
+    tree, extra = src.store.export_tenant("t")
+
+    dst = SketchStore()
+    with pytest.raises(ValueError, match="not a sketch store export"):
+        dst.import_tenant(tree, {**extra, "kind": "something-else"})
+    # truncated: the manifest names a snapshot whose matrix is missing
+    short = {k: v for k, v in tree.items() if k != "snap_00001"}
+    with pytest.raises(ValueError, match="truncated tenant payload"):
+        dst.import_tenant(short, extra)
+    # manifest/leaf shape disagreement
+    bad = dict(tree)
+    bad["snap_00001"] = np.zeros((1, 1), np.float32)
+    with pytest.raises(ValueError, match="payload mismatch"):
+        dst.import_tenant(bad, extra)
+    # a payload spanning multiple tenants is refused outright
+    mixed = dict(extra)
+    mixed["snapshots"] = [
+        dict(extra["snapshots"][0]),
+        {**extra["snapshots"][1], "tenant": "other"},
+    ]
+    with pytest.raises(ValueError, match="spans multiple tenants"):
+        dst.import_tenant(tree, mixed)
+    # none of the rejections left a half-imported tenant behind
+    assert dst.tenants() == [] and len(dst) == 0
+    # the pristine payload still imports cleanly on the same store
+    assert dst.import_tenant(tree, extra) == [1, 2]
+    np.testing.assert_array_equal(dst.get("t").matrix, src.store.get("t").matrix)
+    # import-over-resident refuses before touching anything
+    with pytest.raises(ValueError, match="already present"):
+        dst.import_tenant(tree, extra)
+    assert len(dst) == 2
+    src.close()
+
+
 # ---------------------------------------------------------------------------
 # router: routing, fan-out, shed propagation, parallel ingest
 # ---------------------------------------------------------------------------

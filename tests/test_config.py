@@ -1,7 +1,8 @@
 """Layer-pattern compiler + config invariants (hypothesis-backed)."""
+import numpy as np
 import pytest
 
-try:  # property-based tests skip gracefully on minimal installs
+try:  # property tests fall back to a seeded sweep on minimal installs
     import hypothesis
     import hypothesis.strategies as st
 except ModuleNotFoundError:
@@ -19,20 +20,30 @@ def _expand(groups):
 
 
 def test_group_pattern_roundtrip():
-    """Folding into scan groups must exactly reproduce the layer sequence."""
-    pytest.importorskip("hypothesis")
+    """Folding into scan groups must exactly reproduce the layer sequence.
 
-    @hypothesis.given(
-        pattern=st.lists(
-            st.sampled_from(["global", "local", "rglru", "ssd"]), min_size=1, max_size=40
-        )
-    )
-    @hypothesis.settings(max_examples=200, deadline=None)
+    Hypothesis-driven when installed; otherwise a seeded random sweep over
+    the same check (hypothesis is an optional extra, never a skip reason).
+    """
+    from conftest import run_property
+
     def check(pattern):
         groups = group_pattern(tuple(pattern))
         assert _expand(groups) == tuple(pattern)
 
-    check()
+    kinds = ["global", "local", "rglru", "ssd"]
+    rng = np.random.default_rng(0)
+    run_property(
+        check,
+        given=lambda: {
+            "pattern": st.lists(st.sampled_from(kinds), min_size=1, max_size=40)
+        },
+        cases=(
+            {"pattern": [kinds[j] for j in rng.integers(0, 4, rng.integers(1, 41))]}
+            for _ in range(200)
+        ),
+        max_examples=200,
+    )
 
 
 def test_group_pattern_folds_uniform_stacks():

@@ -152,15 +152,12 @@ def test_fd_gram_project_path_dispatch(l, d):
 
 
 def test_fd_gram_property():
-    """Gram kernel is exact-psd and scale-consistent for any (L, d)."""
-    pytest.importorskip("hypothesis")
+    """Gram kernel is exact-psd and scale-consistent for any (L, d).
 
-    @hypothesis.given(
-        l=st.integers(2, 40),
-        d=st.integers(2, 300),
-        scale=st.floats(0.1, 100.0),
-    )
-    @hypothesis.settings(max_examples=20, deadline=None)
+    Hypothesis when installed, else a seeded sweep over the same check.
+    """
+    from conftest import run_property
+
     def check(l, d, scale):
         b = jnp.asarray(RNG.normal(size=(l, d)) * scale, jnp.float32)
         g = np.asarray(fd_gram(b, path="pallas"))
@@ -168,4 +165,21 @@ def test_fd_gram_property():
         want = np.asarray(ref_fd_gram(b))
         np.testing.assert_allclose(g, want, rtol=1e-4, atol=1e-3 * scale**2 * d)
 
-    check()
+    rng = np.random.default_rng(0)
+    run_property(
+        check,
+        given=lambda: {
+            "l": st.integers(2, 40),
+            "d": st.integers(2, 300),
+            "scale": st.floats(0.1, 100.0),
+        },
+        cases=(
+            {
+                "l": int(rng.integers(2, 41)),
+                "d": int(rng.integers(2, 301)),
+                "scale": float(rng.uniform(0.1, 100.0)),
+            }
+            for _ in range(20)
+        ),
+        max_examples=20,
+    )

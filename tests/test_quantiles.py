@@ -188,23 +188,12 @@ def test_summary_state_dict_round_trip_is_exact():
 def test_served_quantiles_property_harness():
     """Hypothesis: adversarial/duplicate-heavy streams served through the
     REAL path — summary -> snapshot codec -> SketchStore -> QueryEngine
-    packed-query rows — keep every quantile within eps*N rank error."""
-    pytest.importorskip("hypothesis")
+    packed-query rows — keep every quantile within eps*N rank error.
 
-    @hypothesis.given(
-        base=st.lists(
-            st.one_of(
-                st.floats(min_value=-1e6, max_value=1e6, width=32),
-                st.sampled_from([0.0, 1.0, -3.5, 7.0]),  # forced duplicates
-            ),
-            min_size=1,
-            max_size=400,
-        ),
-        dup_factor=st.integers(min_value=1, max_value=50),
-        eps=st.floats(min_value=0.02, max_value=0.3),
-        descending=st.booleans(),
-    )
-    @hypothesis.settings(max_examples=60, deadline=None)
+    Hypothesis when installed, else a seeded duplicate-heavy sweep over
+    the same check."""
+    from conftest import run_property
+
     def check(base, dup_factor, eps, descending):
         vals = np.asarray(base * dup_factor, np.float32)
         if descending:
@@ -231,7 +220,40 @@ def test_served_quantiles_property_harness():
         tru = exact_ranks(vals, np.ones(n), probe)
         assert np.max(np.abs(ranks - tru)) <= eps * n + 1e-3 * n + 1e-9
 
-    check()
+    rng = np.random.default_rng(0)
+
+    def seeded():
+        dupes = np.array([0.0, 1.0, -3.5, 7.0], np.float32)
+        for _ in range(60):
+            n = int(rng.integers(1, 401))
+            base = rng.uniform(-1e6, 1e6, n).astype(np.float32)
+            forced = rng.random(n) < 0.3  # duplicate-heavy, like the strategy
+            base[forced] = dupes[rng.integers(0, 4, int(forced.sum()))]
+            yield {
+                "base": base.tolist(),
+                "dup_factor": int(rng.integers(1, 51)),
+                "eps": float(rng.uniform(0.02, 0.3)),
+                "descending": bool(rng.integers(0, 2)),
+            }
+
+    run_property(
+        check,
+        given=lambda: {
+            "base": st.lists(
+                st.one_of(
+                    st.floats(min_value=-1e6, max_value=1e6, width=32),
+                    st.sampled_from([0.0, 1.0, -3.5, 7.0]),  # forced duplicates
+                ),
+                min_size=1,
+                max_size=400,
+            ),
+            "dup_factor": st.integers(min_value=1, max_value=50),
+            "eps": st.floats(min_value=0.02, max_value=0.3),
+            "descending": st.booleans(),
+        },
+        cases=seeded(),
+        max_examples=60,
+    )
 
 
 # ---------------------------------------------------------------------------

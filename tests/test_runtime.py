@@ -350,18 +350,12 @@ def test_policy_validation():
 
 
 def test_policy_properties():
-    """Property harness: publish counts are bounded for any trajectory."""
-    pytest.importorskip("hypothesis")
+    """Property harness: publish counts are bounded for any trajectory.
 
-    @hypothesis.given(
-        k=st.integers(min_value=1, max_value=7),
-        n=st.integers(min_value=0, max_value=60),
-        rel=st.floats(min_value=0.05, max_value=2.0),
-        growth=st.lists(
-            st.floats(min_value=0.0, max_value=3.0), min_size=1, max_size=60
-        ),
-    )
-    @hypothesis.settings(max_examples=100, deadline=None)
+    Hypothesis when installed, else a seeded sweep over the same check.
+    """
+    from conftest import run_property
+
     def check(k, n, rel, growth):
         # EveryKSteps: exactly floor(n / k) publishes over n steps.
         assert len(_simulate(EveryKSteps(k), np.ones(n))) == n // k
@@ -380,7 +374,28 @@ def test_policy_properties():
             else:
                 assert pub_frob is not None and f <= (1.0 + rel) * pub_frob
 
-    check()
+    rng = np.random.default_rng(0)
+    run_property(
+        check,
+        given=lambda: {
+            "k": st.integers(min_value=1, max_value=7),
+            "n": st.integers(min_value=0, max_value=60),
+            "rel": st.floats(min_value=0.05, max_value=2.0),
+            "growth": st.lists(
+                st.floats(min_value=0.0, max_value=3.0), min_size=1, max_size=60
+            ),
+        },
+        cases=(
+            {
+                "k": int(rng.integers(1, 8)),
+                "n": int(rng.integers(0, 61)),
+                "rel": float(rng.uniform(0.05, 2.0)),
+                "growth": rng.uniform(0.0, 3.0, int(rng.integers(1, 61))).tolist(),
+            }
+            for _ in range(100)
+        ),
+        max_examples=100,
+    )
 
 
 # ---------------------------------------------------------------------------
