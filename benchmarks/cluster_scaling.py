@@ -15,7 +15,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, scale
+from benchmarks.common import emit, obs_block, scale
 
 CELLS = (1, 2, 4, 8)
 D = 64
@@ -81,7 +81,8 @@ def _drive_cluster(n_cells, names, flat, queries, packed=True, publish_every=1):
             query_s = (time.perf_counter() - t0) / QUERY_ROUNDS
             assert len(out) == len(queries)
         spread = router.ring.spread(names)
-    return ingest_s, query_s, {k: spread[k] for k in sorted(spread)}
+        obs_snap = obs_block(router.obs)
+    return ingest_s, query_s, {k: spread[k] for k in sorted(spread)}, obs_snap
 
 
 def _drive_single(names, flat, queries):
@@ -142,7 +143,9 @@ def run() -> None:
          f"qps={len(queries) / single_query:.0f}")
 
     for n_cells in CELLS:
-        ingest_s, query_s, spread = _drive_cluster(n_cells, names, flat, queries)
+        ingest_s, query_s, spread, obs_snap = _drive_cluster(
+            n_cells, names, flat, queries
+        )
         by_cells[str(n_cells)] = {
             "ingest_rows_per_s": total_rows / ingest_s,
             "query_batches_per_s": len(queries) / query_s,
@@ -167,10 +170,10 @@ def run() -> None:
     small_rows, publish_every = 64, 8
     _, small_flat = _batches(n_batches, small_rows)
     small_total = len(small_flat[TENANTS:]) * small_rows
-    packed_ingest_s, _, _ = _drive_cluster(
+    packed_ingest_s, _, _, _ = _drive_cluster(
         2, names, small_flat, None, publish_every=publish_every
     )
-    serial_ingest_s, _, _ = _drive_cluster(
+    serial_ingest_s, _, _, _ = _drive_cluster(
         2, names, small_flat, None, packed=False, publish_every=publish_every
     )
     packed_rows_per_s = small_total / packed_ingest_s
@@ -210,6 +213,9 @@ def run() -> None:
         },
         "ingest_speedup_packed_vs_serial": ingest_packed_speedup,
         "replica_cache": cache,
+        # Registry snapshot from the largest timed cluster (the last
+        # CELLS entry driven above).
+        "obs": obs_snap,
     }
     path = os.path.join(os.getcwd(), "BENCH_cluster_scaling.json")
     with open(path, "w") as f:

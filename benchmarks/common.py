@@ -22,3 +22,11 @@ def timed(fn, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)
     return out, (time.perf_counter() - t0) * 1e6
+
+
+def obs_block(obs) -> dict:
+    """An ``Observability`` bundle's registry snapshot, for the ``obs``
+    key of a ``BENCH_*.json``.  The snapshot is sorted/deterministic and
+    parses back through ``MetricsRegistry.from_snapshot`` — bench-smoke
+    asserts that round trip plus nonzero headline counters."""
+    return obs.registry.snapshot()

@@ -17,6 +17,34 @@ import sys
 
 SMOKE_MODULES = ("kernels_bench", "runtime_pipeline", "cluster_scaling")
 
+# BENCH_*.json files whose "obs" telemetry snapshot the smoke lane
+# verifies, and the headline counters that must be nonzero in each.
+SMOKE_OBS_FILES = ("BENCH_runtime_pipeline.json", "BENCH_cluster_scaling.json")
+SMOKE_OBS_HEADLINE = (
+    "repro_ingest_rows_total",
+    "repro_engine_packed_launches_total",
+)
+
+
+def check_obs_snapshots() -> None:
+    """Assert each smoke BENCH json carries a parseable, nonempty
+    telemetry snapshot: it must round-trip through
+    ``MetricsRegistry.from_snapshot`` and its headline counters must
+    have actually counted something."""
+    import json
+
+    from repro.obs import MetricsRegistry
+
+    for name in SMOKE_OBS_FILES:
+        path = os.path.join(os.getcwd(), name)
+        with open(path) as f:
+            doc = json.load(f)
+        reg = MetricsRegistry.from_snapshot(doc["obs"])
+        for family in SMOKE_OBS_HEADLINE:
+            total = sum(s.value for _, s in reg.get(family).series())
+            assert total > 0, f"{name}: headline counter {family} is zero"
+        print(f"# obs snapshot ok: {name}", flush=True)
+
 
 def main() -> None:
     args = sys.argv[1:]
@@ -62,6 +90,9 @@ def main() -> None:
         if only and only not in name:
             continue
         mod.run()
+
+    if smoke and not only:
+        check_obs_snapshots()
 
 
 if __name__ == "__main__":

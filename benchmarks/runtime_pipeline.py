@@ -29,7 +29,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, scale
+from benchmarks.common import emit, obs_block, scale
 from repro.data.synthetic import lowrank_stream
 
 TENANTS = 8
@@ -185,6 +185,7 @@ def run() -> None:
             "per_tenant_serial": ingest["per_tenant_serial"],
         },
         "ingest_speedup_packed_vs_serial": ingest_speedup,
+        "obs": obs_block(pipe.obs),
     }
     path = os.path.join(os.getcwd(), "BENCH_runtime_pipeline.json")
     with open(path, "w") as f:

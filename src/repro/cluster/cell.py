@@ -35,6 +35,7 @@ from __future__ import annotations
 import jax
 
 from repro.cluster import transport as tp
+from repro.obs import Observability, rehome_families
 from repro.query.store import SketchSnapshot
 from repro.runtime.pipeline import StreamingPipeline
 
@@ -43,6 +44,20 @@ __all__ = ["PipelineCell"]
 
 class PipelineCell:
     """One coordinator shard: a named ``StreamingPipeline`` + move/sync APIs."""
+
+    # Event order is the legacy transport_counts dict order.
+    _EVENTS = (
+        "applied",  # Ingest envelopes absorbed (first delivery)
+        "duplicate",  # acknowledged without re-applying
+        "parked",  # held for reassembly (gap ahead of them)
+        "queries",  # Query envelopes served
+        "heartbeats",  # Heartbeat probes answered
+    )
+
+    _FAMILIES = (
+        ("counter", "repro_cell_transport_total",
+         "Transport envelopes handled, partitioned by event."),
+    )
 
     def __init__(
         self,
@@ -58,21 +73,46 @@ class PipelineCell:
         if park_bound < 1:
             raise ValueError(f"park_bound must be >= 1, got {park_bound}")
         self.name = name
-        self.pipeline = (
-            pipeline if pipeline is not None else StreamingPipeline(mesh, **pipeline_kw)
-        )
+        if pipeline is None:
+            # The cell's bundle carries its name as the base ``cell`` label
+            # so every pipeline/engine/service series is scoped to it.
+            pipeline_kw.setdefault("obs", Observability(labels={"cell": name}))
+            pipeline = StreamingPipeline(mesh, **pipeline_kw)
+        elif pipeline.obs.labels.get("cell") != name:
+            # An adopted standalone pipeline (cell="-"): relabel its whole
+            # telemetry under this cell's name.
+            pipeline.bind_obs(pipeline.obs.scoped(cell=name))
+        self.pipeline = pipeline
+        self.obs = pipeline.obs
+        self._bind_metrics()
         self.park_bound = park_bound
         # transport dedup window: (tenant, site) -> next expected seq (from 1)
         self._next_seq: dict[tuple[str, str], int] = {}
         # out-of-order reassembly: (tenant, site) -> {seq: rows}, bounded
         self._parked: dict[tuple[str, str], dict[int, object]] = {}
-        self.transport_counts = {
-            "applied": 0,  # Ingest envelopes absorbed (first delivery)
-            "duplicate": 0,  # acknowledged without re-applying
-            "parked": 0,  # held for reassembly (gap ahead of them)
-            "queries": 0,  # Query envelopes served
-            "heartbeats": 0,  # Heartbeat probes answered
+
+    # -- telemetry ------------------------------------------------------------
+
+    def _bind_metrics(self) -> None:
+        self._m_transport = {
+            e: self.obs.handle(
+                "counter", "repro_cell_transport_total",
+                "Transport envelopes handled, partitioned by event.",
+                labels={"event": e})
+            for e in self._EVENTS
         }
+
+    def bind_obs(self, obs: Observability) -> None:
+        """Re-home the whole cell (incl. its pipeline stack) into ``obs``."""
+        old, self.obs = self.obs, obs
+        rehome_families(old, obs, self._FAMILIES)
+        self._bind_metrics()
+        self.pipeline.bind_obs(obs)
+
+    @property
+    def transport_counts(self) -> dict[str, int]:
+        """Envelopes handled per event (fresh dict, registry view)."""
+        return {e: int(self._m_transport[e].value) for e in self._EVENTS}
 
     # -- thin delegation (the cell IS a coordinator) --------------------------
 
@@ -111,19 +151,29 @@ class PipelineCell:
         the ``Transport`` — and re-registers on ``revive`` after a
         crash-restart rebuild.
         """
-        if isinstance(envelope, tp.Ingest):
-            return self.ingest_from(
-                envelope.tenant, envelope.site, envelope.seq, envelope.rows
-            )
-        if isinstance(envelope, tp.Query):
-            self.transport_counts["queries"] += 1
-            return self.engine.query_packed(list(envelope.requests))
-        if isinstance(envelope, tp.Export):
-            return self.export_tenant(envelope.tenant)
-        if isinstance(envelope, tp.Heartbeat):
-            self.transport_counts["heartbeats"] += 1
-            return tp.HeartbeatAck(envelope.seq, len(self.tenants()))
-        raise TypeError(f"unknown envelope type {type(envelope).__name__}")
+        # Join the sender's trace: a delivery that happens inside the
+        # sender's live send span nests under it; a late replay whose
+        # originating trace has moved on becomes a detached root of the
+        # *original* trace (same trace_id) — one logical message, one tree.
+        with self.obs.trace(
+            "cell.deliver",
+            trace_id=getattr(envelope, "trace_id", None),
+            cell=self.name,
+            kind=type(envelope).__name__,
+        ):
+            if isinstance(envelope, tp.Ingest):
+                return self.ingest_from(
+                    envelope.tenant, envelope.site, envelope.seq, envelope.rows
+                )
+            if isinstance(envelope, tp.Query):
+                self._m_transport["queries"].inc()
+                return self.engine.query_packed(list(envelope.requests))
+            if isinstance(envelope, tp.Export):
+                return self.export_tenant(envelope.tenant)
+            if isinstance(envelope, tp.Heartbeat):
+                self._m_transport["heartbeats"].inc()
+                return tp.HeartbeatAck(envelope.seq, len(self.tenants()))
+            raise TypeError(f"unknown envelope type {type(envelope).__name__}")
 
     def ingest_from(self, tenant: str, site: str, seq: int, rows) -> "tp.IngestAck":
         """Idempotent, order-restoring ingest: apply exactly once, in seq order.
@@ -139,7 +189,7 @@ class PipelineCell:
         key = (tenant, site)
         expected = self._next_seq.get(key, 1)
         if seq < expected:
-            self.transport_counts["duplicate"] += 1
+            self._m_transport["duplicate"].inc()
             return tp.IngestAck("duplicate", seq, None)
         if seq > expected:
             parked = self._parked.setdefault(key, {})
@@ -147,7 +197,7 @@ class PipelineCell:
                 if len(parked) >= self.park_bound:
                     raise tp.IngestShedError(tenant, len(parked), self.park_bound)
                 parked[seq] = rows
-            self.transport_counts["parked"] += 1
+            self._m_transport["parked"].inc()
             return tp.IngestAck("parked", seq, None)
         version = self._apply(tenant, key, rows)
         # gap just filled: absorb contiguous parked successors in order
@@ -158,7 +208,7 @@ class PipelineCell:
                 break
             v = self._apply(tenant, key, parked.pop(nxt))
             version = v if v is not None else version
-        self.transport_counts["applied"] += 1
+        self._m_transport["applied"].inc()
         return tp.IngestAck("applied", seq, version)
 
     def _apply(self, tenant: str, key: tuple[str, str], rows) -> int | None:

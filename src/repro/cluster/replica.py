@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.cluster.cell import PipelineCell
 from repro.cluster.transport import StalenessExceededError
+from repro.obs import Observability, rehome_families
 from repro.query.engine import QueryEngine, QueryResult
 from repro.query.store import SketchStore
 
@@ -56,6 +57,19 @@ class ServingReplica:
     write back to a cell.
     """
 
+    _FAMILIES = (
+        ("counter", "repro_replica_syncs_total",
+         "sync() calls (explicit + read-through)."),
+        ("counter", "repro_replica_pulled_total",
+         "Snapshot versions installed."),
+        ("counter", "repro_replica_read_throughs_total",
+         "Queries that had to fetch before answering."),
+        ("counter", "repro_replica_degraded_total",
+         "Owner-blind answers served (query_degraded)."),
+        ("gauge", "repro_replica_versions_behind",
+         "Publishes the owner is ahead of the last served version, per tenant."),
+    )
+
     def __init__(
         self,
         source,
@@ -64,6 +78,7 @@ class ServingReplica:
         interpret: bool | None = None,
         max_versions_behind: int | None = None,
         retain: int = 0,
+        obs: Observability | None = None,
     ):
         if max_versions_behind is not None and max_versions_behind < 0:
             raise ValueError(
@@ -72,13 +87,70 @@ class ServingReplica:
         self.source = source
         self.max_versions_behind = max_versions_behind
         self.store = SketchStore(retain=retain)
-        self.engine = QueryEngine(self.store, cache_size=cache_size, interpret=interpret)
+        self.obs = obs if obs is not None else Observability(labels={"cell": "replica"})
+        self.engine = QueryEngine(
+            self.store, cache_size=cache_size, interpret=interpret, obs=self.obs
+        )
         self._synced: dict[str, int] = {}  # tenant -> highest pulled version
         self._owner_seen: dict[str, int] = {}  # newest owner version ever observed
-        self.syncs = 0  # sync() calls (explicit + read-through)
-        self.pulled = 0  # snapshot versions installed
-        self.read_throughs = 0  # queries that had to fetch before answering
-        self.degraded = 0  # owner-blind answers served (query_degraded)
+        self._bind_metrics()
+
+    # -- telemetry ------------------------------------------------------------
+
+    def _bind_metrics(self) -> None:
+        handles = {
+            name: self.obs.handle(kind, name, help)
+            for kind, name, help in self._FAMILIES
+            if kind == "counter"
+        }
+        self._m_syncs = handles["repro_replica_syncs_total"]
+        self._m_pulled = handles["repro_replica_pulled_total"]
+        self._m_read_throughs = handles["repro_replica_read_throughs_total"]
+        self._m_degraded = handles["repro_replica_degraded_total"]
+        tenants = tuple(getattr(self, "_m_behind", ()))
+        self._m_behind = {t: self._behind_handle(t) for t in tenants}
+
+    def _behind_handle(self, tenant: str):
+        return self.obs.handle(
+            "gauge", "repro_replica_versions_behind",
+            "Publishes the owner is ahead of the last served version, per tenant.",
+            labels={"tenant": tenant},
+        )
+
+    def _set_behind(self, tenant: str, behind: int) -> None:
+        h = self._m_behind.get(tenant)
+        if h is None:
+            h = self._m_behind[tenant] = self._behind_handle(tenant)
+        h.set(behind)
+
+    def bind_obs(self, obs: Observability) -> None:
+        """Re-home the replica's telemetry (incl. its engine) into ``obs``."""
+        old, self.obs = self.obs, obs
+        rehome_families(old, obs, self._FAMILIES)
+        self._bind_metrics()
+        self.engine.bind_obs(obs)
+
+    # Legacy counter attributes, now registry views.
+
+    @property
+    def syncs(self) -> int:
+        """sync() calls (explicit + read-through)."""
+        return int(self._m_syncs.value)
+
+    @property
+    def pulled(self) -> int:
+        """Snapshot versions installed."""
+        return int(self._m_pulled.value)
+
+    @property
+    def read_throughs(self) -> int:
+        """Queries that had to fetch before answering."""
+        return int(self._m_read_throughs.value)
+
+    @property
+    def degraded(self) -> int:
+        """Owner-blind answers served (query_degraded)."""
+        return int(self._m_degraded.value)
 
     def _cell_for(self, tenant: str) -> PipelineCell:
         if isinstance(self.source, PipelineCell):
@@ -106,8 +178,8 @@ class ServingReplica:
                 self._synced[t] = snap.version
                 installed += 1
             self._owner_seen[t] = max(self._owner_seen.get(t, 0), self._synced.get(t, 0))
-        self.syncs += 1
-        self.pulled += installed
+        self._m_syncs.inc()
+        self._m_pulled.inc(installed)
         return installed
 
     def synced_version(self, tenant: str) -> int:
@@ -138,7 +210,7 @@ class ServingReplica:
         have = set(self.store.versions(tenant)) if tenant in self.store.tenants() else set()
         miss = not have if version is None else version not in have
         if miss:
-            self.read_throughs += 1
+            self._m_read_throughs.inc()
             self.sync(tenant)
         owner_latest = self._cell_for(tenant).latest_version(tenant) or 0
         if (
@@ -149,10 +221,12 @@ class ServingReplica:
             self.sync(tenant)
         self._owner_seen[tenant] = max(self._owner_seen.get(tenant, 0), owner_latest)
         res = self.engine.query_batch(x, tenant=tenant, version=version, path=path)
+        behind = max(0, owner_latest - res.version)
+        self._set_behind(tenant, behind)
         return ReplicaResult(
             result=res,
             owner_version=max(owner_latest, res.version),
-            versions_behind=max(0, owner_latest - res.version),
+            versions_behind=behind,
         )
 
     def query_degraded(
@@ -179,9 +253,10 @@ class ServingReplica:
         res = self.engine.query_batch(x, tenant=tenant, path=path)
         owner_latest = max(self._owner_seen.get(tenant, 0), res.version)
         behind = owner_latest - res.version
+        self._set_behind(tenant, behind)
         if self.max_versions_behind is not None and behind > self.max_versions_behind:
             raise StalenessExceededError(tenant, behind, self.max_versions_behind)
-        self.degraded += 1
+        self._m_degraded.inc()
         return ReplicaResult(
             result=res, owner_version=owner_latest, versions_behind=behind
         )

@@ -68,6 +68,7 @@ from repro.cluster import transport as tp
 from repro.cluster.cell import PipelineCell
 from repro.cluster.hashring import HashRing, RebalancePlan, rebalance_plan
 from repro.cluster.replica import ServingReplica
+from repro.obs import Observability
 from repro.query.engine import PackedRequest, QueryResult
 from repro.query.service import QueryShedError, QueryTicket
 from repro.runtime.policies import RetryPolicy
@@ -131,8 +132,34 @@ class _ReplayEntry:
         self.acked = False
 
 
+_BREAKER_STATES = {"closed": 0, "half-open": 1, "open": 2}
+
+
 class ClusterRouter:
-    """Routes tenants, ingest, and query batches across coordinator cells."""
+    """Routes tenants, ingest, and query batches across coordinator cells.
+
+    The router owns the cluster's one ``Observability`` bundle: every
+    cell's pipeline/engine/service telemetry is re-homed into it at
+    construction (``bind_obs``), the transport and the degraded-serving
+    replica emit into it, and a query fans out as one trace tree —
+    ``router.query_batch`` → ``transport.message``/``transport.send`` →
+    ``cell.deliver`` → ``engine.query_packed``.  ``obs.registry`` is the
+    scrape surface (``to_prometheus()`` is a ready ``/metrics`` body).
+    """
+
+    # Resilience counter order is the legacy _resilience dict order.
+    _RES_KEYS = (
+        ("messages", "Logical sends (first attempts)."),
+        ("attempts", "Total transport sends incl. retries."),
+        ("retries", "Attempts beyond the first."),
+        ("backoff_s", "Total backoff budget slept (seconds)."),
+        ("unreachable", "Messages that exhausted their retry budget."),
+        ("parked_ingest", "Batches retained while the owner was out."),
+        ("ingest_shed", "Replay-queue overflows (IngestShedError)."),
+        ("degraded_queries", "Answers served by the replica."),
+        ("heartbeats", "Heartbeat probes sent."),
+        ("recoveries", "Crash-restart cell recoveries."),
+    )
 
     def __init__(
         self,
@@ -153,7 +180,6 @@ class ClusterRouter:
         self.ring = HashRing(names, vnodes=vnodes)
         self._cells: dict[str, PipelineCell] = {c.name: c for c in cells}
         self._tenant_cell: dict[str, str] = {}
-        self._shed_by_cell: dict[str, int] = {name: 0 for name in names}
         self.rebalances = 0
         self._rw = _RWLock()
 
@@ -172,26 +198,49 @@ class ClusterRouter:
         self._breakers: dict[str, tp.CircuitBreaker] = {}
         self._hb_seq = 0
         self.degraded_log: list[tuple[str, int]] = []  # (tenant, versions_behind)
-        self._resilience = {
-            "messages": 0,  # logical sends (first attempts)
-            "attempts": 0,  # total transport sends incl. retries
-            "retries": 0,  # attempts beyond the first
-            "backoff_s": 0.0,  # total backoff budget slept
-            "unreachable": 0,  # messages that exhausted their retry budget
-            "parked_ingest": 0,  # batches retained while the owner was out
-            "ingest_shed": 0,  # replay-queue overflows (IngestShedError)
-            "degraded_queries": 0,  # answers served by the replica
-            "heartbeats": 0,
-            "recoveries": 0,
+
+        # -- unified telemetry: one bundle for the whole cluster --------------
+        # The router's clock (injectable, like the breakers') times every
+        # span and latency metric, so seeded chaos schedules with a fake
+        # clock serialize byte-identically run over run.
+        self.obs = Observability(clock=clock, labels={})
+        self._m_res = {
+            k: self.obs.handle(
+                "counter",
+                f"repro_router_{'backoff_seconds' if k == 'backoff_s' else k}_total",
+                h)
+            for k, h in self._RES_KEYS
         }
+        self._m_shed = {name: self._shed_handle(name) for name in names}
+        for cell in cells:
+            cell.bind_obs(self.obs.scoped(cell=cell.name))
         self.replica: ServingReplica | None = None
         if transport is not None:
+            transport.bind_obs(self.obs)
             for cell in cells:
                 transport.register(cell.name, cell.deliver)
                 self._breakers[cell.name] = self._new_breaker()
+                self._set_breaker_gauge(cell.name)
             self.replica = ServingReplica(
-                self, max_versions_behind=staleness_bound
+                self, max_versions_behind=staleness_bound,
+                obs=self.obs.scoped(cell="replica"),
             )
+
+    # -- telemetry helpers -----------------------------------------------------
+
+    def _shed_handle(self, name: str):
+        return self.obs.handle(
+            "counter", "repro_router_sheds_total",
+            "Sheds that propagated through this router, per cell.",
+            labels={"cell": name},
+        )
+
+    def _set_breaker_gauge(self, name: str) -> None:
+        self.obs.handle(
+            "gauge", "repro_router_breaker_state",
+            "Per-cell breaker state: 0 closed, 1 half-open, 2 open.",
+            labels={"cell": name},
+        ).set(_BREAKER_STATES[self._breakers[name].state])
 
     def _new_breaker(self) -> tp.CircuitBreaker:
         return tp.CircuitBreaker(
@@ -266,25 +315,40 @@ class ClusterRouter:
         consumes a transport message index, which is what lets the chaos
         suite reconcile ``transport.sends`` against
         ``messages + retries`` exactly.
+
+        Tracing: the logical message is one ``transport.message`` span;
+        every attempt opens its own ``transport.send`` child (so counting
+        a trace's ``transport.send`` spans counts its attempts exactly),
+        and each retry lands as a timestamped event on the message span.
         """
         retry = self._retry
-        self._resilience["messages"] += 1
-        for attempt in range(1, retry.max_attempts + 1):
-            self._resilience["attempts"] += 1
-            try:
-                reply = self._transport.send(name, envelope)
-            except (tp.TransportTimeout, tp.CellDownError):
-                if attempt < retry.max_attempts:
-                    self._resilience["retries"] += 1
-                    delay = retry.backoff_s(attempt, float(self._rng.random()))
-                    self._resilience["backoff_s"] += delay
-                    self._sleep(delay)
-            else:
-                self._breakers[name].record_success()
-                return reply
-        self._breakers[name].record_failure()
-        self._resilience["unreachable"] += 1
-        return None
+        self._m_res["messages"].inc()
+        with self.obs.trace(
+            "transport.message", cell=name, kind=type(envelope).__name__
+        ) as msg:
+            for attempt in range(1, retry.max_attempts + 1):
+                self._m_res["attempts"].inc()
+                try:
+                    with self.obs.trace("transport.send", cell=name, attempt=attempt):
+                        reply = self._transport.send(name, envelope)
+                except (tp.TransportTimeout, tp.CellDownError) as exc:
+                    if attempt < retry.max_attempts:
+                        self._m_res["retries"].inc()
+                        delay = retry.backoff_s(attempt, float(self._rng.random()))
+                        self._m_res["backoff_s"].inc(delay)
+                        msg.event(
+                            "retry", attempt=attempt,
+                            error=type(exc).__name__, backoff_s=delay,
+                        )
+                        self._sleep(delay)
+                else:
+                    self._breakers[name].record_success()
+                    self._set_breaker_gauge(name)
+                    return reply
+            self._breakers[name].record_failure()
+            self._set_breaker_gauge(name)
+            self._m_res["unreachable"].inc()
+            return None
 
     # -- ingest routing --------------------------------------------------------
 
@@ -300,28 +364,33 @@ class ClusterRouter:
         """
         with self._rw.read():
             if self._transport is None:
-                return self._owner(tenant).ingest(tenant, rows)
-            cell_name = self._owner(tenant).name
-            with self._seq_lock:
-                buf = self._replay.setdefault(cell_name, [])
-                pending = sum(1 for e in buf if not e.acked)
-                if pending >= self._replay_bound:
-                    self._shed_by_cell[cell_name] += 1
-                    self._resilience["ingest_shed"] += 1
-                    raise tp.IngestShedError(tenant, pending, self._replay_bound)
-                seq = self._seq.get((tenant, site), 1)
-                self._seq[(tenant, site)] = seq + 1
-                entry = _ReplayEntry(tp.Ingest(tenant, site, seq, rows))
-                buf.append(entry)
-            if not self._breakers[cell_name].allow():
-                self._resilience["parked_ingest"] += 1
-                return None
-            ack = self._send_with_retry(cell_name, entry.env)
-            if ack is None:
-                self._resilience["parked_ingest"] += 1
-                return None
-            entry.acked = True
-            return ack
+                with self.obs.trace("router.ingest", tenant=tenant, site=site):
+                    return self._owner(tenant).ingest(tenant, rows)
+            with self.obs.trace("router.ingest", tenant=tenant, site=site):
+                cell_name = self._owner(tenant).name
+                with self._seq_lock:
+                    buf = self._replay.setdefault(cell_name, [])
+                    pending = sum(1 for e in buf if not e.acked)
+                    if pending >= self._replay_bound:
+                        self._m_shed[cell_name].inc()
+                        self._m_res["ingest_shed"].inc()
+                        raise tp.IngestShedError(tenant, pending, self._replay_bound)
+                    seq = self._seq.get((tenant, site), 1)
+                    self._seq[(tenant, site)] = seq + 1
+                    entry = _ReplayEntry(tp.Ingest(
+                        tenant, site, seq, rows,
+                        trace_id=self.obs.tracer.current_trace_id(),
+                    ))
+                    buf.append(entry)
+                if not self._breakers[cell_name].allow():
+                    self._m_res["parked_ingest"].inc()
+                    return None
+                ack = self._send_with_retry(cell_name, entry.env)
+                if ack is None:
+                    self._m_res["parked_ingest"].inc()
+                    return None
+                entry.acked = True
+                return ack
 
     def ingest_many(
         self,
@@ -388,12 +457,12 @@ class ClusterRouter:
             try:
                 return cell.submit(tenant, x, deadline_s=deadline_s)
             except QueryShedError:
-                self._shed_by_cell[cell.name] += 1
+                self._m_shed[cell.name].inc()
                 raise
 
     def shed_counts(self) -> dict[str, int]:
         """Per-cell count of sheds that propagated through this router."""
-        return dict(self._shed_by_cell)
+        return {name: int(h.value) for name, h in self._m_shed.items()}
 
     def query_batch(
         self, queries: Sequence[tuple[str, "np.ndarray"]]
@@ -414,7 +483,9 @@ class ClusterRouter:
         each enforced against the declared ``staleness_bound`` and logged
         in ``degraded_log`` as ``(tenant, versions_behind)``.
         """
-        with self._rw.read():
+        with self._rw.read(), self.obs.trace(
+            "router.query_batch", queries=len(queries)
+        ):
             per_cell: dict[str, list[int]] = {}
             for i, (tenant, _) in enumerate(queries):
                 per_cell.setdefault(self._tenant_cell[tenant], []).append(i)
@@ -431,7 +502,11 @@ class ClusterRouter:
                 else:
                     results = None
                     if self._breakers[name].allow():
-                        results = self._send_with_retry(name, tp.Query(tuple(requests)))
+                        env = tp.Query(
+                            tuple(requests),
+                            trace_id=self.obs.tracer.current_trace_id(),
+                        )
+                        results = self._send_with_retry(name, env)
                     if results is None:
                         results = [self._degraded(req) for req in requests]
                 for i, res in zip(idxs, results):
@@ -441,7 +516,7 @@ class ClusterRouter:
     def _degraded(self, request: PackedRequest) -> QueryResult:
         """Serve one request from the replica (owner open/unreachable)."""
         rr = self.replica.query_degraded(request.x, tenant=request.tenant)
-        self._resilience["degraded_queries"] += 1
+        self._m_res["degraded_queries"].inc()
         self.degraded_log.append((request.tenant, rr.versions_behind))
         return rr.result
 
@@ -473,8 +548,11 @@ class ClusterRouter:
                     out[name] = "open"
                     continue
                 self._hb_seq += 1
-                self._resilience["heartbeats"] += 1
-                ack = self._send_with_retry(name, tp.Heartbeat(self._hb_seq))
+                self._m_res["heartbeats"].inc()
+                env = tp.Heartbeat(
+                    self._hb_seq, trace_id=self.obs.tracer.current_trace_id()
+                )
+                ack = self._send_with_retry(name, env)
                 if ack is None:
                     out[name] = "failed"
                     continue
@@ -585,9 +663,18 @@ class ClusterRouter:
             attachments = ckpt.read_extra(directory, step).get("attachments", {})
             fresh_cell.restore_dedup(attachments.get("cell", {}).get("dedup", {}))
             self._cells[name] = fresh_cell
+            # The dead incarnation's per-cell series go with it — but router
+            # sheds are *router* state, so carry that one value across.
+            shed = self._m_shed[name].value
+            self.obs.registry.drop_series(cell=name)
+            self._m_shed[name] = self._shed_handle(name)
+            if shed:
+                self._m_shed[name].inc(shed)
+            fresh_cell.bind_obs(self.obs.scoped(cell=name))
             self._transport.revive(name, fresh_cell.deliver)
             self._breakers[name] = self._new_breaker()
-            self._resilience["recoveries"] += 1
+            self._set_breaker_gauge(name)
+            self._m_res["recoveries"].inc()
             return self._drain_replay(name, include_acked=True)
 
     # -- rebalance -------------------------------------------------------------
@@ -641,11 +728,14 @@ class ClusterRouter:
             if stranded:  # cannot happen with a consistent plan; belt-and-braces
                 raise RuntimeError(f"tenants stranded on removed cells: {stranded}")
 
-            if self._transport is not None:
-                for name, cell in new_by_name.items():
-                    if name not in self._cells:
+            for name, cell in new_by_name.items():
+                if name not in self._cells:
+                    cell.bind_obs(self.obs.scoped(cell=name))
+                    self._m_shed.setdefault(name, self._shed_handle(name))
+                    if self._transport is not None:
                         self._transport.register(name, cell.deliver)
                         self._breakers[name] = self._new_breaker()
+                        self._set_breaker_gauge(name)
 
             for move in plan.moves:
                 src, dst = self._cells[move.src], new_by_name[move.dst]
@@ -673,15 +763,18 @@ class ClusterRouter:
                 if self._transport is not None:
                     src.drop_dedup(move.tenant)
                 self._tenant_cell[move.tenant] = move.dst
+                # Tenant-labelled gauges under the old owner are stale now.
+                self.obs.registry.drop_series(cell=move.src, tenant=move.tenant)
 
             self.ring = new_ring
             self._cells = new_by_name
-            for name in new_by_name:
-                self._shed_by_cell.setdefault(name, 0)
             for name in removed:
-                self._shed_by_cell.pop(name, None)
+                self._m_shed.pop(name, None)
                 self._breakers.pop(name, None)
                 self._replay.pop(name, None)
+                # A removed cell's label series would otherwise linger on
+                # the scrape surface forever at their final values.
+                self.obs.registry.drop_series(cell=name)
             self.rebalances += 1
             return plan
 
@@ -704,7 +797,7 @@ class ClusterRouter:
             out[name] = {
                 "tenants": len(cell.tenants()),
                 "pending": cell.pipeline.service.pending(),
-                "shed": self._shed_by_cell.get(name, 0),
+                "shed": int(self._m_shed[name].value) if name in self._m_shed else 0,
                 "cache_hit_rate": cache["hit_rate"],
                 "cache_evictions": cache["evictions"],
                 "ingest": cell.pipeline.stats(),
@@ -717,7 +810,10 @@ class ClusterRouter:
                 out[name]["transport"] = dict(cell.transport_counts)
         if self._transport is not None:
             out["_resilience"] = {
-                **self._resilience,
+                **{
+                    k: (h.value if k == "backoff_s" else int(h.value))
+                    for k, h in self._m_res.items()
+                },
                 "transport": {
                     "sends": self._transport.sends,
                     **self._transport.counters,

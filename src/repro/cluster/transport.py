@@ -40,6 +40,7 @@ from typing import Callable, NamedTuple
 
 import numpy as np
 
+from repro.obs import Observability, rehome_families
 from repro.query.engine import PackedRequest
 from repro.query.service import QueryShedError
 
@@ -74,12 +75,18 @@ class Ingest:
     re-applying and parking out-of-order arrivals until the gap fills.
     ``rows`` is whatever the tenant's workload ingests (a row block, or a
     ``(keys, weights)`` pair for item workloads).
+
+    ``trace_id`` (here and on every envelope kind) stitches distributed
+    traces: the sender stamps its live trace, and the receiving cell
+    joins its ``cell.deliver`` span to that trace — retries, duplicates,
+    and late replays of one logical message all land in one tree.
     """
 
     tenant: str
     site: str
     seq: int
     rows: object
+    trace_id: str | None = None
 
 
 @dataclass(frozen=True)
@@ -87,6 +94,7 @@ class Query:
     """A packed query group for one cell (a tuple of ``PackedRequest``)."""
 
     requests: tuple[PackedRequest, ...]
+    trace_id: str | None = None
 
 
 @dataclass(frozen=True)
@@ -94,6 +102,7 @@ class Export:
     """Request one tenant's portable export payload (rebalance path)."""
 
     tenant: str
+    trace_id: str | None = None
 
 
 @dataclass(frozen=True)
@@ -101,6 +110,7 @@ class Heartbeat:
     """Liveness probe; the reply carries the cell's tenant count."""
 
     seq: int
+    trace_id: str | None = None
 
 
 class IngestAck(NamedTuple):
@@ -271,24 +281,67 @@ class Transport:
 
     ``counters`` partition every send by outcome, so chaos tests can
     assert ``sends == delivered + dropped + delayed + crashed + down``
-    exactly — no message unaccounted for.
+    exactly — no message unaccounted for.  Both it and ``sends`` are
+    views over the obs registry (``repro_transport_sends_total`` /
+    ``repro_transport_outcomes_total{outcome=...}``).
     """
 
-    def __init__(self, *, plan: FaultPlan | None = None):
+    # Outcome order is the legacy counters-dict order (tests rely on it).
+    _OUTCOMES = (
+        "delivered",  # primary deliveries that returned a reply
+        "dropped",  # lost outright (scripted drop)
+        "delayed",  # parked for late delivery (scripted delay)
+        "crashed",  # killed the destination mid-receive
+        "down",  # sent at a dead endpoint
+        "duplicate_deliveries",  # extra handler calls beyond delivered
+        "late_deliveries",  # parked envelopes flushed late
+    )
+
+    _FAMILIES = (
+        ("counter", "repro_transport_sends_total",
+         "Global message indices consumed (retries included)."),
+        ("counter", "repro_transport_outcomes_total",
+         "Sends partitioned by delivery outcome."),
+    )
+
+    def __init__(self, *, plan: FaultPlan | None = None,
+                 obs: Observability | None = None):
         self.plan = plan
-        self.sends = 0  # global message index consumed per send()
-        self.counters = {
-            "delivered": 0,  # primary deliveries that returned a reply
-            "dropped": 0,  # lost outright (scripted drop)
-            "delayed": 0,  # parked for late delivery (scripted delay)
-            "crashed": 0,  # killed the destination mid-receive
-            "down": 0,  # sent at a dead endpoint
-            "duplicate_deliveries": 0,  # extra handler calls beyond delivered
-            "late_deliveries": 0,  # parked envelopes flushed late
-        }
+        self.obs = obs if obs is not None else Observability(labels={})
+        self._bind_metrics()
         self._endpoints: dict[str, Callable] = {}
         self._down: set[str] = set()
         self._parked: dict[str, list[object]] = {}
+
+    # -- telemetry ----------------------------------------------------------
+
+    def _bind_metrics(self) -> None:
+        self._m_sends = self.obs.handle(
+            "counter", "repro_transport_sends_total",
+            "Global message indices consumed (retries included).")
+        self._m_outcomes = {
+            k: self.obs.handle(
+                "counter", "repro_transport_outcomes_total",
+                "Sends partitioned by delivery outcome.",
+                labels={"outcome": k})
+            for k in self._OUTCOMES
+        }
+
+    def bind_obs(self, obs: Observability) -> None:
+        """Re-home the transport's telemetry into another bundle."""
+        old, self.obs = self.obs, obs
+        rehome_families(old, obs, self._FAMILIES)
+        self._bind_metrics()
+
+    @property
+    def sends(self) -> int:
+        """Global message index consumed per ``send()`` (registry view)."""
+        return int(self._m_sends.value)
+
+    @property
+    def counters(self) -> dict[str, int]:
+        """Every send partitioned by outcome (fresh dict, registry view)."""
+        return {k: int(self._m_outcomes[k].value) for k in self._OUTCOMES}
 
     # -- topology ------------------------------------------------------------
 
@@ -333,29 +386,29 @@ class Transport:
         """
         if name not in self._endpoints:
             raise KeyError(f"unknown endpoint {name!r}")
-        index = self.sends
-        self.sends += 1
+        index = int(self._m_sends.value)
+        self._m_sends.inc()
         action = self.plan.action(index) if self.plan is not None else None
         if name in self._down:
-            self.counters["down"] += 1
+            self._m_outcomes["down"].inc()
             raise CellDownError(f"cell {name!r} is down (message {index})")
         if action == "crash":
-            self.counters["crashed"] += 1
+            self._m_outcomes["crashed"].inc()
             self.crash(name)
             raise TransportTimeout(f"cell {name!r} crashed receiving message {index}")
         if action == "drop":
-            self.counters["dropped"] += 1
+            self._m_outcomes["dropped"].inc()
             raise TransportTimeout(f"message {index} to {name!r} dropped")
         if action == "delay":
-            self.counters["delayed"] += 1
+            self._m_outcomes["delayed"].inc()
             self._parked.setdefault(name, []).append(envelope)
             raise TransportTimeout(f"message {index} to {name!r} delayed")
         reply = self._endpoints[name](envelope)
-        self.counters["delivered"] += 1
+        self._m_outcomes["delivered"].inc()
         if action == "duplicate":
             # The network delivered a second copy; its reply goes nowhere.
             self._endpoints[name](envelope)
-            self.counters["duplicate_deliveries"] += 1
+            self._m_outcomes["duplicate_deliveries"].inc()
         self._flush_parked(name)
         return reply
 
@@ -366,7 +419,7 @@ class Transport:
         # original sender gave up on these long ago.
         for envelope in self._parked.pop(name, []):
             self._endpoints[name](envelope)
-            self.counters["late_deliveries"] += 1
+            self._m_outcomes["late_deliveries"].inc()
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-__all__ = ["CommReport"]
+__all__ = ["CommReport", "build_report"]
 
 
 @dataclass(frozen=True)
@@ -51,3 +51,36 @@ class CommReport:
         # TrackerSnapshot.messages dict keys.
         aliases = {"scalar": "scalar_msgs", "rows": "row_msgs"}
         return self.as_dict()[aliases.get(key, key)]
+
+    def emit(self, registry, **labels) -> None:
+        """Set the paper-level comm gauges on an obs registry.
+
+        ``labels`` (typically ``cell=...``, ``tenant=...``) select the
+        series; one gauge per report field plus the derived total in the
+        paper's units.  Gauges, not counters: a report is a snapshot of
+        cumulative protocol state, re-emitted whole at every publish.
+        """
+        names = tuple(sorted(labels))
+        for field, value in self.as_dict().items():
+            registry.gauge(
+                f"repro_comm_{field}",
+                "Protocol communication accounting (paper units); "
+                "total = scalar + rows + broadcasts*m.",
+                labels=names,
+            ).labels(**labels).set(value)
+
+
+def build_report(*, scalar_msgs, row_msgs, broadcast_events, m) -> CommReport:
+    """The one place engine counters collapse into a ``CommReport``.
+
+    Both engines route through here — the event engine with
+    ``item_msgs + sketch_rows`` as its row count, the shard_map engine
+    with jit-able i32 scalars — so they cannot drift in what they count
+    or how values are coerced (everything lands as a Python ``int``).
+    """
+    return CommReport(
+        scalar_msgs=int(scalar_msgs),
+        row_msgs=int(row_msgs),
+        broadcast_events=int(broadcast_events),
+        m=int(m),
+    )

@@ -41,7 +41,7 @@ from repro.core import fd as fdlib
 from repro.core import hh as hhlib
 from repro.core import leverage as levlib
 from repro.core import quantiles as qlib
-from repro.core.comm import CommReport
+from repro.core.comm import CommReport, build_report
 
 __all__ = [
     "ProtocolConfig",
@@ -127,11 +127,11 @@ class CommCounters(NamedTuple):
 
     def report(self, m: int) -> CommReport:
         """Collapse the jit-able counters to the engine-agnostic report."""
-        return CommReport(
-            scalar_msgs=int(self.scalar_msgs),
-            row_msgs=int(self.row_msgs),
-            broadcast_events=int(self.broadcast_events),
-            m=int(m),
+        return build_report(
+            scalar_msgs=self.scalar_msgs,
+            row_msgs=self.row_msgs,
+            broadcast_events=self.broadcast_events,
+            m=m,
         )
 
 

@@ -28,7 +28,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.comm import CommReport
+from repro.core.comm import CommReport, build_report
 from repro.core.fd import FDSketch
 from repro.core.hh import MGSketch
 
@@ -76,11 +76,11 @@ class CommLog:
 
     def report(self, m: int) -> CommReport:
         """Collapse to the engine-agnostic report (item + sketch rows unify)."""
-        return CommReport(
-            scalar_msgs=int(self.scalar_msgs),
-            row_msgs=int(self.item_msgs + self.sketch_rows),
-            broadcast_events=int(self.broadcast_events),
-            m=int(m),
+        return build_report(
+            scalar_msgs=self.scalar_msgs,
+            row_msgs=self.item_msgs + self.sketch_rows,
+            broadcast_events=self.broadcast_events,
+            m=m,
         )
 
 

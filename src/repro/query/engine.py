@@ -41,6 +41,7 @@ from typing import NamedTuple
 
 import numpy as np
 
+from repro.obs import Observability, rehome_families
 from repro.query.store import SketchSnapshot, SketchStore
 
 __all__ = ["PackedRequest", "QueryEngine", "QueryResult", "Spectrum"]
@@ -92,31 +93,66 @@ class QueryEngine:
     levscore sweeps.  ``query_packed`` packs many tenants per engine call.
     """
 
+    _FAMILIES = (
+        ("counter", "repro_engine_cache_ops_total",
+         "Per-version cache lookups by cache (spectrum/factor) and op "
+         "(hits/misses/evictions)."),
+        ("counter", "repro_engine_packed_launches_total",
+         "Kernel launches spent by query_packed."),
+        ("counter", "repro_engine_packed_pad_slots_total",
+         "Zero-filled query slots added while packing."),
+    )
+
     def __init__(
         self,
         store: SketchStore,
         *,
         cache_size: int = 16,
         interpret: bool | None = None,
+        obs: Observability | None = None,
     ):
         if cache_size < 1:
             raise ValueError(f"cache_size must be >= 1, got {cache_size}")
         self.store = store
         self.cache_size = cache_size
         self.interpret = interpret
+        self.obs = obs if obs is not None else Observability()
         self._cache: OrderedDict[tuple[str, int], Spectrum] = OrderedDict()
         # Leverage tenants' ridge factors, same LRU discipline as _cache.
         self._factor_cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
+        self._bind_metrics()
+
+    def _bind_metrics(self) -> None:
         # Per-cache keyed counters: evictions were previously silent, so a
         # thrashing cache (cache_size too small for the live tenant set)
         # looked identical to a healthy one.  Routers and replicas read
-        # these to report hit rates per cell.
-        self._cache_counters: dict[str, dict[str, int]] = {
-            "spectrum": {"hits": 0, "misses": 0, "evictions": 0},
-            "factor": {"hits": 0, "misses": 0, "evictions": 0},
+        # these (via the cache_stats view) to report hit rates per cell.
+        kind, name, help = self._FAMILIES[0]
+        self._m_cache = {
+            (which, op): self.obs.handle(
+                kind, name, help, labels={"cache": which, "op": op}
+            )
+            for which in ("spectrum", "factor")
+            for op in ("hits", "misses", "evictions")
         }
-        self.packed_launches = 0  # kernel launches spent by query_packed
-        self.packed_pad_slots = 0  # zero-filled query slots added while packing
+        self._m_launches = self.obs.handle(*self._FAMILIES[1])
+        self._m_pad = self.obs.handle(*self._FAMILIES[2])
+
+    def bind_obs(self, obs: Observability) -> None:
+        """Re-home this engine's telemetry into another bundle."""
+        old, self.obs = self.obs, obs
+        rehome_families(old, obs, self._FAMILIES)
+        self._bind_metrics()
+
+    @property
+    def packed_launches(self) -> int:
+        """Kernel launches spent by ``query_packed`` (registry view)."""
+        return int(self._m_launches.value)
+
+    @property
+    def packed_pad_slots(self) -> int:
+        """Zero-filled query slots added while packing (registry view)."""
+        return int(self._m_pad.value)
 
     # -- spectrum cache ------------------------------------------------------
 
@@ -134,18 +170,17 @@ class QueryEngine:
         cache), move-to-end on hit, evict the oldest past ``cache_size``.
         Versions are immutable, so a hit can never be stale; publishing
         changes the key, which IS the invalidation."""
-        counters = self._cache_counters[which]
         hit = cache.get(key)
         if hit is not None:
             cache.move_to_end(key)
-            counters["hits"] += 1
+            self._m_cache[(which, "hits")].inc()
             return hit
-        counters["misses"] += 1
+        self._m_cache[(which, "misses")].inc()
         value = compute()
         cache[key] = value
         while len(cache) > self.cache_size:
             cache.popitem(last=False)
-            counters["evictions"] += 1
+            self._m_cache[(which, "evictions")].inc()
         return value
 
     def _spectrum_for(self, snap: SketchSnapshot) -> Spectrum:
@@ -187,7 +222,7 @@ class QueryEngine:
                 continue
             by_shape.setdefault(mat.shape, []).append(snap)
         warmed = 0
-        counters = self._cache_counters["spectrum"]
+        evictions = self._m_cache[("spectrum", "evictions")]
         for group in by_shape.values():
             b = jnp.asarray(np.stack([np.asarray(s.matrix) for s in group]))
             s_all, vt_all = fd_spectra(b, interpret=self.interpret)
@@ -199,21 +234,24 @@ class QueryEngine:
                 warmed += 1
                 while len(self._cache) > self.cache_size:
                     self._cache.popitem(last=False)
-                    counters["evictions"] += 1
+                    evictions.inc()
         return warmed
+
+    def _cache_op(self, which: str, op: str) -> int:
+        return int(self._m_cache[(which, op)].value)
 
     @property
     def cache_hits(self) -> int:
         """Total cache hits across both per-version caches."""
-        return sum(c["hits"] for c in self._cache_counters.values())
+        return self._cache_op("spectrum", "hits") + self._cache_op("factor", "hits")
 
     @property
     def cache_misses(self) -> int:
         """Total cache misses across both per-version caches."""
-        return sum(c["misses"] for c in self._cache_counters.values())
+        return self._cache_op("spectrum", "misses") + self._cache_op("factor", "misses")
 
     def cache_stats(self) -> dict:
-        """Keyed counters for the per-version caches.
+        """Keyed counters for the per-version caches (a registry view).
 
         ``hits``/``misses``/``evictions`` aggregate both caches;
         ``spectrum`` and ``factor`` break the same counters out per cache
@@ -221,17 +259,23 @@ class QueryEngine:
         invisible); ``entries`` is the spectrum cache's resident count,
         ``factor_entries`` the leverage factor cache's; ``hit_rate`` is
         the aggregate fraction of lookups served from cache — what the
-        cluster router and serving replicas report per cell.
+        cluster router and serving replicas report per cell.  On a cold
+        cache (zero lookups) ``hit_rate`` is 0.0, never NaN.  The dict —
+        nested per-cache dicts included — is built fresh per call, so
+        mutating it cannot corrupt the live counters.
         """
         hits, misses = self.cache_hits, self.cache_misses
         return {
             "hits": hits,
             "misses": misses,
-            "evictions": sum(c["evictions"] for c in self._cache_counters.values()),
+            "evictions": (self._cache_op("spectrum", "evictions")
+                          + self._cache_op("factor", "evictions")),
             "entries": len(self._cache),
             "factor_entries": len(self._factor_cache),
-            "spectrum": dict(self._cache_counters["spectrum"]),
-            "factor": dict(self._cache_counters["factor"]),
+            "spectrum": {op: self._cache_op("spectrum", op)
+                         for op in ("hits", "misses", "evictions")},
+            "factor": {op: self._cache_op("factor", op)
+                       for op in ("hits", "misses", "evictions")},
             "hit_rate": hits / max(hits + misses, 1),
         }
 
@@ -253,6 +297,17 @@ class QueryEngine:
         """
         if path not in PATHS:
             raise ValueError(f"unknown query path {path!r}; choose from {PATHS}")
+        with self.obs.trace("engine.query_batch", tenant=tenant, path=path):
+            return self._query_batch(x, tenant=tenant, version=version, path=path)
+
+    def _query_batch(
+        self,
+        x: np.ndarray,
+        *,
+        tenant: str,
+        version: int | None,
+        path: str,
+    ) -> QueryResult:
         snap = self.store.get(tenant, version)
         x = np.asarray(x, np.float32)
         wl = _workload(snap)
@@ -299,6 +354,10 @@ class QueryEngine:
         Results come back in request order, one ``QueryResult`` each,
         identical (to fp tolerance) to serial per-tenant ``query_batch``.
         """
+        with self.obs.trace("engine.query_packed", requests=len(requests)):
+            return self._query_packed(requests)
+
+    def _query_packed(self, requests: list[PackedRequest]) -> list[QueryResult]:
         from repro.kernels.ops import quadform_packed
 
         snaps: list[SketchSnapshot] = []
@@ -326,7 +385,7 @@ class QueryEngine:
             estimates[i] = _LOOKUPS[wl](self, snaps[i], xs[i])
 
         for shape, idxs in by_shape.items():
-            self.packed_launches += 1
+            self._m_launches.inc()
             if len(idxs) == 1:
                 i = idxs[0]
                 estimates[i] = self._pallas_batch(snaps[i], xs[i])
@@ -336,7 +395,7 @@ class QueryEngine:
             x_stack = np.zeros((len(idxs), n_max, shape[1]), np.float32)
             for t, i in enumerate(idxs):
                 x_stack[t, : xs[i].shape[0]] = xs[i]
-                self.packed_pad_slots += n_max - xs[i].shape[0]
+                self._m_pad.inc(n_max - xs[i].shape[0])
             out = np.asarray(quadform_packed(b_stack, x_stack, interpret=self.interpret))
             for t, i in enumerate(idxs):
                 estimates[i] = out[t, : xs[i].shape[0]]

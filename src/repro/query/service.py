@@ -34,6 +34,7 @@ from typing import Callable, NamedTuple
 
 import numpy as np
 
+from repro.obs import Observability, rehome_families
 from repro.query.engine import PackedRequest, QueryEngine
 
 __all__ = [
@@ -234,11 +235,25 @@ class PackedQueryService:
     the service counts it, nothing is silently dropped).
 
     ``clock`` is injectable so deadline behaviour is testable without
-    sleeping.  All public methods are thread-safe (one RLock around queue
-    state), so a ``ServicePump`` thread can drive ``poll()`` while the
-    ingest thread keeps submitting; a sweep holds the lock for its engine
-    round-trip, briefly blocking concurrent submits.
+    sleeping; it governs deadlines only — durations and metrics run off
+    ``obs.clock``.  All public methods are thread-safe (one RLock around
+    queue state), so a ``ServicePump`` thread can drive ``poll()`` while
+    the ingest thread keeps submitting; a sweep holds the lock for its
+    engine round-trip, briefly blocking concurrent submits.
     """
+
+    _FAMILIES = (
+        ("counter", "repro_service_queries_total", "Queries served by packed sweeps."),
+        ("counter", "repro_service_flushes_total", "Engine round-trips (packed dispatch sweeps)."),
+        ("counter", "repro_service_packed_tenants_total", "Tenant batches packed across all sweeps."),
+        ("counter", "repro_service_padded_total", "Zero-filled query slots added while packing."),
+        ("counter", "repro_service_deadline_flushes_total", "Sweeps forced by an expired deadline."),
+        ("counter", "repro_service_busy_seconds_total", "Wall time inside the engine hot path."),
+        ("counter", "repro_service_sheds_total", "Submits rejected by a tenant quota."),
+        ("counter", "repro_service_tenant_sheds_total", "Submits rejected by a tenant quota, per tenant."),
+        ("histogram", "repro_serve_latency_seconds", "Engine round-trip latency per packed sweep."),
+        ("histogram", "repro_service_poll_seconds", "Deadline-pump poll() latency."),
+    )
 
     def __init__(
         self,
@@ -248,6 +263,7 @@ class PackedQueryService:
         default_deadline_s: float = 0.02,
         auto_flush: bool = True,
         clock: Callable[[], float] = time.monotonic,
+        obs: Observability | None = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -258,20 +274,48 @@ class PackedQueryService:
         self.default_deadline_s = default_deadline_s
         self.auto_flush = auto_flush
         self.clock = clock
+        self.obs = obs if obs is not None else engine.obs
         self._lock = threading.RLock()
         # tenant -> [(x, ticket, abs_deadline), ...] in FIFO order.
         self._pending: dict[str, list[tuple[np.ndarray, QueryTicket, float]]] = {}
         self._n_pending = 0
         self._earliest_deadline = float("inf")
         self._quotas: dict[str, tuple[int, int]] = {}  # tenant -> (max_pending, priority)
-        self._queries = 0
-        self._flushes = 0
-        self._packed_tenants = 0
-        self._padded = 0
-        self._deadline_flushes = 0
-        self._busy_s = 0.0
-        self._shed = 0
-        self._shed_by_tenant: dict[str, int] = {}
+        self._bind_metrics()
+
+    def _bind_metrics(self) -> None:
+        handles = {}
+        for kind, name, help in self._FAMILIES:
+            if name == "repro_service_tenant_sheds_total":
+                continue
+            handles[name] = self.obs.handle(kind, name, help)
+        self._m_queries = handles["repro_service_queries_total"]
+        self._m_flushes = handles["repro_service_flushes_total"]
+        self._m_packed_tenants = handles["repro_service_packed_tenants_total"]
+        self._m_padded = handles["repro_service_padded_total"]
+        self._m_deadline_flushes = handles["repro_service_deadline_flushes_total"]
+        self._m_busy = handles["repro_service_busy_seconds_total"]
+        self._m_shed = handles["repro_service_sheds_total"]
+        self._m_serve_latency = handles["repro_serve_latency_seconds"]
+        self._m_poll = handles["repro_service_poll_seconds"]
+        # Per-tenant shed handles are label-dynamic; cache and re-fetch the
+        # known tenants so a re-home keeps shed_counts() intact.
+        tenants = tuple(getattr(self, "_m_tenant_sheds", ()))
+        self._m_tenant_sheds = {t: self._tenant_shed_handle(t) for t in tenants}
+
+    def _tenant_shed_handle(self, tenant: str):
+        return self.obs.handle(
+            "counter", "repro_service_tenant_sheds_total",
+            "Submits rejected by a tenant quota, per tenant.",
+            labels={"tenant": tenant},
+        )
+
+    def bind_obs(self, obs: Observability) -> None:
+        """Re-home this service's telemetry into another bundle."""
+        with self._lock:
+            old, self.obs = self.obs, obs
+            rehome_families(old, obs, self._FAMILIES)
+            self._bind_metrics()
 
     # -- admission control ---------------------------------------------------
 
@@ -300,9 +344,11 @@ class PackedQueryService:
             self._quotas.pop(tenant, None)
 
     def shed_counts(self) -> dict[str, int]:
-        """Per-tenant count of submits rejected by the quota."""
+        """Per-tenant count of submits rejected by the quota (fresh dict)."""
         with self._lock:
-            return dict(self._shed_by_tenant)
+            return {
+                t: int(h.value) for t, h in self._m_tenant_sheds.items() if h.value
+            }
 
     # -- submission ----------------------------------------------------------
 
@@ -325,8 +371,10 @@ class PackedQueryService:
             max_pending, _ = self._quotas.get(tenant, (0, 0))
             depth = len(self._pending.get(tenant, ()))
             if max_pending and depth >= max_pending:
-                self._shed += 1
-                self._shed_by_tenant[tenant] = self._shed_by_tenant.get(tenant, 0) + 1
+                self._m_shed.inc()
+                if tenant not in self._m_tenant_sheds:
+                    self._m_tenant_sheds[tenant] = self._tenant_shed_handle(tenant)
+                self._m_tenant_sheds[tenant].inc()
                 raise QueryShedError(tenant, depth, max_pending)
             ticket = QueryTicket(self)
             if deadline_s is None:
@@ -357,10 +405,13 @@ class PackedQueryService:
         again.
         """
         with self._lock:
+            t0 = self.obs.clock()
+            served = 0
             if self._n_pending and self.clock() >= self._earliest_deadline:
-                self._deadline_flushes += 1
-                return self._sweep()
-            return 0
+                self._m_deadline_flushes.inc()
+                served = self._sweep()
+            self._m_poll.observe(self.obs.clock() - t0)
+            return served
 
     def flush(self) -> int:
         """Drain everything pending in capped priority-ordered sweeps."""
@@ -389,14 +440,16 @@ class PackedQueryService:
             PackedRequest(tenant=tenant, x=np.stack([x for x, _, _ in entries]))
             for tenant, entries in take
         ]
-        t0 = time.perf_counter()
+        t0 = self.obs.clock()
         # Pending state is only consumed after the engine succeeds: a raising
         # pack (e.g. an unpublished tenant) leaves every ticket pending.
         pad0 = self.engine.packed_pad_slots
         results = self.engine.query_packed(requests)
-        self._busy_s += time.perf_counter() - t0
+        elapsed = self.obs.clock() - t0
+        self._m_busy.inc(elapsed)
+        self._m_serve_latency.observe(elapsed)
         # The engine pads per (l, d) shape group; read its exact count.
-        self._padded += self.engine.packed_pad_slots - pad0
+        self._m_padded.inc(self.engine.packed_pad_slots - pad0)
         served = 0
         for (tenant, entries), res in zip(take, results):
             rest = self._pending[tenant][len(entries):]
@@ -412,24 +465,26 @@ class PackedQueryService:
             (dl for entries in self._pending.values() for _, _, dl in entries),
             default=float("inf"),
         )
-        self._queries += served
-        self._flushes += 1
-        self._packed_tenants += len(take)
+        self._m_queries.inc(served)
+        self._m_flushes.inc()
+        self._m_packed_tenants.inc(len(take))
         return served
 
     def stats(self) -> PackedServiceStats:
-        """Lifetime service counters (see ``PackedServiceStats``)."""
+        """Lifetime service counters — a fresh view over the obs registry."""
         with self._lock:
-            qps = self._queries / self._busy_s if self._busy_s > 0 else 0.0
+            queries = int(self._m_queries.value)
+            busy_s = self._m_busy.value
+            qps = queries / busy_s if busy_s > 0 else 0.0
             return PackedServiceStats(
-                queries=self._queries,
-                flushes=self._flushes,
-                packed_tenants=self._packed_tenants,
-                padded=self._padded,
-                deadline_flushes=self._deadline_flushes,
-                busy_s=self._busy_s,
+                queries=queries,
+                flushes=int(self._m_flushes.value),
+                packed_tenants=int(self._m_packed_tenants.value),
+                padded=int(self._m_padded.value),
+                deadline_flushes=int(self._m_deadline_flushes.value),
+                busy_s=busy_s,
                 queries_per_sec=qps,
-                shed=self._shed,
+                shed=int(self._m_shed.value),
             )
 
 

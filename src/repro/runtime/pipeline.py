@@ -50,12 +50,12 @@ restarted coordinator resumes ingest mid-stream and answers identically
 """
 from __future__ import annotations
 
-import time
 from typing import Iterable, NamedTuple
 
 import jax
 import numpy as np
 
+from repro.obs import Observability, rehome_families
 from repro.query import QueryEngine, SketchStore
 from repro.query.service import PackedQueryService, QueryTicket, ServicePump
 from repro.runtime.policies import (
@@ -282,7 +282,7 @@ class _LeverageAdapter(_RegistryAdapter):
 
 class _Tenant:
     __slots__ = ("adapter", "policy", "quota", "steps", "steps_since_publish",
-                 "publishes", "published_frob", "latest_version")
+                 "publishes", "published_frob", "latest_version", "metrics")
 
     def __init__(self, adapter, policy: PublishPolicy, quota: TenantQuota | None):
         self.adapter = adapter
@@ -293,10 +293,53 @@ class _Tenant:
         self.publishes = 0
         self.published_frob: float | None = None
         self.latest_version: int | None = None
+        # Per-tenant gauge handles (f_hat / version / lag), cached here so
+        # the hot ingest path never re-resolves labeled series.
+        self.metrics: dict = {}
 
 
 class StreamingPipeline:
     """Owns trackers, store, engine, and packed service for many tenants."""
+
+    # Ingest-side counters (see stats() with no tenant): every one is
+    # lifetime-cumulative; ingest_s is wall time inside protocol steps
+    # (packed launches + serial steps), excluding publishes and query
+    # pumping.  Stored as ``repro_ingest_<key>_total`` counters in the
+    # obs registry (ingest_s as ``repro_ingest_seconds_total``).
+    _INGEST_KEYS = (
+        ("rows", "Real stream rows / weighted items absorbed."),
+        ("batches", "Ingest batches absorbed (serial + packed slices)."),
+        ("waves", "ingest_many waves driven."),
+        ("packed_launches", "Stacked super-step launches."),
+        ("packed_tenants", "Tenant-batches that rode a packed launch."),
+        ("packed_rows", "Real rows absorbed via packed launches."),
+        ("pad_rows", "Zero-filled slots added while packing."),
+        ("serial_steps", "Per-tenant serial protocol steps."),
+        ("retraces", "Packed launch shapes compiled (XLA traces)."),
+        # restacks: packed launches that could not reuse a resident stacked
+        # state (first wave of a group, or a member stepped / restored
+        # out-of-band since the last wave).
+        ("restacks", "Packed launches that had to restack member states."),
+        ("ingest_s", "Wall time inside protocol steps."),
+    )
+
+    _FAMILIES = tuple(
+        ("counter",
+         f"repro_ingest_{'seconds' if k == 'ingest_s' else k}_total", h)
+        for k, h in _INGEST_KEYS
+    ) + (
+        ("counter", "repro_publish_total", "Snapshots published to the store."),
+        ("counter", "repro_publish_seconds_total", "Wall time spent publishing."),
+        ("histogram", "repro_publish_latency_seconds", "Publish latency per snapshot."),
+        ("gauge", "repro_tenant_f_hat", "Published Frobenius mass per tenant."),
+        ("gauge", "repro_tenant_version", "Latest published store version per tenant."),
+        ("gauge", "repro_tenant_publish_lag_steps", "Ingest steps since the tenant last published."),
+        ("gauge", "repro_comm_scalar_msgs", "Protocol communication accounting (paper units)."),
+        ("gauge", "repro_comm_row_msgs", "Protocol communication accounting (paper units)."),
+        ("gauge", "repro_comm_broadcast_events", "Protocol communication accounting (paper units)."),
+        ("gauge", "repro_comm_m", "Protocol communication accounting (paper units)."),
+        ("gauge", "repro_comm_total", "Protocol communication accounting (paper units)."),
+    )
 
     def __init__(
         self,
@@ -312,6 +355,7 @@ class StreamingPipeline:
         max_batch: int = 1024,
         default_deadline_s: float = 0.02,
         pump_interval_s: float | None = None,
+        obs: Observability | None = None,
     ):
         self.mesh = mesh
         self.axis = axis
@@ -319,37 +363,68 @@ class StreamingPipeline:
         self.default_protocol = protocol
         self.default_policy = policy if policy is not None else EveryKSteps(1)
         self.store = store if store is not None else SketchStore(retain=retain)
-        self.engine = QueryEngine(self.store, interpret=interpret)
+        self.obs = obs if obs is not None else Observability()
+        self.engine = QueryEngine(self.store, interpret=interpret, obs=self.obs)
         self.service = PackedQueryService(
-            self.engine, max_batch=max_batch, default_deadline_s=default_deadline_s
+            self.engine, max_batch=max_batch, default_deadline_s=default_deadline_s,
+            obs=self.obs,
         )
         self._tenants: dict[str, _Tenant] = {}
-        self._publish_s = 0.0
-        # Ingest-side observability (see stats() with no tenant): every
-        # counter is lifetime-cumulative; ingest_s is wall time inside
-        # protocol steps (packed launches + serial steps), excluding
-        # publishes and query pumping.
-        self._ingest = {
-            "rows": 0,  # real stream rows / weighted items absorbed
-            "batches": 0,  # ingest batches absorbed (serial + packed slices)
-            "waves": 0,  # ingest_many waves driven
-            "packed_launches": 0,  # stacked super-step launches
-            "packed_tenants": 0,  # tenant-batches that rode a packed launch
-            "packed_rows": 0,  # real rows absorbed via packed launches
-            "pad_rows": 0,  # zero-filled slots added while packing
-            "serial_steps": 0,  # per-tenant serial protocol steps
-            "retraces": 0,  # packed launch shapes compiled (XLA traces)
-            "restacks": 0,  # packed launches that could not reuse a resident
-            # stacked state (first wave of a group, or a member stepped /
-            # restored out-of-band since the last wave)
-            "ingest_s": 0.0,
-        }
+        self._bind_metrics()
         # Deadline executor: None means cooperative pumping (every ingest
         # calls service.poll()); an interval starts a ServicePump thread
         # the pipeline owns, and ingest stops pumping cooperatively.
         self.pump: ServicePump | None = None
         if pump_interval_s is not None:
             self.start_pump(pump_interval_s)
+
+    # -- telemetry binding ----------------------------------------------------
+
+    def _bind_metrics(self) -> None:
+        self._m_ingest = {
+            k: self.obs.handle(
+                "counter",
+                f"repro_ingest_{'seconds' if k == 'ingest_s' else k}_total", h,
+            )
+            for k, h in self._INGEST_KEYS
+        }
+        self._m_publish = self.obs.handle(
+            "counter", "repro_publish_total", "Snapshots published to the store.")
+        self._m_publish_s = self.obs.handle(
+            "counter", "repro_publish_seconds_total", "Wall time spent publishing.")
+        self._m_publish_latency = self.obs.handle(
+            "histogram", "repro_publish_latency_seconds",
+            "Publish latency per snapshot.")
+        for name, t in self._tenants.items():
+            t.metrics = self._tenant_gauges(name)
+
+    def _tenant_gauges(self, tenant: str) -> dict:
+        labels = {"tenant": tenant}
+        return {
+            "f_hat": self.obs.handle(
+                "gauge", "repro_tenant_f_hat",
+                "Published Frobenius mass per tenant.", labels=labels),
+            "version": self.obs.handle(
+                "gauge", "repro_tenant_version",
+                "Latest published store version per tenant.", labels=labels),
+            "lag": self.obs.handle(
+                "gauge", "repro_tenant_publish_lag_steps",
+                "Ingest steps since the tenant last published.", labels=labels),
+        }
+
+    def bind_obs(self, obs: Observability) -> None:
+        """Re-home the whole serving stack's telemetry into ``obs``.
+
+        Carries pipeline, engine, and service families (values merged, old
+        series dropped on a same-registry relabel) and re-fetches every
+        cached handle — including the per-tenant gauges — under the new
+        bundle's base labels.
+        """
+        old, self.obs = self.obs, obs
+        rehome_families(old, obs, self._FAMILIES)
+        self._bind_metrics()
+        self.engine.bind_obs(obs)
+        self.service.bind_obs(obs)
 
     # -- deadline executor lifecycle ------------------------------------------
 
@@ -383,7 +458,9 @@ class StreamingPipeline:
     # -- tenant lifecycle ----------------------------------------------------
 
     def _register(self, tenant: str, adapter, policy, quota) -> None:
-        self._tenants[tenant] = _Tenant(adapter, policy or self.default_policy, quota)
+        t = _Tenant(adapter, policy or self.default_policy, quota)
+        t.metrics = self._tenant_gauges(tenant)
+        self._tenants[tenant] = t
         if quota is not None:
             self.service.set_quota(
                 tenant, max_pending=quota.max_pending, priority=quota.priority
@@ -806,13 +883,14 @@ class StreamingPipeline:
         (deadline enforcement must never fail silently).
         """
         t = self._tenant(tenant)
-        t0 = time.perf_counter()
-        t.adapter.ingest(rows)
-        self._ingest["ingest_s"] += time.perf_counter() - t0
-        self._ingest["serial_steps"] += 1
-        self._ingest["batches"] += 1
-        self._ingest["rows"] += self._batch_len(rows)
-        snap = self._post_ingest(tenant, t)
+        with self.obs.trace("pipeline.ingest", tenant=tenant):
+            t0 = self.obs.clock()
+            t.adapter.ingest(rows)
+            self._m_ingest["ingest_s"].inc(self.obs.clock() - t0)
+            self._m_ingest["serial_steps"].inc()
+            self._m_ingest["batches"].inc()
+            self._m_ingest["rows"].inc(self._batch_len(rows))
+            snap = self._post_ingest(tenant, t)
         self._pump_or_poll()
         return snap
 
@@ -829,6 +907,7 @@ class StreamingPipeline:
         fires.  Returns the new snapshot or None."""
         t.steps += 1
         t.steps_since_publish += 1
+        t.metrics["lag"].set(t.steps_since_publish)
         # Only pay for the mass estimate when the policy reads it (for
         # matrix P3 it materializes the whole estimator matrix).
         live = t.adapter.live_mass() if t.policy.needs_live_frob else 0.0
@@ -906,7 +985,8 @@ class StreamingPipeline:
             pack_target,
         )
 
-        self._ingest["waves"] += 1
+        m = self._m_ingest
+        m["waves"].inc()
         groups: dict = {}
         serial: list = []
         for name, rows in wave:
@@ -918,35 +998,36 @@ class StreamingPipeline:
             else:
                 serial.append((name, t, rows))
         snaps: list = []
-        t0 = time.perf_counter()
-        for members in groups.values():
-            if len(members) < 2:  # a pack of one gains nothing
-                serial.extend(members)
-                continue
-            stats = ingest_packed(
-                [(pack_target(t.adapter), rows) for _, t, rows in members]
-            )
-            self._ingest["packed_launches"] += 1
-            self._ingest["packed_tenants"] += stats["tenants"]
-            self._ingest["packed_rows"] += stats["rows"]
-            self._ingest["rows"] += stats["rows"]
-            self._ingest["batches"] += stats["tenants"]
-            self._ingest["pad_rows"] += stats["pad_rows"]
-            self._ingest["retraces"] += bool(stats["new_shape"])
-            self._ingest["restacks"] += bool(stats["restacked"])
-            for name, t, _ in members:
+        with self.obs.trace("pipeline.ingest_wave", tenants=len(wave)):
+            t0 = self.obs.clock()
+            for members in groups.values():
+                if len(members) < 2:  # a pack of one gains nothing
+                    serial.extend(members)
+                    continue
+                stats = ingest_packed(
+                    [(pack_target(t.adapter), rows) for _, t, rows in members]
+                )
+                m["packed_launches"].inc()
+                m["packed_tenants"].inc(stats["tenants"])
+                m["packed_rows"].inc(stats["rows"])
+                m["rows"].inc(stats["rows"])
+                m["batches"].inc(stats["tenants"])
+                m["pad_rows"].inc(stats["pad_rows"])
+                m["retraces"].inc(bool(stats["new_shape"]))
+                m["restacks"].inc(bool(stats["restacked"]))
+                for name, t, _ in members:
+                    snaps.append(self._post_ingest(name, t))
+            for name, t, rows in serial:
+                t.adapter.ingest(rows)
+                m["serial_steps"].inc()
+                m["batches"].inc()
+                m["rows"].inc(self._batch_len(rows))
                 snaps.append(self._post_ingest(name, t))
-        for name, t, rows in serial:
-            t.adapter.ingest(rows)
-            self._ingest["serial_steps"] += 1
-            self._ingest["batches"] += 1
-            self._ingest["rows"] += self._batch_len(rows)
-            snaps.append(self._post_ingest(name, t))
-        self._ingest["ingest_s"] += time.perf_counter() - t0
-        fresh = [s for s in snaps if s is not None]
-        if fresh:
-            # One stacked eigh warms every same-shape matrix publish.
-            self.engine.refresh_spectra(fresh)
+            m["ingest_s"].inc(self.obs.clock() - t0)
+            fresh = [s for s in snaps if s is not None]
+            if fresh:
+                # One stacked eigh warms every same-shape matrix publish.
+                self.engine.refresh_spectra(fresh)
         self._pump_or_poll()
         return len(fresh)
 
@@ -955,13 +1036,23 @@ class StreamingPipeline:
         return self._publish(tenant, self._tenant(tenant))
 
     def _publish(self, tenant: str, t: _Tenant):
-        t0 = time.perf_counter()
-        snap = t.adapter.publish(self.store, tenant, meta={"step": t.steps})
-        self._publish_s += time.perf_counter() - t0
+        with self.obs.trace("pipeline.publish", tenant=tenant):
+            t0 = self.obs.clock()
+            snap = t.adapter.publish(self.store, tenant, meta={"step": t.steps})
+            elapsed = self.obs.clock() - t0
+        self._m_publish.inc()
+        self._m_publish_s.inc(elapsed)
+        self._m_publish_latency.observe(elapsed)
         t.steps_since_publish = 0
         t.publishes += 1
         t.published_frob = snap.frob
         t.latest_version = snap.version
+        t.metrics["f_hat"].set(snap.frob)
+        t.metrics["version"].set(snap.version)
+        t.metrics["lag"].set(0)
+        t.adapter.comm_report().emit(
+            self.obs.registry, **{**self.obs.labels, "tenant": tenant}
+        )
         return snap
 
     # -- serve ---------------------------------------------------------------
@@ -1204,7 +1295,7 @@ class StreamingPipeline:
 
     def publish_latency_s(self) -> float:
         """Total wall time spent publishing (store copies + host sync)."""
-        return self._publish_s
+        return self._m_publish_s.value
 
     def stats(self, tenant: str | None = None):
         """Lifetime counters: one tenant's ``TenantStats``, or — with no
@@ -1224,7 +1315,12 @@ class StreamingPipeline:
         per cell.
         """
         if tenant is None:
-            c = dict(self._ingest)
+            # A fresh view over the obs registry, shaped exactly like the
+            # pre-registry counter dict (ints stay ints).
+            c = {
+                k: (h.value if k == "ingest_s" else int(h.value))
+                for k, h in self._m_ingest.items()
+            }
             c["rows_per_sec"] = (
                 c["rows"] / c["ingest_s"] if c["ingest_s"] > 0 else 0.0
             )

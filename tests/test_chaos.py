@@ -559,3 +559,86 @@ def test_scale_races_parallel_ingest_without_loss_or_double_apply(mesh):
         assert st.rows == waves * rows_per, t
         assert st.latest_version == waves, t
     router.close()
+
+
+# ---------------------------------------------------------------------------
+# Trace integrity + telemetry determinism under seeded faults
+# ---------------------------------------------------------------------------
+
+
+def test_trace_ids_survive_retries_duplicates_and_replay(mesh):
+    """Every delivery of an ingest — retry, duplicate, or post-outage
+    replay — carries the trace id minted when the batch entered the
+    router, so one batch's journey is one trace no matter how the
+    transport mangled it."""
+    router, transport = _router(mesh, 1, plan=tp.FaultPlan(drop={1}, duplicate={2}))
+    router.add_tenant("t", D, eps=0.2, policy=EveryKSteps(1))
+    rows = np.ones((4, D), np.float32)
+    router.ingest("t", rows)  # message 0: clean
+    router.ingest("t", rows)  # index 1 dropped -> retried at 2, duplicated
+
+    tracer = router.obs.tracer
+    ingests = tracer.finished(name="router.ingest")
+    assert len(ingests) == 2
+    tid = ingests[1].trace_id
+    # Dropped attempt never reached the cell; the retry delivered twice
+    # (primary + duplicate) — both deliveries join the ORIGINAL trace.
+    assert len(tracer.finished(trace_id=tid, name="transport.send")) == 2
+    assert len(tracer.finished(trace_id=tid, name="cell.deliver")) == 2
+    (msg,) = tracer.finished(trace_id=tid, name="transport.message")
+    assert [e.name for e in msg.events] == ["retry"]
+    assert msg.events[0].attrs["error"] == "TransportTimeout"
+
+    # Crash, park, revive, replay: the drained envelope still carries
+    # the trace id of the ingest call that parked it.
+    transport.crash("cell-0")
+    assert router.ingest("t", rows) is None  # parked for replay
+    parked_tid = tracer.finished(name="router.ingest")[-1].trace_id
+    assert not tracer.finished(trace_id=parked_tid, name="cell.deliver")
+    transport.revive("cell-0", router.cell("cell-0").deliver)
+    assert router.heartbeat_all() == {"cell-0": "ok"}
+    late = tracer.finished(trace_id=parked_tid, name="cell.deliver")
+    assert len(late) == 1  # the replay joined its original trace
+
+    # Global reconciliation: one transport.send span per attempt, exactly.
+    res = router.stats()["_resilience"]
+    assert res["attempts"] == len(tracer.finished(name="transport.send"))
+    assert res["attempts"] == transport.sends
+    router.close()
+
+
+class _TickClock:
+    """Deterministic monotonic clock: each call advances 1ms."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 0.001
+        return self.t
+
+
+def _chaos_run_snapshot(mesh, n_messages=80):
+    plan = tp.FaultPlan.seeded(5, n_messages, p_drop=0.2, p_duplicate=0.1, p_delay=0.1)
+    router, transport = _router(mesh, 2, plan=plan, clock=_TickClock())
+    _register(router)
+    for tenant, rows in _script(4):
+        router.ingest(tenant, rows)
+    while transport.sends < n_messages:
+        router.heartbeat_all()
+    _settle(router, transport, past=n_messages)
+    router.query_batch(_queries())
+    snap = router.obs.registry.to_json()
+    router.close()
+    return snap
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_metrics_snapshot_is_deterministic_under_seeded_schedule(mesh):
+    """Two runs of the same seeded fault schedule under an injected
+    clock serialize byte-identical registries — every counter, label
+    series, histogram bucket, and timing sum included."""
+    first = _chaos_run_snapshot(mesh)
+    second = _chaos_run_snapshot(mesh)
+    assert first == second

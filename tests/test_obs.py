@@ -1,0 +1,502 @@
+"""Unified telemetry layer: metrics registry, tracing, and the views.
+
+Three layers pinned here:
+
+  * ``repro.obs`` primitives — counter/gauge/histogram families with
+    label series, deterministic snapshot/Prometheus/JSON exporters that
+    round-trip exactly, span tracing with explicit trace-id joins.
+  * golden views — the pre-existing ``stats()`` / ``cache_stats()`` /
+    ``report()`` surfaces are reimplemented as *views* over the one
+    registry; these tests assert the dicts and the scrape surface agree
+    value for value, so neither can drift from the other.
+  * end-to-end trace anatomy — one ``query_batch`` on a two-cell
+    transported router yields a single trace tree
+    (router → transport.message → transport.send → cell.deliver →
+    engine.query_packed) with a positive duration on every stage.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterRouter, PipelineCell
+from repro.cluster import transport as tp
+from repro.obs import (
+    DEFAULT_BUCKETS,
+    MetricsRegistry,
+    Observability,
+    Tracer,
+    histogram_quantile,
+    rehome_families,
+)
+from repro.query.engine import QueryEngine
+from repro.query.store import SketchStore
+from repro.runtime import EveryKSteps, StreamingPipeline
+from repro.runtime.policies import RetryPolicy
+
+D = 8
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+class FakeClock:
+    """Deterministic monotonic clock: each call advances 1ms."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 0.001
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# metrics primitives
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("c_total", "a counter")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+    g = reg.gauge("g", "a gauge")
+    g.set(4)
+    g.inc(-1.5)
+    assert g.value == 2.5
+
+    h = reg.histogram("h_seconds", "a histogram", buckets=(0.1, 1.0)).labels()
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    assert h.count == 3 and h.sum == pytest.approx(5.55)
+    assert h.buckets() == [(0.1, 1), (1.0, 2), (float("inf"), 3)]
+
+
+def test_labeled_series_are_independent_and_sorted():
+    reg = MetricsRegistry()
+    fam = reg.counter("ops_total", "ops", labels=("cell", "op"))
+    fam.labels(cell="a", op="hit").inc(2)
+    fam.labels(op="miss", cell="a").inc()  # kwarg order is irrelevant
+    fam.labels(cell="b", op="hit").inc()
+    assert fam.labels(cell="a", op="hit").value == 2
+    series = fam.series()
+    assert [lbl for lbl, _ in series] == [
+        {"cell": "a", "op": "hit"},
+        {"cell": "a", "op": "miss"},
+        {"cell": "b", "op": "hit"},
+    ]
+    with pytest.raises(ValueError):
+        fam.labels(cell="a")  # missing a declared label
+
+
+def test_family_reregistration_conflicts():
+    reg = MetricsRegistry()
+    reg.counter("x_total", "first help")
+    # Same kind + label schema: returns the same family; help may differ.
+    assert reg.counter("x_total", "other help") is reg.get("x_total")
+    with pytest.raises(ValueError):
+        reg.gauge("x_total", "kind mismatch")
+    with pytest.raises(ValueError):
+        reg.counter("x_total", "label mismatch", labels=("cell",))
+
+
+def test_histogram_quantile_interpolates():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", "latency", buckets=(0.1, 0.2, 0.4)).labels()
+    for v in [0.05] * 10 + [0.15] * 10:
+        h.observe(v)
+    assert histogram_quantile(h.buckets(), 0.25) == pytest.approx(0.05)
+    q75 = histogram_quantile(h.buckets(), 0.75)
+    assert 0.1 < q75 <= 0.2
+
+
+def test_drop_series_is_scoped_to_the_label_assignment():
+    reg = MetricsRegistry()
+    fam = reg.counter("y_total", "y", labels=("cell", "tenant"))
+    fam.labels(cell="a", tenant="t0").inc()
+    fam.labels(cell="a", tenant="t1").inc()
+    fam.labels(cell="b", tenant="t0").inc()
+    unlabeled = reg.counter("z_total", "no cell label")
+    unlabeled.inc()
+    assert reg.drop_series(cell="a") == 2
+    assert [lbl for lbl, _ in fam.series()] == [{"cell": "b", "tenant": "t0"}]
+    assert unlabeled.value == 1  # families lacking the label are untouched
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+
+def _populated_registry():
+    clock = FakeClock()
+    reg = MetricsRegistry(clock=clock)
+    c = reg.counter("repro_ops_total", "ops", labels=("cell",))
+    c.labels(cell="a").inc(3)
+    c.labels(cell="b").inc(1.5)
+    reg.gauge("repro_depth", "queue depth").set(7)
+    h = reg.histogram("repro_lat_seconds", "latency", buckets=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.05, 0.5, 5.0):
+        h.observe(v)
+    return reg
+
+
+def test_snapshot_round_trips_byte_identically():
+    reg = _populated_registry()
+    text = reg.to_json()
+    rebuilt = MetricsRegistry.from_json(text)
+    assert rebuilt.to_json() == text
+    assert rebuilt.snapshot() == reg.snapshot()
+
+
+def test_prometheus_round_trips_through_the_json_exporter():
+    reg = _populated_registry()
+    prom = reg.to_prometheus()
+    rebuilt = MetricsRegistry.from_snapshot(reg.snapshot())
+    assert rebuilt.to_prometheus() == prom
+    # Spot-check the exposition shape itself.
+    assert "# TYPE repro_ops_total counter" in prom
+    assert 'repro_ops_total{cell="a"} 3' in prom
+    assert 'repro_lat_seconds_bucket{le="+Inf"} 4' in prom
+    assert "repro_lat_seconds_count 4" in prom
+    # Custom buckets survive the snapshot (not silently reset to default).
+    assert rebuilt.get("repro_lat_seconds")._buckets == (0.01, 0.1, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# tracing
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_nests_and_builds_one_tree():
+    tr = Tracer(clock=FakeClock())
+    with tr.trace("root", kind="q") as root:
+        with tr.trace("child"):
+            with tr.trace("leaf"):
+                pass
+        root.event("note", detail=1)
+    (tree,) = tr.tree(root.trace_id)
+    names = [n.span.name for n in tree.walk()]
+    assert names == ["root", "child", "leaf"]
+    assert all(n.span.duration_s > 0 for n in tree.walk())
+    assert tree.span.events[0].name == "note"
+    assert tr.current() is None  # stack fully unwound
+
+
+def test_explicit_trace_id_joins_or_detaches():
+    tr = Tracer(clock=FakeClock())
+    with tr.trace("origin") as origin:
+        with tr.trace("joined", trace_id=origin.trace_id) as joined:
+            assert joined.parent_id == origin.span_id
+    # Same explicit id with no live parent: a detached root of that trace
+    # (the late-delivery / replay case).
+    with tr.trace("late", trace_id=origin.trace_id) as late:
+        assert late.parent_id is None and late.trace_id == origin.trace_id
+    roots = tr.tree(origin.trace_id)
+    assert [r.span.name for r in roots] == ["origin", "late"]
+
+
+def test_trace_ids_are_deterministic_counters():
+    tr = Tracer(clock=FakeClock())
+    with tr.trace("a") as a:
+        pass
+    with tr.trace("b") as b:
+        pass
+    assert (a.trace_id, b.trace_id) == ("t000001", "t000002")
+    assert a.span_id == "s000001"
+
+
+# ---------------------------------------------------------------------------
+# Observability bundle + rehoming
+# ---------------------------------------------------------------------------
+
+
+def test_scoped_bundles_share_registry_and_stamp_labels():
+    obs = Observability(labels={})
+    scoped = obs.scoped(cell="c0")
+    assert scoped.registry is obs.registry and scoped.tracer is obs.tracer
+    scoped.handle("counter", "s_total", "scoped", labels={"op": "x"}).inc()
+    fam = obs.registry.get("s_total")
+    assert fam.labels(cell="c0", op="x").value == 1
+
+
+def test_rehome_families_carries_values_and_drops_stale_series():
+    old = Observability(labels={"cell": "-"})
+    fams = (("counter", "m_total", "m"), ("gauge", "g", "g"))
+    old.handle("counter", "m_total", "m").inc(5)
+    old.handle("gauge", "g", "g").set(2)
+
+    # Cross-registry move: values land under the new base labels.
+    new = Observability(labels={"cell": "c1"})
+    rehome_families(old, new, fams)
+    assert new.registry.get("m_total").labels(cell="c1").value == 5
+
+    # Same-registry relabel: the old series must not linger.
+    relabeled = new.scoped(cell="c2")
+    rehome_families(new, relabeled, fams)
+    fam = new.registry.get("m_total")
+    assert [lbl for lbl, _ in fam.series()] == [{"cell": "c2"}]
+    assert fam.labels(cell="c2").value == 5
+
+
+# ---------------------------------------------------------------------------
+# golden views: stats()/cache_stats() are registry views
+# ---------------------------------------------------------------------------
+
+
+def _store_with_versions(n=3):
+    rng = np.random.default_rng(0)
+    store = SketchStore()
+    for _ in range(n):
+        m = rng.normal(size=(4, D)).astype(np.float32)
+        store.publish(
+            "t", m, frob=float(np.sum(m.astype(np.float64) ** 2)), eps=0.5
+        )
+    return store
+
+
+def test_cache_stats_cold_cache_hit_rate_is_zero():
+    engine = QueryEngine(SketchStore())
+    stats = engine.cache_stats()
+    assert stats["hit_rate"] == 0.0  # defined, not NaN/ZeroDivisionError
+    assert stats["hits"] == stats["misses"] == stats["evictions"] == 0
+
+
+def test_cache_stats_returns_defensive_copies():
+    engine = QueryEngine(_store_with_versions())
+    x = np.random.default_rng(1).normal(size=(2, D)).astype(np.float32)
+    engine.query_batch(x, tenant="t", path="cached")
+    first = engine.cache_stats()
+    first["hits"] = 10**6
+    first["hit_rate"] = -1.0
+    assert engine.cache_stats()["hits"] != 10**6
+    assert engine.cache_stats()["hit_rate"] >= 0.0
+
+
+def test_cache_stats_agrees_with_registry(mesh):
+    engine = QueryEngine(_store_with_versions())
+    x = np.random.default_rng(1).normal(size=(2, D)).astype(np.float32)
+    engine.query_batch(x, tenant="t", path="cached")
+    engine.query_batch(x, tenant="t", path="cached")
+    stats = engine.cache_stats()
+    fam = engine.obs.registry.get("repro_engine_cache_ops_total")
+
+    def total(op):
+        return sum(
+            s.value for lbl, s in fam.series() if lbl["op"] == op
+        )
+
+    assert stats["hits"] == total("hits") > 0
+    assert stats["misses"] == total("misses") > 0
+    assert stats["hit_rate"] == stats["hits"] / (stats["hits"] + stats["misses"])
+
+
+def _drive_pipeline(mesh, n_batches=4):
+    pipe = StreamingPipeline(mesh, eps=0.2, policy=EveryKSteps(1))
+    pipe.add_tenant("t0", D, eps=0.2, policy=EveryKSteps(1))
+    pipe.add_tenant("t1", D, eps=0.2, policy=EveryKSteps(1))
+    rng = np.random.default_rng(3)
+    for _ in range(n_batches):
+        for t in ("t0", "t1"):
+            pipe.ingest(t, rng.normal(size=(16, D)).astype(np.float32))
+    return pipe
+
+
+def test_pipeline_stats_is_a_registry_view(mesh):
+    pipe = _drive_pipeline(mesh)
+    stats = pipe.stats()
+    reg = pipe.obs.registry
+
+    def val(name):
+        return reg.get(name).labels(cell="-").value
+
+    assert stats["rows"] == int(val("repro_ingest_rows_total")) == 8 * 16
+    assert stats["batches"] == int(val("repro_ingest_batches_total")) == 8
+    assert stats["ingest_s"] == pytest.approx(val("repro_ingest_seconds_total"))
+    assert pipe.publish_latency_s() == pytest.approx(
+        val("repro_publish_seconds_total")
+    )
+    assert int(val("repro_publish_total")) == 8  # EveryKSteps(1): one per batch
+    # Tenant gauges track the published state.
+    ver = reg.get("repro_tenant_version")
+    assert int(ver.labels(cell="-", tenant="t0").value) == pipe.stats(
+        "t0"
+    ).latest_version
+
+
+def test_comm_report_publishes_gauges(mesh):
+    # EveryKSteps(1) publishes on every batch, so the comm gauges written
+    # at publish time match the tenant's live comm report exactly.
+    pipe = _drive_pipeline(mesh, n_batches=2)
+    fam = pipe.obs.registry.get("repro_comm_total")
+    assert fam.labels(cell="-", tenant="t0").value == pipe.stats("t0").comm_total
+
+
+def test_service_stats_is_a_registry_view(mesh):
+    pipe = _drive_pipeline(mesh)
+    x = np.random.default_rng(5).normal(size=(D,)).astype(np.float32)
+    pipe.submit("t0", x)
+    pipe.submit("t1", x)
+    pipe.flush()
+    stats = pipe.service.stats()
+    reg = pipe.obs.registry
+
+    def val(name):
+        return reg.get(name).labels(cell="-").value
+
+    assert stats.queries == int(val("repro_service_queries_total")) == 2
+    assert stats.flushes == int(val("repro_service_flushes_total")) >= 1
+    lat = reg.get("repro_serve_latency_seconds").labels(cell="-")
+    assert lat.count == stats.flushes
+
+
+# ---------------------------------------------------------------------------
+# end-to-end trace anatomy + cluster registry
+# ---------------------------------------------------------------------------
+
+
+def _two_cell_router(mesh, clock=None):
+    cells = [
+        PipelineCell(f"cell-{i}", mesh, eps=0.2, policy=EveryKSteps(1))
+        for i in range(2)
+    ]
+    transport = tp.Transport()
+    router = ClusterRouter(
+        cells,
+        transport=transport,
+        retry=RetryPolicy(max_attempts=3, base_s=0.0, cap_s=0.0),
+        sleep=lambda s: None,
+        clock=clock,
+    )
+    # t0 -> cell-0, t1..t3 -> cell-1 under the default ring (pinned by
+    # the placement assert so a hash change fails loudly, not subtly).
+    for i in range(4):
+        router.add_tenant(f"t{i}", D, eps=0.2, policy=EveryKSteps(1))
+    assert len(set(router.placement().values())) == 2
+    return router
+
+
+def test_query_batch_traces_as_one_tree_across_cells(mesh):
+    router = _two_cell_router(mesh)
+    rng = np.random.default_rng(11)
+    for i in range(4):
+        router.ingest(f"t{i}", rng.normal(size=(16, D)).astype(np.float32))
+    res = router.query_batch(
+        [(f"t{i}", rng.normal(size=(3, D)).astype(np.float32)) for i in range(4)]
+    )
+    assert all(r is not None for r in res)
+
+    (root_span,) = router.obs.tracer.finished(name="router.query_batch")
+    (tree,) = router.obs.tracer.tree(root_span.trace_id)  # ONE tree
+    names = [n.span.name for n in tree.walk()]
+    # Two cells -> two transport.message fan-out arms under one root.
+    assert names == [
+        "router.query_batch",
+        "transport.message", "transport.send", "cell.deliver",
+        "engine.query_packed",
+        "transport.message", "transport.send", "cell.deliver",
+        "engine.query_packed",
+    ]
+    assert all(n.span.duration_s > 0 for n in tree.walk())
+    cells_hit = {
+        n.span.attrs["cell"] for n in tree.walk()
+        if n.span.name == "transport.message"
+    }
+    assert cells_hit == {"cell-0", "cell-1"}
+
+
+def test_cluster_scrapes_as_one_registry(mesh):
+    router = _two_cell_router(mesh)
+    rng = np.random.default_rng(11)
+    for i in range(4):
+        router.ingest(f"t{i}", rng.normal(size=(16, D)).astype(np.float32))
+    router.query_batch([("t0", rng.normal(size=(3, D)).astype(np.float32))])
+
+    reg = router.obs.registry
+    for cell in ("cell-0", "cell-1"):
+        assert reg.get("repro_ingest_rows_total").labels(cell=cell).value > 0
+    assert reg.get("repro_transport_sends_total").value == router.stats()[
+        "_resilience"
+    ]["transport"]["sends"]
+    prom = reg.to_prometheus()
+    assert 'repro_ingest_rows_total{cell="cell-0"}' in prom
+    assert "repro_router_messages_total" in prom
+    # The exported surface round-trips and reconciles with stats().
+    rebuilt = MetricsRegistry.from_json(reg.to_json())
+    assert rebuilt.to_prometheus() == prom
+    res = router.stats()["_resilience"]
+    assert res["attempts"] == int(
+        rebuilt.get("repro_router_attempts_total").value
+    )
+
+
+def test_router_stats_golden_view_reconciles(mesh):
+    router = _two_cell_router(mesh)
+    rng = np.random.default_rng(11)
+    for i in range(4):
+        router.ingest(f"t{i}", rng.normal(size=(16, D)).astype(np.float32))
+    stats = router.stats()
+    res = stats["_resilience"]
+    # Per-message accounting: no retries -> attempts == messages == sends.
+    assert res["attempts"] == res["messages"] + res["retries"]
+    assert res["transport"]["sends"] == res["attempts"]
+    assert router.shed_counts() == {"cell-0": 0, "cell-1": 0}
+    for cell in ("cell-0", "cell-1"):
+        assert stats[cell]["shed"] == 0
+        assert stats[cell]["ingest"]["rows"] > 0
+
+
+# ---------------------------------------------------------------------------
+# unified comm reports (core/comm.py)
+# ---------------------------------------------------------------------------
+
+
+def test_build_report_coerces_and_totals():
+    import numpy as _np
+
+    from repro.core.comm import build_report
+
+    rep = build_report(
+        scalar_msgs=_np.int32(3), row_msgs=_np.int64(5),
+        broadcast_events=2.0, m=4,
+    )
+    assert all(
+        isinstance(v, int) for v in (rep.scalar_msgs, rep.row_msgs,
+                                     rep.broadcast_events, rep.m)
+    )
+    assert rep.total == 3 + 5 + 2 * 4
+    assert rep.as_dict()["total"] == rep.total
+    # Legacy TrackerSnapshot.messages key aliases still resolve.
+    assert rep["scalar"] == 3 and rep["rows"] == 5 and rep["total"] == rep.total
+
+
+def test_comm_report_emit_sets_labeled_gauges():
+    from repro.core.comm import build_report
+
+    reg = MetricsRegistry()
+    rep = build_report(scalar_msgs=1, row_msgs=2, broadcast_events=1, m=3)
+    rep.emit(reg, cell="c0", tenant="t")
+    assert reg.get("repro_comm_total").labels(cell="c0", tenant="t").value == 6
+    # Re-emitting overwrites (gauges snapshot cumulative protocol state).
+    build_report(scalar_msgs=9, row_msgs=0, broadcast_events=0, m=3).emit(
+        reg, cell="c0", tenant="t"
+    )
+    assert reg.get("repro_comm_scalar_msgs").labels(cell="c0", tenant="t").value == 9
+
+
+def test_both_protocol_engines_report_through_build_report():
+    """The two engines' counter shapes collapse to one CommReport."""
+    from repro.core.distributed import CommCounters
+    from repro.core.protocols import CommLog
+
+    shard = CommCounters(scalar_msgs=4, row_msgs=6, broadcast_events=1).report(m=2)
+    event = CommLog(scalar_msgs=4, item_msgs=5, sketch_rows=1,
+                    broadcast_events=1).report(m=2)
+    assert shard == event  # same fields, same coercion, same totals
+    assert shard.total == 4 + 6 + 2
