@@ -15,11 +15,20 @@ from __future__ import annotations
 import os
 import sys
 
-SMOKE_MODULES = ("kernels_bench", "runtime_pipeline", "cluster_scaling")
+SMOKE_MODULES = (
+    "kernels_bench",
+    "runtime_pipeline",
+    "cluster_scaling",
+    "windowed_tracking",
+)
 
 # BENCH_*.json files whose "obs" telemetry snapshot the smoke lane
 # verifies, and the headline counters that must be nonzero in each.
-SMOKE_OBS_FILES = ("BENCH_runtime_pipeline.json", "BENCH_cluster_scaling.json")
+SMOKE_OBS_FILES = (
+    "BENCH_runtime_pipeline.json",
+    "BENCH_cluster_scaling.json",
+    "BENCH_windowed_tracking.json",
+)
 SMOKE_OBS_HEADLINE = (
     "repro_ingest_rows_total",
     "repro_engine_packed_launches_total",
@@ -66,6 +75,7 @@ def main() -> None:
         roofline_table,
         runtime_pipeline,
         tradeoff,
+        windowed_tracking,
     )
 
     print("name,us_per_call,derived")
@@ -81,6 +91,7 @@ def main() -> None:
         kernels_bench,
         query_service,
         runtime_pipeline,
+        windowed_tracking,
         cluster_scaling,
         roofline_table,
     ):

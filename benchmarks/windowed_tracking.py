@@ -1,0 +1,185 @@
+"""Windowed + decayed tracking: the cost of carrying time.
+
+Three questions the window layer must answer with numbers:
+
+  * what does the bucket count cost? — per-step ingest + serve latency of
+    a sliding-window matrix tenant as buckets grow (serving folds one
+    ``fd_merge`` per live bucket, so cost should scale ~linearly);
+  * what does event time cost end to end? — pipeline ingest rows/sec and
+    packed serve latency for a fleet of windowed tenants (OnWindowClose
+    cadence) vs the same fleet tracking the full stream;
+  * what does forgetting buy? — on a drifting stream, query error of
+    sliding-window and exponential-decay tenants vs a full-stream tenant,
+    each against the exact in-window answer.
+
+Emits CSV rows and ``BENCH_windowed_tracking.json`` (with the pipeline's
+telemetry snapshot under ``"obs"``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, obs_block, scale
+
+TENANTS = 8
+D, EPS = 64, 0.2
+BATCH = 32
+WINDOW = 64.0
+
+
+def _bucket_sweep() -> dict:
+    """Ingest + serve cost of one windowed matrix tracker vs bucket count."""
+    from repro.runtime.registry import create_protocol
+
+    rng = np.random.default_rng(0)
+    steps = max(64, int(256 * scale()))
+    rows = [rng.normal(size=(BATCH, D)).astype(np.float32) for _ in range(8)]
+    x = rng.normal(size=D).astype(np.float32)
+    out = {}
+    for buckets in (4, 16, 64):
+        proto = create_protocol(
+            "P2win", engine="event", kind="matrix",
+            d=D, eps=EPS, m=1, window=WINDOW, buckets=buckets,
+        )
+        for t in range(buckets):  # warm every bucket + compile
+            proto.step(rows[t % len(rows)], ts=float(t))
+        proto.query(x)
+        t0 = time.perf_counter()
+        for t in range(steps):
+            proto.step(rows[t % len(rows)], ts=float(buckets + t))
+        step_s = (time.perf_counter() - t0) / steps
+        t0 = time.perf_counter()
+        for _ in range(16):
+            proto.query(x)
+        serve_s = (time.perf_counter() - t0) / 16
+        emit(f"windowed/step/buckets={buckets}", step_s * 1e6,
+             f"serve_us={serve_s * 1e6:.0f}")
+        out[str(buckets)] = {"step_s": step_s, "serve_s": serve_s}
+    return out
+
+
+def _fleet(mesh, windowed: bool):
+    from repro.runtime import EveryKSteps, OnWindowClose, StreamingPipeline
+
+    pipe = StreamingPipeline(mesh, eps=EPS, policy=EveryKSteps(4))
+    for i in range(TENANTS):
+        if windowed:
+            pipe.add_windowed_tenant(
+                f"t{i}", kind="matrix", d=D, window=WINDOW, buckets=8,
+                policy=OnWindowClose(),
+            )
+        else:
+            pipe.add_tenant(f"t{i}", D)
+    return pipe
+
+
+def _pipeline_shootout(mesh) -> tuple[dict, object]:
+    """Windowed fleet vs full-stream fleet through the real pipeline."""
+    from repro.query.engine import PackedRequest
+
+    rng = np.random.default_rng(1)
+    waves = max(16, int(64 * scale()))
+    data = [rng.normal(size=(BATCH, D)).astype(np.float32) for _ in range(8)]
+    xs = rng.normal(size=(16, D)).astype(np.float32)
+    xs /= np.linalg.norm(xs, axis=1, keepdims=True)
+    requests = [PackedRequest(f"t{i}", xs) for i in range(TENANTS)]
+    out: dict = {}
+    keep = None
+    for windowed in (True, False):
+        pipe = _fleet(mesh, windowed)
+        for w in range(4):  # warm: compile + first publishes
+            for i in range(TENANTS):
+                pipe.ingest(f"t{i}", data[w % len(data)],
+                            ts=float(w) if windowed else None)
+        t0 = time.perf_counter()
+        for w in range(waves):
+            for i in range(TENANTS):
+                pipe.ingest(f"t{i}", data[w % len(data)],
+                            ts=float(4 + w) if windowed else None)
+        ingest_s = time.perf_counter() - t0
+        pipe.engine.query_packed(requests)  # warm the packed sweep
+        t0 = time.perf_counter()
+        for _ in range(8):
+            pipe.engine.query_packed(requests)
+        serve_s = (time.perf_counter() - t0) / 8
+        key = "windowed" if windowed else "full_stream"
+        out[key] = {
+            "ingest_rows_per_sec": waves * TENANTS * BATCH / ingest_s,
+            "packed_serve_s": serve_s,
+            "publishes": sum(pipe.stats(t).publishes for t in pipe.tenants()),
+        }
+        emit(
+            f"windowed/pipeline_{key}/t={TENANTS}",
+            ingest_s / (waves * TENANTS) * 1e6,
+            f"rows_per_sec={out[key]['ingest_rows_per_sec']:.0f}",
+        )
+        if windowed:
+            keep = pipe  # its obs snapshot goes into the BENCH json
+        else:
+            pipe.close()
+    out["overhead_x"] = (
+        out["full_stream"]["ingest_rows_per_sec"]
+        / out["windowed"]["ingest_rows_per_sec"]
+    )
+    emit("windowed/ingest_overhead_vs_full_stream", 0.0,
+         f"x{out['overhead_x']:.2f}")
+    return out, keep
+
+
+def _drift_accuracy() -> dict:
+    """Query error on a drifting stream: forgetting beats remembering."""
+    from repro.runtime.registry import create_protocol
+
+    rng = np.random.default_rng(2)
+    steps = max(96, int(192 * scale()))
+    mk = dict(engine="event", kind="matrix", d=D, eps=EPS, m=1)
+    win = create_protocol("P2win", window=32.0, buckets=8, **mk)
+    dec = create_protocol("P2decay", half_life=16.0, **mk)
+    full = create_protocol("P2", **mk)
+    hist = []
+    for t in range(steps):
+        # the dominant direction drifts: early rows mislead a full tracker
+        u = np.zeros(D, np.float32)
+        u[(t // 32) % D] = 1.0
+        rows = (rng.normal(size=(BATCH, 1)).astype(np.float32) * 4.0) * u
+        rows += rng.normal(size=(BATCH, D)).astype(np.float32) * 0.3
+        hist.append((float(t), rows))
+        win.step(rows, ts=float(t))
+        dec.step(rows, ts=float(t))
+        full.step(rows)
+    x = np.zeros(D, np.float32)
+    x[((steps - 1) // 32) % D] = 1.0  # the *current* hot direction
+    recent = np.concatenate(
+        [r for ts, r in hist if ts >= steps - 1 - 32.0]
+    ).astype(np.float64)
+    exact = float(np.sum((recent @ x) ** 2))
+    out = {}
+    for name, proto in (("window", win), ("decay", dec), ("full", full)):
+        err = abs(float(proto.query(x)) - exact) / exact
+        out[name] = err
+        emit(f"windowed/drift_err/{name}", 0.0, f"rel_err={err:.3f}")
+    return out
+
+
+def run() -> None:
+    import jax
+
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    buckets = _bucket_sweep()
+    pipeline, pipe = _pipeline_shootout(mesh)
+    drift = _drift_accuracy()
+    out = {
+        "sketch": {"d": D, "eps": EPS, "window": WINDOW},
+        "bucket_sweep": buckets,
+        "pipeline": pipeline,
+        "drift_rel_err": drift,
+        "obs": obs_block(pipe.obs),
+    }
+    pipe.close()
+    path = os.path.join(os.getcwd(), "BENCH_windowed_tracking.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)

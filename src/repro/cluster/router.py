@@ -296,6 +296,10 @@ class ClusterRouter:
         """Register a leverage-sampling tenant on its ring-placed cell."""
         return self._route_add(tenant).pipeline.add_leverage_tenant(tenant, d, **kw)
 
+    def add_windowed_tenant(self, tenant: str, **kw):
+        """Register a time-windowed tenant on its ring-placed cell."""
+        return self._route_add(tenant).pipeline.add_windowed_tenant(tenant, **kw)
+
     def _owner(self, tenant: str) -> PipelineCell:
         try:
             return self._cells[self._tenant_cell[tenant]]
@@ -352,8 +356,15 @@ class ClusterRouter:
 
     # -- ingest routing --------------------------------------------------------
 
-    def ingest(self, tenant: str, rows, *, site: str = "site-0"):
+    def ingest(self, tenant: str, rows, *, site: str = "site-0",
+               ts: float | None = None):
         """Route one super-step batch to the tenant's owning cell.
+
+        ``ts`` stamps the batch's event time for windowed tenants; the
+        timestamp rides the ingest envelope (``TimedRows``), so seq
+        stamping, the replay queue, and idempotent cell-side dedup all
+        see one opaque batch — replaying a timed batch after a fault
+        applies the same event time.
 
         Direct mode (no transport) returns whatever the pipeline's
         ingest returns.  Transported mode stamps the batch with the next
@@ -362,6 +373,12 @@ class ClusterRouter:
         the owner's ``IngestAck`` — or None when the owner is open/
         unreachable and the batch is parked for later replay.
         """
+        if ts is not None:
+            from repro.core.windows import TimedRows
+
+            rows = TimedRows(
+                rows.rows if isinstance(rows, TimedRows) else rows, float(ts)
+            )
         with self._rw.read():
             if self._transport is None:
                 with self.obs.trace("router.ingest", tenant=tenant, site=site):
@@ -418,7 +435,18 @@ class ClusterRouter:
         With a transport attached the wave crosses the message boundary
         batch-by-batch instead (seq stamping has no packed equivalent);
         returns the number of publishes acked.
+
+        Entries may carry event time for windowed tenants as
+        ``(tenant, rows, ts)`` triples or ``(tenant, TimedRows)`` pairs.
         """
+        from repro.core.windows import TimedRows
+
+        batches = [
+            (b[0], TimedRows(b[1].rows if isinstance(b[1], TimedRows) else b[1],
+                             float(b[2])))
+            if len(b) == 3 else (b[0], b[1])
+            for b in (tuple(b) for b in batches)
+        ]
         if self._transport is not None:
             published = 0
             for tenant, rows in batches:

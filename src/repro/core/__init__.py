@@ -10,6 +10,8 @@ Layers:
   * distributed.py — TPU shard_map super-step engine: matrix P1/P2/P3,
                      HH P1, quantile P1, leverage P1
   * tracker.py     — continuous tracking facade for training integration
+  * windows.py     — time as a dimension: bucketed sliding windows +
+                     exponential decay over the mergeable sketch states
 """
 from repro.core.fd import (
     FDSketch,
@@ -44,3 +46,10 @@ from repro.core.protocols import (
 )
 from repro.core.distributed import ProtocolConfig, make_protocol_runner
 from repro.core.tracker import DistributedMatrixTracker
+from repro.core.windows import (
+    ExponentialDecay,
+    LateRowError,
+    SlidingWindow,
+    TimedRows,
+    WatermarkTracker,
+)

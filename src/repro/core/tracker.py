@@ -96,7 +96,8 @@ class DistributedMatrixTracker:
         """Batched ``||B x_j||^2`` over the same quadform path."""
         return self._proto.query_batch(np.asarray(x))
 
-    def publish(self, store, tenant: str = "default", *, meta: dict | None = None):
+    def publish(self, store, tenant: str = "default", *, meta: dict | None = None,
+                published_at: float = 0.0):
         """Publish the coordinator sketch into a ``repro.query.SketchStore``.
 
         Snapshots are immutable and versioned, so the serving layer
@@ -114,6 +115,7 @@ class DistributedMatrixTracker:
             eps=self.cfg.eps,
             n_seen=self.rows_fed,
             meta=md,
+            published_at=published_at,
         )
 
     def comm_report(self) -> CommReport:

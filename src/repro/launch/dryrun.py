@@ -8,6 +8,7 @@ import dataclasses  # noqa: E402
 import json  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
+from typing import Callable  # noqa: E402
 
 from repro.configs.registry import (  # noqa: E402
     ARCH_NAMES,
@@ -134,6 +135,7 @@ def run_cell(
     seq_parallel: bool = True,
     layout: str = "tp",
     tag: str = "",
+    clock: Callable[[], float] = time.time,
 ) -> dict:
     shape_cfg = SHAPES[shape_name]
     cfg = get_config(arch)
@@ -146,13 +148,13 @@ def run_cell(
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
-    t0 = time.time()
+    t0 = clock()
     with mesh:
         # 1. the real (scanned) module: proves lowering+compile+fit
         lowered = lower_cell(arch, shape_cfg, mesh, seq_parallel=seq_parallel, layout=layout)
-        t_lower = time.time() - t0
+        t_lower = clock() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = clock() - t0 - t_lower
         mem = _mem_dict(compiled)
         # 2. loop-corrected per-device cost accounting
         cost = structural_cost(arch, cfg, shape_cfg, mesh, seq_parallel, layout)

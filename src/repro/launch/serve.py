@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +23,7 @@ from repro.models.transformer import LM
 from repro.serve import ServeConfig, ServeEngine
 
 
-def main() -> None:
+def main(clock: Callable[[], float] = time.time) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, default="smollm-135m")
     ap.add_argument("--reduced", action="store_true", help="CPU-sized config")
@@ -55,9 +56,9 @@ def main() -> None:
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32
     )
-    t0 = time.time()
+    t0 = clock()
     out = engine.generate(prompts, args.gen)
-    dt = time.time() - t0
+    dt = clock() - t0
     print(
         f"[serve] {cfg.name}: {args.batch}x{args.gen} tokens in {dt:.2f}s "
         f"({args.batch * args.gen / dt:.1f} tok/s batched)"

@@ -16,6 +16,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +34,7 @@ from repro.train.step import (
 )
 
 
-def main() -> None:
+def main(clock: Callable[[], float] = time.time) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, default="smollm-135m")
     ap.add_argument("--reduced", action="store_true", help="CPU-sized config")
@@ -80,7 +81,7 @@ def main() -> None:
     )
     pf = Prefetcher(ds, start_step=start)
     try:
-        t_last = time.time()
+        t_last = clock()
         for i in range(start, args.steps):
             got_step, batch = pf.next()
             assert got_step == i
@@ -96,8 +97,8 @@ def main() -> None:
                             ckpt.wait()
                         raise
             if (i + 1) % 10 == 0 or i == start:
-                dt = time.time() - t_last
-                t_last = time.time()
+                dt = clock() - t_last
+                t_last = clock()
                 extra = ""
                 if "comm_compressed_bytes" in metrics:
                     ratio = float(metrics["comm_full_bytes"]) / max(

@@ -166,11 +166,11 @@ class QueryService:
             bucket = _bucket(rows.shape[0], self.min_bucket, self.max_batch)
             batch = np.zeros((bucket, rows.shape[1]), np.float32)
             batch[: rows.shape[0]] = rows
-            t0 = time.perf_counter()
+            t0 = self.engine.obs.clock()
             res = self.engine.query_batch(
                 batch, tenant=self.tenant, path=self.path
             )
-            self._busy_s += time.perf_counter() - t0
+            self._busy_s += self.engine.obs.clock() - t0
             del self._pending[: len(take)]
             for (_, ticket), est in zip(take, res.estimates):
                 ticket._resolve(float(est), res.error_bound, res.version)

@@ -41,6 +41,10 @@ class SketchSnapshot(NamedTuple):
                distributed protocols where only the paper's worst case
                ``eps * ||A||_F^2`` is certified.
     n_seen:    rows of the stream the sketch summarizes.
+    published_at: publish timestamp on the tenant's own timeline —
+               wall-clock (``obs`` clock) for full-stream tenants, the
+               event-time watermark for windowed tenants; 0.0 when the
+               publisher tracks no time.  The axis ``as_of`` reads along.
     """
 
     tenant: str
@@ -51,6 +55,7 @@ class SketchSnapshot(NamedTuple):
     delta_sum: float | None
     n_seen: int
     meta: Mapping[str, Any]
+    published_at: float = 0.0
 
     @property
     def error_bound(self) -> float:
@@ -81,6 +86,7 @@ class SketchStore:
         delta_sum: float | None = None,
         n_seen: int = 0,
         meta: Mapping[str, Any] | None = None,
+        published_at: float = 0.0,
     ) -> SketchSnapshot:
         """Register a sketch as the tenant's next version; returns the snapshot."""
         b = np.array(matrix, dtype=np.float32, copy=True)
@@ -99,6 +105,7 @@ class SketchStore:
                 delta_sum=None if delta_sum is None else float(delta_sum),
                 n_seen=int(n_seen),
                 meta=dict(meta or {}),
+                published_at=float(published_at),
             )
             shelf = self._snaps.setdefault(tenant, {})
             shelf[version] = snap
@@ -145,6 +152,29 @@ class SketchStore:
         with self._lock:
             shelf = self._snaps.get(tenant, {})
             return [shelf[v] for v in sorted(shelf) if v > after]
+
+    def as_of(self, tenant: str, t: float) -> SketchSnapshot:
+        """Time-travel read: the newest snapshot published at or before ``t``.
+
+        Versions are immutable and ``published_at`` rides the tenant's own
+        timeline (watermark time for windowed tenants), so ``as_of`` lets
+        a query replay the exact sketch that was live at any retained
+        instant.  Ties (equal ``published_at``) resolve to the higher
+        version.  Raises ``KeyError`` when the tenant has no snapshot that
+        old — same contract as ``get`` on an unknown version.
+        """
+        t = float(t)
+        with self._lock:
+            shelf = self._snaps.get(tenant)
+            if not shelf:
+                raise KeyError(f"no sketches published for tenant {tenant!r}")
+            for v in sorted(shelf, reverse=True):
+                if shelf[v].published_at <= t:
+                    return shelf[v]
+            raise KeyError(
+                f"tenant {tenant!r} has no snapshot published at or before t={t} "
+                f"(oldest retained: {min(s.published_at for s in shelf.values())})"
+            )
 
     def install(self, snap: SketchSnapshot) -> SketchSnapshot:
         """Install an already-versioned snapshot (replica sync / tenant import).
@@ -209,6 +239,7 @@ class SketchStore:
                     "delta_sum": snap.delta_sum,
                     "n_seen": snap.n_seen,
                     "meta": dict(snap.meta),
+                    "published_at": snap.published_at,
                 }
                 for i, snap in enumerate(snaps)
             ],
@@ -266,6 +297,7 @@ class SketchStore:
                     delta_sum=None if e["delta_sum"] is None else float(e["delta_sum"]),
                     n_seen=int(e["n_seen"]),
                     meta=dict(e["meta"]),
+                    published_at=float(e.get("published_at", 0.0)),
                 )
             )
             installed.append(int(e["version"]))
@@ -315,6 +347,7 @@ class SketchStore:
                     "delta_sum": snap.delta_sum,
                     "n_seen": snap.n_seen,
                     "meta": dict(snap.meta),
+                    "published_at": snap.published_at,
                 }
                 for i, snap in enumerate(snaps)
             ],
@@ -345,6 +378,7 @@ class SketchStore:
                     delta_sum=None if e["delta_sum"] is None else float(e["delta_sum"]),
                     n_seen=int(e["n_seen"]),
                     meta=dict(e["meta"]),
+                    published_at=float(e.get("published_at", 0.0)),
                 )
                 store._snaps.setdefault(snap.tenant, {})[snap.version] = snap
             store._next_version = {t: int(v) for t, v in extra["next_version"].items()}

@@ -24,6 +24,7 @@ from repro.runtime.policies import (
     EveryKSteps,
     FrobDrift,
     OnDemand,
+    OnWindowClose,
     PublishPolicy,
     TenantQuota,
     policy_from_config,
@@ -48,6 +49,7 @@ __all__ = [
     "HHProtocol",
     "LeverageProtocol",
     "OnDemand",
+    "OnWindowClose",
     "ProtocolSpec",
     "PublishPolicy",
     "QuantileProtocol",

@@ -50,11 +50,13 @@ restarted coordinator resumes ingest mid-stream and answers identically
 """
 from __future__ import annotations
 
+import math
 from typing import Iterable, NamedTuple
 
 import jax
 import numpy as np
 
+from repro.core.windows import LateRowError, TimedRows
 from repro.obs import Observability, rehome_families
 from repro.query import QueryEngine, SketchStore
 from repro.query.service import PackedQueryService, QueryTicket, ServicePump
@@ -79,7 +81,7 @@ class TenantStats(NamedTuple):
     latest_version: int | None
     live_frob: float  # live stream-mass estimate (||A||_F^2, or W for HH/quantile)
     comm_total: int  # protocol messages spent (paper units)
-    workload: str = "matrix"  # "matrix" | "hh" | "quantile" | "leverage"
+    workload: str = "matrix"  # "matrix" | "hh" | "quantile" | "leverage" | "windowed"
 
 
 class _MatrixAdapter:
@@ -90,17 +92,28 @@ class _MatrixAdapter:
     def __init__(self, tracker):
         self.tracker = tracker
 
-    def ingest(self, rows) -> None:
+    def ingest(self, rows, ts: float | None = None) -> None:
         """Advance the tracker one super-step on an (n, d) row batch."""
+        if ts is not None:
+            raise ValueError(
+                "matrix tenants are full-stream: timestamps only apply to "
+                "windowed tenants (add_windowed_tenant)"
+            )
         self.tracker.update(rows)
 
     def live_mass(self) -> float:
         """Live ``||A||_F^2`` estimate (what publish policies read)."""
         return self.tracker.frob_estimate()
 
-    def publish(self, store, tenant: str, meta: dict):
+    def publish_time(self, clock) -> float:
+        """Snapshot timeline stamp: wall-clock for full-stream tenants."""
+        return float(clock())
+
+    def publish(self, store, tenant: str, meta: dict, published_at: float = 0.0):
         """Publish the coordinator sketch B as the tenant's next version."""
-        return self.tracker.publish(store, tenant, meta=meta)
+        return self.tracker.publish(
+            store, tenant, meta=meta, published_at=published_at
+        )
 
     def check_query(self, x: np.ndarray) -> None:
         """Reject wrong-shape queries at the submitter (see pipeline.submit)."""
@@ -152,8 +165,13 @@ class _RegistryAdapter:
         self.proto = proto
         self._ctor_kw = ctor_kw
 
-    def ingest(self, pairs) -> None:
+    def ingest(self, pairs, ts: float | None = None) -> None:
         """Advance the protocol one step on an (n, 2) ingest batch."""
+        if ts is not None:
+            raise ValueError(
+                f"{self.workload} tenants are full-stream: timestamps only "
+                "apply to windowed tenants (add_windowed_tenant)"
+            )
         self.proto.step(pairs)
 
     def live_mass(self) -> float:
@@ -164,7 +182,11 @@ class _RegistryAdapter:
         """Reject wrong-shape queries at the submitter (see pipeline.submit)."""
         raise NotImplementedError
 
-    def publish(self, store, tenant: str, meta: dict):
+    def publish_time(self, clock) -> float:
+        """Snapshot timeline stamp: wall-clock for full-stream tenants."""
+        return float(clock())
+
+    def publish(self, store, tenant: str, meta: dict, published_at: float = 0.0):
         """Publish the encoded snapshot table as the tenant's next version."""
         md = {
             "workload": self.workload,
@@ -180,6 +202,7 @@ class _RegistryAdapter:
             eps=self.proto.eps,
             n_seen=self.proto.rows_seen,
             meta=md,
+            published_at=published_at,
         )
 
     def rows(self) -> int:
@@ -269,15 +292,97 @@ class _LeverageAdapter(_RegistryAdapter):
                 f"{QUERY_SCORE} (score), got {x[0]}"
             )
 
-    def publish(self, store, tenant: str, meta: dict):
+    def publish(self, store, tenant: str, meta: dict, published_at: float = 0.0):
         """Publish the sample table, pinning the live ridge in the metadata."""
         return super().publish(
-            store, tenant, {"lam": self.proto.lam(), "d": self.proto.d, **meta}
+            store,
+            tenant,
+            {"lam": self.proto.lam(), "d": self.proto.d, **meta},
+            published_at=published_at,
         )
 
     def ctor_meta(self) -> dict:
         """Construction parameters ``load`` needs to rebuild the tenant."""
         return {**super().ctor_meta(), "d": self.proto.d}
+
+
+class _WindowedAdapter(_RegistryAdapter):
+    """Registry adapter for time-windowed tenants of any protocol kind.
+
+    The checkpoint manifest records ``workload = "windowed"`` (so ``load``
+    rebuilds through ``add_windowed_tenant``), but published snapshots are
+    tagged with the *underlying* kind — a windowed matrix snapshot rides
+    the engine's packed quadform sweeps, a windowed HH snapshot its lookup
+    sweep, and so on: windowed tenants serve through the exact same
+    ``query_packed`` / router / replica / checkpoint machinery as
+    full-stream ones.
+    """
+
+    workload = "windowed"
+
+    def ingest(self, rows, ts: float | None = None) -> None:
+        """Advance the windowed protocol one step at event time ``ts``."""
+        self.proto.step(rows, ts=ts)
+
+    def windows_closed(self) -> int:
+        """Buckets sealed by the watermark so far (OnWindowClose's signal)."""
+        return self.proto.windows_closed()
+
+    def window_lag(self) -> float:
+        """Event-time spread still parked behind the watermark (gauge)."""
+        return self.proto.window_lag()
+
+    def publish_time(self, clock) -> float:
+        """Snapshot timeline stamp: the event-time watermark, not wall-clock."""
+        wm = self.proto.watermark()
+        return float(wm) if math.isfinite(wm) else 0.0
+
+    def publish(self, store, tenant: str, meta: dict, published_at: float = 0.0):
+        """Publish the in-window fold tagged as the underlying kind."""
+        md = {
+            "workload": self.proto.kind,
+            "protocol": self.proto.name,
+            "engine": self.proto.engine,
+            "m": self.proto.m,
+            "windowed": True,
+            "windows_closed": self.proto.windows_closed(),
+        }
+        if self.proto.kind == "leverage":
+            md["lam"] = self.proto.lam()
+            md["d"] = self.proto.d
+        md.update(meta)
+        return store.publish(
+            tenant,
+            self.proto.snapshot_matrix(),
+            frob=self.proto.total_weight(),
+            eps=self.proto.eps,
+            n_seen=self.proto.rows_seen,
+            meta=md,
+            published_at=published_at,
+        )
+
+    def check_query(self, x: np.ndarray) -> None:
+        """Delegate to the underlying kind's query-shape contract."""
+        kind = self.proto.kind
+        if kind == "matrix":
+            d = self.proto.d
+            if x.shape != (d,):
+                raise ValueError(
+                    f"matrix tenants take a ({d},) direction, got shape {x.shape}"
+                )
+        elif kind == "hh":
+            _HHAdapter.check_query(self, x)
+        elif kind == "quantile":
+            _QuantileAdapter.check_query(self, x)
+        else:
+            _LeverageAdapter.check_query(self, x)
+
+    def ctor_meta(self) -> dict:
+        """Construction parameters ``load`` needs to rebuild the tenant."""
+        meta = {**super().ctor_meta(), "kind": self.proto.kind}
+        if self.proto.kind in ("matrix", "leverage"):
+            meta["d"] = self.proto.d
+        return meta
 
 
 class _Tenant:
@@ -320,6 +425,7 @@ class StreamingPipeline:
         # state (first wave of a group, or a member stepped / restored
         # out-of-band since the last wave).
         ("restacks", "Packed launches that had to restack member states."),
+        ("late_rows", "Rows shed for arriving behind a windowed tenant's watermark."),
         ("ingest_s", "Wall time inside protocol steps."),
     )
 
@@ -334,6 +440,7 @@ class StreamingPipeline:
         ("gauge", "repro_tenant_f_hat", "Published Frobenius mass per tenant."),
         ("gauge", "repro_tenant_version", "Latest published store version per tenant."),
         ("gauge", "repro_tenant_publish_lag_steps", "Ingest steps since the tenant last published."),
+        ("gauge", "repro_tenant_window_lag", "Event-time lag behind the watermark per windowed tenant."),
         ("gauge", "repro_comm_scalar_msgs", "Protocol communication accounting (paper units)."),
         ("gauge", "repro_comm_row_msgs", "Protocol communication accounting (paper units)."),
         ("gauge", "repro_comm_broadcast_events", "Protocol communication accounting (paper units)."),
@@ -396,11 +503,13 @@ class StreamingPipeline:
             "histogram", "repro_publish_latency_seconds",
             "Publish latency per snapshot.")
         for name, t in self._tenants.items():
-            t.metrics = self._tenant_gauges(name)
+            t.metrics = self._tenant_gauges(
+                name, windowed=hasattr(t.adapter, "window_lag")
+            )
 
-    def _tenant_gauges(self, tenant: str) -> dict:
+    def _tenant_gauges(self, tenant: str, *, windowed: bool = False) -> dict:
         labels = {"tenant": tenant}
-        return {
+        handles = {
             "f_hat": self.obs.handle(
                 "gauge", "repro_tenant_f_hat",
                 "Published Frobenius mass per tenant.", labels=labels),
@@ -411,6 +520,12 @@ class StreamingPipeline:
                 "gauge", "repro_tenant_publish_lag_steps",
                 "Ingest steps since the tenant last published.", labels=labels),
         }
+        if windowed:
+            handles["window_lag"] = self.obs.handle(
+                "gauge", "repro_tenant_window_lag",
+                "Event-time lag behind the watermark per windowed tenant.",
+                labels=labels)
+        return handles
 
     def bind_obs(self, obs: Observability) -> None:
         """Re-home the whole serving stack's telemetry into ``obs``.
@@ -459,7 +574,9 @@ class StreamingPipeline:
 
     def _register(self, tenant: str, adapter, policy, quota) -> None:
         t = _Tenant(adapter, policy or self.default_policy, quota)
-        t.metrics = self._tenant_gauges(tenant)
+        t.metrics = self._tenant_gauges(
+            tenant, windowed=hasattr(adapter, "window_lag")
+        )
         self._tenants[tenant] = t
         if quota is not None:
             self.service.set_quota(
@@ -621,6 +738,70 @@ class StreamingPipeline:
         self._register(tenant, _LeverageAdapter(proto, kw), policy, quota)
         return proto
 
+    def add_windowed_tenant(
+        self,
+        tenant: str,
+        *,
+        kind: str = "matrix",
+        d: int | None = None,
+        eps: float | None = None,
+        protocol: str | None = None,
+        engine: str = "event",
+        policy: PublishPolicy | None = None,
+        quota: TenantQuota | None = None,
+        **kw,
+    ):
+        """Register a time-windowed tenant of any kind; returns its protocol.
+
+        ``protocol`` defaults to the sliding-window spec for the kind
+        (``"P2win"`` for matrix, ``"P1win"`` otherwise); pass ``"P2decay"``
+        / ``"P1decay"`` for exponential decay.  ``ingest`` then accepts
+        event timestamps (``ts=`` or ``TimedRows``), rows later than the
+        watermark are shed with a counted ``LateRowError``, and published
+        snapshots carry the underlying kind's workload tag so windowed
+        tenants serve through the same packed sweeps as full-stream ones.
+        Extra ``kw`` (``window``, ``buckets``, ``lateness``, ``gamma``,
+        ``half_life``, ``sites``, per-kind sizes) pass through to the
+        windowed factory and are recorded so ``load`` rebuilds the tenant
+        identically.  Pairs naturally with ``policy=OnWindowClose()``.
+        """
+        from repro.runtime.registry import create_protocol
+
+        if tenant in self._tenants:
+            raise ValueError(f"tenant {tenant!r} already registered")
+        if engine not in ("event", "shard"):
+            raise ValueError(
+                f"unknown windowed engine {engine!r}; choose 'event' or 'shard'"
+            )
+        if kind not in ("matrix", "hh", "quantile", "leverage"):
+            raise ValueError(
+                f"unknown windowed kind {kind!r}; choose 'matrix', 'hh', "
+                "'quantile', or 'leverage'"
+            )
+        if protocol is None:
+            protocol = "P2win" if kind == "matrix" else "P1win"
+        eps = self.default_eps if eps is None else eps
+        kw = dict(kw)
+        dim_kw = {}
+        if kind in ("matrix", "leverage"):
+            if d is None:
+                raise ValueError(f"windowed {kind} tenants need d")
+            dim_kw["d"] = int(d)
+        elif d is not None:
+            raise ValueError(f"windowed {kind} tenants take no d")
+        if engine == "shard":
+            proto = create_protocol(
+                protocol, engine="shard", kind=kind,
+                mesh=self.mesh, eps=eps, axis=self.axis, **dim_kw, **kw,
+            )
+        else:
+            kw.setdefault("m", self.mesh.shape[self.axis])
+            proto = create_protocol(
+                protocol, engine="event", kind=kind, eps=eps, **dim_kw, **kw,
+            )
+        self._register(tenant, _WindowedAdapter(proto, kw), policy, quota)
+        return proto
+
     def _add_from_ctor(
         self,
         tenant: str,
@@ -654,6 +835,18 @@ class StreamingPipeline:
             self.add_leverage_tenant(
                 tenant,
                 int(ctor["d"]),
+                eps=float(ctor["eps"]),
+                protocol=str(ctor["protocol"]),
+                engine=str(ctor["engine"]),
+                policy=policy,
+                quota=quota,
+                **ctor["kw"],
+            )
+        elif workload == "windowed":
+            self.add_windowed_tenant(
+                tenant,
+                kind=str(ctor["kind"]),
+                d=int(ctor["d"]) if "d" in ctor else None,
                 eps=float(ctor["eps"]),
                 protocol=str(ctor["protocol"]),
                 engine=str(ctor["engine"]),
@@ -845,7 +1038,7 @@ class StreamingPipeline:
 
     def workload(self, tenant: str) -> str:
         """The tenant's workload kind (``"matrix"``, ``"hh"``, ``"quantile"``,
-        or ``"leverage"``)."""
+        ``"leverage"``, or ``"windowed"``)."""
         return self._tenant(tenant).adapter.workload
 
     def tracker(self, tenant: str):
@@ -870,12 +1063,17 @@ class StreamingPipeline:
 
     # -- ingest → publish ----------------------------------------------------
 
-    def ingest(self, tenant: str, rows) -> "object | None":
+    def ingest(self, tenant: str, rows, ts: float | None = None) -> "object | None":
         """Absorb one super-step batch; auto-publish per the tenant's policy.
 
         Matrix and leverage tenants take an (n, d) row batch, HH tenants
         an (n, 2) [element, weight] batch, quantile tenants an (n, 2)
-        [value, weight] batch.  Returns the new ``SketchSnapshot`` if the policy
+        [value, weight] batch.  Windowed tenants additionally take the
+        batch's event time — pass ``ts=`` or wrap the batch in
+        ``core.windows.TimedRows``; a batch later than the tenant's
+        watermark is *shed*: counted in the ``late_rows`` ingest counter
+        and rejected with ``LateRowError``, never silently dropped.
+        Returns the new ``SketchSnapshot`` if the policy
         fired, else None.  When no ``ServicePump`` is running this also
         pumps the packed service's deadlines cooperatively, so a pure
         ingest loop still serves queries on time.  A pump that died on an
@@ -883,9 +1081,18 @@ class StreamingPipeline:
         (deadline enforcement must never fail silently).
         """
         t = self._tenant(tenant)
+        if isinstance(rows, TimedRows):
+            if ts is None:
+                ts = rows.ts
+            rows = rows.rows
         with self.obs.trace("pipeline.ingest", tenant=tenant):
             t0 = self.obs.clock()
-            t.adapter.ingest(rows)
+            try:
+                t.adapter.ingest(rows, ts=ts)
+            except LateRowError as e:
+                self._m_ingest["late_rows"].inc(e.n_rows)
+                self._m_ingest["ingest_s"].inc(self.obs.clock() - t0)
+                raise
             self._m_ingest["ingest_s"].inc(self.obs.clock() - t0)
             self._m_ingest["serial_steps"].inc()
             self._m_ingest["batches"].inc()
@@ -897,6 +1104,8 @@ class StreamingPipeline:
     @staticmethod
     def _batch_len(rows) -> int:
         """Items in one ingest batch ((n, ...) array or (keys, weights))."""
+        if isinstance(rows, TimedRows):
+            rows = rows.rows
         if isinstance(rows, tuple):
             rows = rows[0]
         return int(np.asarray(rows).shape[0])
@@ -908,13 +1117,20 @@ class StreamingPipeline:
         t.steps += 1
         t.steps_since_publish += 1
         t.metrics["lag"].set(t.steps_since_publish)
+        if "window_lag" in t.metrics:
+            t.metrics["window_lag"].set(t.adapter.window_lag())
         # Only pay for the mass estimate when the policy reads it (for
         # matrix P3 it materializes the whole estimator matrix).
         live = t.adapter.live_mass() if t.policy.needs_live_frob else 0.0
+        policy_kw = {}
+        if getattr(t.policy, "needs_window_close", False):
+            wc = getattr(t.adapter, "windows_closed", None)
+            policy_kw["windows_closed"] = wc() if wc is not None else 0
         if t.policy.should_publish(
             steps_since_publish=t.steps_since_publish,
             live_frob=live,
             published_frob=t.published_frob,
+            **policy_kw,
         ):
             return self._publish(tenant, t)
         return None
@@ -935,10 +1151,15 @@ class StreamingPipeline:
             self.service.poll()
 
     def ingest_many(
-        self, batches: Iterable[tuple[str, "np.ndarray"]], *, packed: bool = True
+        self, batches: Iterable[tuple], *, packed: bool = True
     ) -> int:
         """Drive interleaved tenants: ``[(tenant, rows), ...]``; returns
         the number of snapshots published.
+
+        Entries may also carry event time for windowed tenants — either
+        ``(tenant, rows, ts)`` triples or ``(tenant, TimedRows(rows, ts))``
+        pairs; timed batches always take the serial per-tenant path (the
+        packed launch has no time axis).
 
         With ``packed=True`` (the default) the batches are regrouped into
         waves — wave ``i`` holds each tenant's ``i``-th batch — and every
@@ -953,7 +1174,12 @@ class StreamingPipeline:
         ``packed=False`` restores the strict one-``ingest``-per-batch
         serial loop.
         """
-        batches = list(batches)
+        batches = [
+            (b[0], TimedRows(b[1].rows if isinstance(b[1], TimedRows) else b[1],
+                             float(b[2])))
+            if len(b) == 3 else (b[0], b[1])
+            for b in (tuple(b) for b in batches)
+        ]
         if not packed:
             published = 0
             for tenant, rows in batches:
@@ -991,18 +1217,22 @@ class StreamingPipeline:
         serial: list = []
         for name, rows in wave:
             t = self._tenant(name)
+            ts = None
+            if isinstance(rows, TimedRows):
+                ts = rows.ts
+                rows = rows.rows
             sig = pack_signature(t.adapter)
             n = self._batch_len(rows)
-            if sig is not None and n and n % sig[1].m == 0:
+            if ts is None and sig is not None and n and n % sig[1].m == 0:
                 groups.setdefault(sig, []).append((name, t, rows))
             else:
-                serial.append((name, t, rows))
+                serial.append((name, t, rows, ts))
         snaps: list = []
         with self.obs.trace("pipeline.ingest_wave", tenants=len(wave)):
             t0 = self.obs.clock()
             for members in groups.values():
                 if len(members) < 2:  # a pack of one gains nothing
-                    serial.extend(members)
+                    serial.extend((name, t, rows, None) for name, t, rows in members)
                     continue
                 stats = ingest_packed(
                     [(pack_target(t.adapter), rows) for _, t, rows in members]
@@ -1017,8 +1247,14 @@ class StreamingPipeline:
                 m["restacks"].inc(bool(stats["restacked"]))
                 for name, t, _ in members:
                     snaps.append(self._post_ingest(name, t))
-            for name, t, rows in serial:
-                t.adapter.ingest(rows)
+            for name, t, rows, ts in serial:
+                try:
+                    t.adapter.ingest(rows, ts=ts)
+                except LateRowError as e:
+                    # Shed, not dropped: the late batch is counted and the
+                    # rest of the wave proceeds (serial ingest re-raises).
+                    m["late_rows"].inc(e.n_rows)
+                    continue
                 m["serial_steps"].inc()
                 m["batches"].inc()
                 m["rows"].inc(self._batch_len(rows))
@@ -1038,7 +1274,12 @@ class StreamingPipeline:
     def _publish(self, tenant: str, t: _Tenant):
         with self.obs.trace("pipeline.publish", tenant=tenant):
             t0 = self.obs.clock()
-            snap = t.adapter.publish(self.store, tenant, meta={"step": t.steps})
+            snap = t.adapter.publish(
+                self.store,
+                tenant,
+                meta={"step": t.steps},
+                published_at=t.adapter.publish_time(self.obs.clock),
+            )
             elapsed = self.obs.clock() - t0
         self._m_publish.inc()
         self._m_publish_s.inc(elapsed)

@@ -27,6 +27,7 @@ __all__ = [
     "EveryKSteps",
     "FrobDrift",
     "OnDemand",
+    "OnWindowClose",
     "TenantQuota",
     "RetryPolicy",
     "policy_to_config",
@@ -41,6 +42,11 @@ class PublishPolicy(abc.ABC):
     #: skips computing the tracker's Frobenius estimate each ingest step
     #: (for P3 that materializes the whole estimator matrix).
     needs_live_frob: bool = True
+
+    #: Whether the policy reads ``windows_closed``.  When True the pipeline
+    #: passes the tenant adapter's closed-window count as an extra keyword
+    #: after each ingest step (only windowed adapters track one).
+    needs_window_close: bool = False
 
     @abc.abstractmethod
     def should_publish(
@@ -115,6 +121,39 @@ class OnDemand(PublishPolicy):
         return "OnDemand()"
 
 
+class OnWindowClose(PublishPolicy):
+    """Publish whenever the tenant's watermark closes a window bucket.
+
+    The natural cadence for windowed tenants: a version appears exactly
+    when a bucket boundary passes the watermark, so every served snapshot
+    corresponds to a completed window edge rather than an arbitrary step
+    count.  ``seen`` tracks the closed-window count already published
+    (checkpointed, so a restored pipeline does not re-publish old edges).
+    Non-windowed adapters never report closed windows, so attaching this
+    policy to one behaves like ``OnDemand``.
+    """
+
+    needs_live_frob = False
+    needs_window_close = True
+
+    def __init__(self, seen: int = 0):
+        if seen < 0:
+            raise ValueError(f"seen must be >= 0, got {seen}")
+        self.seen = int(seen)
+
+    def should_publish(
+        self, *, steps_since_publish, live_frob, published_frob, windows_closed=0
+    ):
+        """Publish iff new window buckets closed since the last publish."""
+        if windows_closed > self.seen:
+            self.seen = int(windows_closed)
+            return True
+        return False
+
+    def __repr__(self):
+        return f"OnWindowClose(seen={self.seen})"
+
+
 # ---------------------------------------------------------------------------
 # Admission quotas / priorities (enforced by query.service.PackedQueryService)
 # ---------------------------------------------------------------------------
@@ -177,7 +216,12 @@ class RetryPolicy(NamedTuple):
 # Policy <-> JSON config (for pipeline checkpoints)
 # ---------------------------------------------------------------------------
 
-_POLICY_TYPES = {"EveryKSteps": EveryKSteps, "FrobDrift": FrobDrift, "OnDemand": OnDemand}
+_POLICY_TYPES = {
+    "EveryKSteps": EveryKSteps,
+    "FrobDrift": FrobDrift,
+    "OnDemand": OnDemand,
+    "OnWindowClose": OnWindowClose,
+}
 
 
 def policy_to_config(policy: PublishPolicy) -> dict:
@@ -188,6 +232,8 @@ def policy_to_config(policy: PublishPolicy) -> dict:
         return {"type": "FrobDrift", "rel": policy.rel}
     if isinstance(policy, OnDemand):
         return {"type": "OnDemand"}
+    if isinstance(policy, OnWindowClose):
+        return {"type": "OnWindowClose", "seen": policy.seen}
     raise TypeError(
         f"cannot serialize publish policy {policy!r}; custom policies must be "
         "re-attached after StreamingPipeline.load"

@@ -1184,3 +1184,8 @@ register_protocol(ProtocolSpec(
     description="shard_map super-step leverage-score row sampling P1 "
                 "(threshold forwarding + FD residual)",
 ))
+
+# Time-restricted tracking: sliding-window + exponential-decay wrappers
+# register their (kind, engine, name) specs on import (all four kinds,
+# both engines).  Imported last so every ABC above is fully defined.
+from repro.runtime import windowed as _windowed  # noqa: E402,F401

@@ -1,0 +1,38 @@
+"""Lint-style guard: no bare wall-clock reads outside ``repro.obs``.
+
+Every latency/lag measurement in the runtime must flow through the
+injectable clock on ``Obs`` (or an explicit ``clock=`` parameter), so
+tests and replays can run on virtual time and chaos runs stay
+deterministic.  This test greps the source tree for direct
+``time.time()`` / ``time.monotonic()`` / ``time.perf_counter()`` calls;
+``obs/`` owns the real clock and is the only exemption.
+
+Passing a clock *function* as a default (``clock: ... = time.time``) is
+fine — the regex matches calls, not references.
+"""
+import re
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src" / "repro"
+WALL_CLOCK = re.compile(r"\btime\.(?:time|monotonic|perf_counter)\(\)")
+
+
+def test_no_bare_wall_clock_outside_obs():
+    offenders = []
+    for path in sorted(SRC.rglob("*.py")):
+        if "obs" in path.relative_to(SRC).parts[:1]:
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if WALL_CLOCK.search(line):
+                offenders.append(f"{path.relative_to(SRC)}:{lineno}: {line.strip()}")
+    assert not offenders, (
+        "bare wall-clock call(s) outside repro.obs — route through the "
+        "injectable clock:\n" + "\n".join(offenders)
+    )
+
+
+def test_lint_scope_is_nonempty():
+    """The glob actually covers the tree (guards against a silent rename)."""
+    files = list(SRC.rglob("*.py"))
+    assert len(files) > 20
+    assert any("pipeline" in f.name for f in files)
